@@ -1,0 +1,91 @@
+"""Kernel microbenches: pure-jnp reference timings on CPU + interpret-mode
+validation of the Pallas kernels.
+
+On this CPU container the Pallas kernels run in interpret mode (Python
+executes the kernel body), so wall-times are NOT indicative of TPU perf;
+the CSV reports the jnp-reference timing as the comparable number and the
+max|err| of the kernel against it as the derived column.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.kd_loss import kd_loss
+from repro.kernels.ref import flash_attention_ref, kd_loss_ref, ssd_scan_ref
+from repro.models.ssm import ssd_chunked
+
+
+def _time(fn, *args, reps=5):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6  # us
+
+
+def bench_flash_attention():
+    key = jax.random.PRNGKey(0)
+    rows = []
+    for (B, H, KV, S, hd) in [(1, 8, 2, 512, 64), (2, 4, 4, 1024, 64)]:
+        q = jax.random.normal(key, (B, H, S, hd), jnp.float32)
+        k = jax.random.normal(key, (B, KV, S, hd), jnp.float32)
+        v = jax.random.normal(key, (B, KV, S, hd), jnp.float32)
+        ref = jax.jit(lambda q, k, v: flash_attention_ref(q, k, v, causal=True))
+        us = _time(ref, q, k, v)
+        out = flash_attention(q, k, v, causal=True, interpret=True)
+        err = float(jnp.max(jnp.abs(out - ref(q, k, v))))
+        rows.append((f"flash_attn/B{B}H{H}KV{KV}S{S}", us, f"maxerr={err:.1e}"))
+    return rows
+
+
+def bench_kd_loss():
+    key = jax.random.PRNGKey(1)
+    rows = []
+    for (N, V) in [(256, 8192), (512, 32000)]:
+        s = jax.random.normal(key, (N, V), jnp.float32)
+        t = jax.random.normal(jax.random.PRNGKey(2), (N, V), jnp.float32)
+        lab = jax.random.randint(key, (N,), 0, V)
+        ref = jax.jit(lambda s, t, l: kd_loss_ref(s, t, l))
+        us = _time(ref, s, t, lab)
+        out = kd_loss(s, t, lab, block_n=128, block_v=2048, interpret=True)
+        err = float(jnp.max(jnp.abs(out - ref(s, t, lab))))
+        rows.append((f"kd_loss/N{N}V{V}", us, f"maxerr={err:.1e}"))
+    return rows
+
+
+def bench_ssd():
+    key = jax.random.PRNGKey(3)
+    rows = []
+    for (B, S, H, P, N) in [(1, 512, 4, 32, 16)]:
+        ks = jax.random.split(key, 5)
+        x = jax.random.normal(ks[0], (B, S, H, P))
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+        A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.5)
+        Bm = jax.random.normal(ks[3], (B, S, N))
+        Cm = jax.random.normal(ks[4], (B, S, N))
+        seq = jax.jit(lambda *a: ssd_scan_ref(*a)[0])
+        chk = jax.jit(lambda *a: ssd_chunked(*a, chunk=64)[0])
+        us_seq = _time(seq, x, dt, A, Bm, Cm)
+        us_chk = _time(chk, x, dt, A, Bm, Cm)
+        err = float(jnp.max(jnp.abs(seq(x, dt, A, Bm, Cm) - chk(x, dt, A, Bm, Cm))))
+        rows.append((f"ssd_seq/S{S}", us_seq, ""))
+        rows.append((f"ssd_chunked/S{S}", us_chk,
+                     f"speedup={us_seq/us_chk:.1f}x;maxerr={err:.1e}"))
+    return rows
+
+
+def main():
+    rows = bench_flash_attention() + bench_kd_loss() + bench_ssd()
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,116 @@
+"""Generate the §Dry-run and §Roofline sections of EXPERIMENTS.md from the
+dry-run artifacts.  Run after ``repro.launch.dryrun`` completes:
+
+  PYTHONPATH=src python -m benchmarks.report > artifacts/roofline_report.md
+"""
+from __future__ import annotations
+
+import json
+from collections import defaultdict
+
+from benchmarks.roofline import ART_DIR, analyze, load_records
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def fmt_bytes(b):
+    return f"{b/1e9:.2f}"
+
+
+def dryrun_section(single, multi):
+    lines = ["## Dry-run (single-pod 16×16 = 256 chips; multi-pod 2×16×16 = 512 chips)",
+             "",
+             "Every (architecture × input shape) lowers AND compiles on both meshes.",
+             "`peak GB/dev` = arguments + outputs + XLA temp per device.",
+             "",
+             "| arch | shape | mesh | compile s | peak GB/dev | collectives (scanned body) |",
+             "|---|---|---|---|---|---|"]
+    for recs in (single, multi):
+        for r in sorted(recs, key=lambda r: (r["arch"], SHAPE_ORDER.index(r["shape"]))):
+            colls = []
+            for op in ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                       "collective-permute"):
+                n = r.get(f"scanned_{op}_count", 0)
+                if n:
+                    colls.append(f"{op}×{n}")
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['compile_s']} "
+                f"| {fmt_bytes(r['peak_bytes'])} | {' '.join(colls) or '—'} |"
+            )
+    return "\n".join(lines)
+
+
+def roofline_section(single):
+    lines = ["## Roofline (single-pod, per device, per step)",
+             "",
+             "Terms in seconds: compute = FLOPs/197e12, memory = bytes/819e9,",
+             "collective = collective-bytes/50e9.  FLOPs/bytes are trip-count",
+             "corrected via the unrolled depth-1/2 probes (f1 + (n−1)(f2−f1)).",
+             "`useful` = MODEL_FLOPS / corrected HLO FLOPs.",
+             "",
+             "| arch | shape | compute s | memory s | collective s | bound | useful | peak GB | fits 16G |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    rows = [analyze(r) for r in single]
+    rows.sort(key=lambda r: (r["arch"], SHAPE_ORDER.index(r["shape"])))
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.2e} "
+            f"| {r['t_memory_s']:.2e} | {r['t_collective_s']:.2e} "
+            f"| {r['bottleneck'][:4]} | {r['useful_ratio']:.2f} "
+            f"| {r['peak_bytes_per_dev']/1e9:.1f} "
+            f"| {'Y' if r['fits_hbm'] else 'N'} |"
+        )
+    # summary: pick hillclimb candidates
+    worst = min(rows, key=lambda r: r["useful_ratio"] if r["useful_ratio"] > 0 else 9)
+    coll = max(rows, key=lambda r: r["t_collective_s"] / max(r["step_time_lb_s"], 1e-12))
+    lines += ["",
+              f"Worst useful-ratio pair: **{worst['arch']} × {worst['shape']}** "
+              f"({worst['useful_ratio']:.2f})",
+              f"Most collective-bound pair: **{coll['arch']} × {coll['shape']}** "
+              f"(collective {coll['t_collective_s']:.2e}s vs bound "
+              f"{coll['step_time_lb_s']:.2e}s)"]
+    return "\n".join(lines)
+
+
+def main():
+    single = load_records("single")
+    multi = load_records("multi")
+    print(dryrun_section(single, multi))
+    print()
+    print(roofline_section(single))
+
+
+if __name__ == "__main__":
+    main()
+
+
+def optimized_section():
+    """Baseline vs REPRO_OPTIMIZED=1 comparison table (§Perf)."""
+    import json
+    from pathlib import Path
+
+    opt_dir = ART_DIR.parent / "dryrun_opt"
+    rows = []
+    for p in sorted(opt_dir.glob("*__single.json")):
+        rows.append(analyze(json.loads(p.read_text())))
+    base = {(r["arch"], r["shape"]): r for r in
+            (analyze(x) for x in load_records("single"))}
+    lines = ["(peak per device from the optimized compile; the three-term",
+             "deltas for the hillclimbed pairs are in the §Perf log above —",
+             "the no-probe sweep reports memory only)",
+             "",
+             "| arch | shape | peak GB (base→opt) | fits 16G |",
+             "|---|---|---|---|"]
+    for r in sorted(rows, key=lambda r: (r["arch"], SHAPE_ORDER.index(r["shape"]))):
+        b = base.get((r["arch"], r["shape"]))
+        if not b:
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} "
+            f"| {b['peak_bytes_per_dev']/1e9:.1f} → {r['peak_bytes_per_dev']/1e9:.1f} "
+            f"| {'Y' if r['fits_hbm'] else 'N'} |")
+    fits = sum(1 for r in rows if r["fits_hbm"])
+    lines.append("")
+    lines.append(f"{fits}/{len(rows)} optimized pairs fit 16 GB HBM "
+                 f"(baseline: {sum(1 for b in base.values() if b['fits_hbm'])}/40).")
+    return "\n".join(lines)

@@ -1,0 +1,147 @@
+"""Three-term roofline analysis from the dry-run artifacts (§Roofline).
+
+Terms (per device, per step), TPU v5e targets:
+
+  compute    = HLO_FLOPs / peak_FLOP/s          (197 TFLOP/s bf16)
+  memory     = HLO_bytes / HBM_bw               (819 GB/s)
+  collective = collective_bytes / ICI_bw        (~50 GB/s/link, 2 links/axis)
+
+``cost_analysis`` is per-device but counts while-loop bodies ONCE; the
+dry-run's ``--probe`` re-lowers unrolled depth-1/2 variants, and we
+extrapolate   total = f1 + (n_super - 1) * (f2 - f1).
+The same correction applies to collective bytes (collectives inside the
+layer loop run once per layer).
+
+MODEL_FLOPS uses 6·N_active·D for train shapes (fwd+bwd) and 2·N_active·D
+for prefill/decode (fwd only), with D = tokens per step — the
+"useful-compute" yardstick against corrected HLO FLOPs.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch.steps import resolve_config
+from repro.models.config import INPUT_SHAPES
+
+ART_DIR = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # bytes/s / chip
+ICI_BW = 50e9  # bytes/s/link
+
+
+def expert_param_fraction(cfg):
+    """(total_params, active_params) analytically from the config."""
+    from repro.common.types import spec_num_params
+    from repro.models import build_model
+
+    total = spec_num_params(build_model(cfg).param_specs())
+    if not cfg.is_moe:
+        return total, total
+    per_expert = 3 * cfg.d_model * (cfg.moe_d_ff or cfg.d_ff)
+    expert_total = cfg.num_layers * cfg.num_experts * per_expert
+    expert_active = cfg.num_layers * cfg.experts_per_token * per_expert
+    return total, total - expert_total + expert_active
+
+
+def model_flops(cfg, shape) -> float:
+    """6·N_active·D (train) / 2·N_active·D (inference), D = tokens/step."""
+    _, active = expert_param_fraction(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * active * tokens
+    tokens = shape.global_batch  # decode: one token per sequence
+    return 2.0 * active * tokens
+
+
+def corrected(rec, key1, key2, fallback) -> float:
+    """Trip-count correction: f1 + (n-1)(f2-f1); falls back to the scanned
+    measurement if the probe was not run."""
+    if key1 in rec and key2 in rec:
+        f1, f2 = rec[key1], rec[key2]
+        return f1 + (rec["n_super"] - 1) * (f2 - f1)
+    return rec.get(fallback, 0.0)
+
+
+def analyze(rec: dict) -> dict:
+    cfg = resolve_config(get_config(rec["arch"]), INPUT_SHAPES[rec["shape"]])
+    shape = INPUT_SHAPES[rec["shape"]]
+    chips = rec["n_devices"]
+
+    flops = corrected(rec, "probe1_flops", "probe2_flops", "hlo_flops")
+    bytes_ = corrected(rec, "probe1_bytes", "probe2_bytes", "hlo_bytes")
+    coll = corrected(
+        rec, "probe1_collective_bytes", "probe2_collective_bytes",
+        "scanned_collective_bytes",
+    )
+
+    t_compute = flops / PEAK_FLOPS
+    t_memory = bytes_ / HBM_BW
+    t_coll = coll / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    bottleneck = max(terms, key=terms.get)
+
+    mf = model_flops(cfg, shape)
+    mf_per_dev = mf / chips
+    useful = mf_per_dev / flops if flops else 0.0
+
+    return {
+        "arch": rec["arch"],
+        "shape": rec["shape"],
+        "mesh": rec["mesh"],
+        "hlo_flops": flops,
+        "hlo_bytes": bytes_,
+        "collective_bytes": coll,
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "bottleneck": bottleneck,
+        "model_flops_per_dev": mf_per_dev,
+        "useful_ratio": useful,
+        "peak_bytes_per_dev": rec.get("peak_bytes", 0.0),
+        "fits_hbm": rec.get("peak_bytes", 0.0) <= 16e9,
+        "step_time_lb_s": max(terms.values()),
+    }
+
+
+def load_records(mesh: str = "single"):
+    recs = []
+    for p in sorted(ART_DIR.glob(f"*__{mesh}.json")):
+        recs.append(json.loads(p.read_text()))
+    return recs
+
+
+def markdown_table(rows) -> str:
+    hdr = ("| arch | shape | compute s | memory s | collective s | bottleneck "
+           "| useful | peak GB | fits |")
+    sep = "|" + "---|" * 9
+    out = [hdr, sep]
+    for r in rows:
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.3e} "
+            f"| {r['t_memory_s']:.3e} | {r['t_collective_s']:.3e} "
+            f"| {r['bottleneck']} | {r['useful_ratio']:.2f} "
+            f"| {r['peak_bytes_per_dev']/1e9:.1f} | {'Y' if r['fits_hbm'] else 'N'} |"
+        )
+    return "\n".join(out)
+
+
+def main():
+    rows = [analyze(r) for r in load_records("single")]
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(f"roofline/{r['arch']}/{r['shape']},"
+              f"{r['step_time_lb_s']*1e6:.1f},"
+              f"bottleneck={r['bottleneck']};useful={r['useful_ratio']:.2f};"
+              f"peakGB={r['peak_bytes_per_dev']/1e9:.1f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,108 @@
+"""Benchmark orchestrator — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (plus section markers) so the
+output is both human-skimmable and machine-parsable.
+
+  fig3      — heterogeneity ablation (paper Fig. 3)
+  figs456   — IND vs FL vs MDD (paper Figs. 4-6)
+  kernels   — Pallas kernel validation + reference timings
+  traffic   — MDD vs FL communication cost (continuum model)
+  roofline  — three-term roofline from dry-run artifacts (if present)
+
+Usage: python -m benchmarks.run [sections...]
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import numpy as np
+
+
+def section(name):
+    print(f"# === {name} ===", flush=True)
+
+
+def run_fig3():
+    from benchmarks.figs import fig3_heterogeneity
+
+    t0 = time.time()
+    res = fig3_heterogeneity()
+    us = (time.time() - t0) * 1e6
+    for scn, profs in res.items():
+        base = max(np.mean(profs["U"]), 1e-9)
+        for p in ("U", "BH", "DH", "H"):
+            m = np.mean(profs[p])
+            print(f"fig3/{scn}/{p},{us/12:.0f},acc={m:.3f};norm={m/base:.2f}",
+                  flush=True)
+
+
+def run_figs456():
+    from benchmarks.figs import fig4_lr_synthetic, fig5_cnn_femnist, fig6_rnn_reddit
+
+    for name, fn in [("fig4_lr_synthetic", fig4_lr_synthetic),
+                     ("fig5_cnn_femnist", fig5_cnn_femnist),
+                     ("fig6_rnn_reddit", fig6_rnn_reddit)]:
+        t0 = time.time()
+        rows = fn()
+        us = (time.time() - t0) * 1e6
+        for approach, E, acc in rows:
+            print(f"{name}/{approach}@{E},{us/len(rows):.0f},acc={acc:.3f}",
+                  flush=True)
+
+
+def run_traffic():
+    """MDD's one-shot model transfer vs FL's per-round update traffic."""
+    from repro.core.continuum import DEVICE_TO_EDGE, EDGE_TO_CLOUD
+
+    model_mb = 5.0
+    fl_rounds, clients_per_round = 50, 10
+    fl_bytes = fl_rounds * clients_per_round * 2 * model_mb * 1e6  # up+down
+    mdd_bytes = 2 * model_mb * 1e6  # one publish + one fetch per improvement
+    t_fl = fl_rounds * clients_per_round * 2 * DEVICE_TO_EDGE.transfer_time(
+        int(model_mb * 1e6))
+    t_mdd = (DEVICE_TO_EDGE.transfer_time(int(model_mb * 1e6))
+             + EDGE_TO_CLOUD.transfer_time(512))
+    print(f"traffic/fl_50rounds,{t_fl*1e6:.0f},bytes={fl_bytes:.2e}")
+    print(f"traffic/mdd_once,{t_mdd*1e6:.0f},bytes={mdd_bytes:.2e};"
+          f"saving={fl_bytes/mdd_bytes:.0f}x")
+
+
+def run_kernels():
+    from benchmarks.kernels_bench import main as kmain
+
+    kmain()
+
+
+def run_roofline():
+    from benchmarks.roofline import ART_DIR, main as rmain
+
+    if not any(ART_DIR.glob("*.json")):
+        print("roofline/skipped,0,no dry-run artifacts (run repro.launch.dryrun)")
+        return
+    rmain()
+
+
+def main():
+    which = set(sys.argv[1:]) or {"fig3", "figs456", "kernels", "traffic",
+                                  "roofline"}
+    print("name,us_per_call,derived")
+    if "fig3" in which:
+        section("Fig.3 heterogeneity impact")
+        run_fig3()
+    if "figs456" in which:
+        section("Figs.4-6 IND vs FL vs MDD")
+        run_figs456()
+    if "kernels" in which:
+        section("Pallas kernels")
+        run_kernels()
+    if "traffic" in which:
+        section("MDD vs FL traffic")
+        run_traffic()
+    if "roofline" in which:
+        section("Roofline (from dry-run)")
+        run_roofline()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+"""Batched serving example across architecture families.
+
+Serves a batch of variable-length requests through prefill + greedy decode
+for a dense, a hybrid (Mamba2+attention), and an xLSTM model — showing the
+same ``serve_step`` drives attention KV caches and recurrent state caches.
+
+  PYTHONPATH=src python examples/serve_batched.py
+"""
+from repro.launch.serve import main as serve_main
+
+
+def main():
+    for arch in ("qwen2_1_5b", "zamba2_2_7b", "xlstm_1_3b"):
+        print(f"=== {arch} ===")
+        serve_main(["--arch", arch, "--smoke", "--requests", "4",
+                    "--max-new", "8", "--bucket", "24"])
+
+
+if __name__ == "__main__":
+    main()

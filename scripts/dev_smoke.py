@@ -1,0 +1,53 @@
+"""Dev harness: forward/prefill/decode every smoke config on CPU."""
+import sys
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_smoke_config
+from repro.models import build_model
+
+
+def run(arch):
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    key = jax.random.PRNGKey(0)
+    params = model.init(key)
+    B, S = 2, 32
+    batch = {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size)}
+    if cfg.num_patches:
+        batch["patches"] = jax.random.normal(key, (B, cfg.num_patches, cfg.d_model))
+    if cfg.family == "audio":
+        batch["frames"] = jax.random.normal(key, (B, cfg.num_frames, cfg.d_model))
+    logits, aux = jax.jit(model.forward)(params, batch)
+    assert logits.shape == (B, S, cfg.vocab_size), logits.shape
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32)))), "NaN in forward"
+
+    # prefill + decode
+    last, aux2, cache = jax.jit(model.prefill)(params, batch)
+    assert last.shape == (B, 1, cfg.vocab_size)
+    tok = {"token": jnp.ones((B, 1), jnp.int32)}
+    logits2, cache2 = jax.jit(model.decode)(params, cache, tok)
+    assert logits2.shape == (B, 1, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits2.astype(jnp.float32)))), "NaN in decode"
+
+    # decode from fresh cache too
+    fresh = model.init_cache(B, S)
+    logits3, _ = jax.jit(model.decode)(params, fresh, tok)
+    assert logits3.shape == (B, 1, cfg.vocab_size)
+    print(f"OK  {arch:28s} logits[0,0,:3]={np.asarray(logits[0,0,:3], dtype=np.float32)}")
+
+
+if __name__ == "__main__":
+    archs = sys.argv[1:] or ARCH_IDS
+    failed = []
+    for a in archs:
+        try:
+            run(a)
+        except Exception:
+            print(f"FAIL {a}")
+            traceback.print_exc()
+            failed.append(a)
+    sys.exit(1 if failed else 0)

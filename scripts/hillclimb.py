@@ -1,0 +1,127 @@
+"""Hillclimb measurement loop (§Perf): lower one (arch × shape) pair with
+config overrides and report the three roofline terms + peak memory, so each
+hypothesis → change → measure cycle is one command.
+
+  PYTHONPATH=src python scripts/hillclimb.py qwen3_moe_235b_a22b train_4k \
+      --set seq_parallel=True grad_accum_dtype=bfloat16 --microbatches 8
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import ast
+import dataclasses
+import json
+import time
+
+import jax
+
+from repro.configs import get_config
+from repro.launch.dryrun import _n_super, shallow_cfg
+from repro.launch.hlo_analysis import cost_summary, parse_collectives
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import distill_input_specs, input_specs, resolve_config
+from repro.models.config import INPUT_SHAPES
+from repro.common.scan import unroll_scans
+
+PEAK_FLOPS, HBM_BW, ICI_BW = 197e12, 819e9, 50e9
+
+
+def measure(cfg, shape, mesh, *, probe=True, teacher_cfg=None):
+    def specs(c, sh):
+        if teacher_cfg is not None:
+            return distill_input_specs(c, teacher_cfg, sh, mesh)
+        return input_specs(c, sh, mesh)
+
+    t0 = time.time()
+    with jax.set_mesh(mesh):
+        step, args = specs(cfg, shape)
+        jitted = step if hasattr(step, "lower") else jax.jit(step)
+        compiled = jitted.lower(*args).compile()
+    out = cost_summary(compiled)
+    out["compile_s"] = time.time() - t0
+    out["scanned_collective_bytes"] = parse_collectives(compiled.as_text()).total_bytes
+    if probe:
+        pshape = dataclasses.replace(shape, microbatches=1)
+        pf, pb, pc = {}, {}, {}
+        for k in (1, 2):
+            scfg = shallow_cfg(cfg, k)
+            if teacher_cfg is not None:
+                sstep, sargs = distill_input_specs(
+                    scfg, shallow_cfg(teacher_cfg, k), pshape, mesh)
+            else:
+                sstep, sargs = input_specs(scfg, pshape, mesh)
+            sjit = sstep if hasattr(sstep, "lower") else jax.jit(sstep)
+            with jax.set_mesh(mesh), unroll_scans():
+                low = sjit.lower(*sargs)
+            pcmp = low.compile()
+            cs = cost_summary(pcmp)
+            pf[k], pb[k] = cs["hlo_flops"], cs["hlo_bytes"]
+            pc[k] = parse_collectives(pcmp.as_text()).total_bytes
+        n = _n_super(cfg)
+        out["flops"] = pf[1] + (n - 1) * (pf[2] - pf[1])
+        out["bytes"] = pb[1] + (n - 1) * (pb[2] - pb[1])
+        out["coll"] = pc[1] + (n - 1) * (pc[2] - pc[1])
+    else:
+        out["flops"], out["bytes"] = out["hlo_flops"], out["hlo_bytes"]
+        out["coll"] = out["scanned_collective_bytes"]
+    out["t_compute"] = out["flops"] / PEAK_FLOPS
+    out["t_memory"] = out["bytes"] / HBM_BW
+    out["t_collective"] = out["coll"] / ICI_BW
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("arch")
+    ap.add_argument("shape")
+    ap.add_argument("--set", nargs="*", default=[], metavar="KEY=VAL",
+                    help="ModelConfig overrides, e.g. seq_parallel=True")
+    ap.add_argument("--microbatches", type=int, default=0)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--no-probe", action="store_true")
+    ap.add_argument("--distill-from", default="",
+                    help="teacher arch: lower the MDD distill_step instead")
+    args = ap.parse_args()
+
+    shape = INPUT_SHAPES[args.shape]
+    if args.microbatches:
+        shape = dataclasses.replace(shape, microbatches=args.microbatches)
+    cfg = resolve_config(get_config(args.arch), shape)
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        try:
+            v = ast.literal_eval(v)
+        except (ValueError, SyntaxError):
+            pass
+        cfg = cfg.replace(**{k: v})
+    mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
+    teacher_cfg = None
+    if args.distill_from:
+        teacher_cfg = resolve_config(get_config(args.distill_from), shape)
+        for kv in args.set:
+            k, v = kv.split("=", 1)
+            try:
+                v = ast.literal_eval(v)
+            except (ValueError, SyntaxError):
+                pass
+            if k in ("seq_parallel", "attn_chunk", "attn_pin_kv"):
+                teacher_cfg = teacher_cfg.replace(**{k: v})
+    m = measure(cfg, shape, mesh, probe=not args.no_probe,
+                teacher_cfg=teacher_cfg)
+    print(json.dumps({
+        "arch": args.arch, "shape": args.shape, "overrides": args.set,
+        "microbatches": shape.microbatches,
+        "t_compute_s": round(m["t_compute"], 6),
+        "t_memory_s": round(m["t_memory"], 6),
+        "t_collective_s": round(m["t_collective"], 6),
+        "bound": max(("compute", m["t_compute"]), ("memory", m["t_memory"]),
+                     ("collective", m["t_collective"]), key=lambda x: x[1])[0],
+        "peak_GB": round(m["peak_bytes"] / 1e9, 2),
+        "flops": m["flops"], "bytes": m["bytes"], "coll_bytes": m["coll"],
+        "compile_s": round(m["compile_s"], 1),
+    }, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""repro — production-grade JAX framework implementing the MDD
+(Model Discovery & Distillation) architecture for scalable ML on
+decentralized data over the edge-to-cloud continuum."""
+__version__ = "0.1.0"

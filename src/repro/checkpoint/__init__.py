@@ -1,0 +1,13 @@
+from repro.checkpoint.serde import (
+    params_from_bytes,
+    params_to_bytes,
+    restore_checkpoint,
+    save_checkpoint,
+)
+
+__all__ = [
+    "params_to_bytes",
+    "params_from_bytes",
+    "save_checkpoint",
+    "restore_checkpoint",
+]

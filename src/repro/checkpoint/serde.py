@@ -1,0 +1,76 @@
+"""Parameter (de)serialization and simple step checkpoints.
+
+Format: npz archive keyed by '/'-joined pytree paths, so any nested dict of
+arrays round-trips exactly.  This is also the wire format models travel in
+between vaults and learners (content-hashed by repro.core.vault).
+"""
+from __future__ import annotations
+
+import io
+import json
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(p.key) if hasattr(p, "key") else str(p.idx) for p in path
+        )
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _unflatten(flat: dict) -> Any:
+    tree: dict = {}
+    for key, value in flat.items():
+        parts = key.split("/")
+        node = tree
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = value
+    return tree
+
+
+def params_to_bytes(params) -> bytes:
+    buf = io.BytesIO()
+    np.savez(buf, **_flatten(params))
+    return buf.getvalue()
+
+
+def params_from_bytes(data: bytes):
+    with np.load(io.BytesIO(data)) as npz:
+        flat = {k: npz[k] for k in npz.files}
+    return _unflatten(flat)
+
+
+def save_checkpoint(directory: str, step: int, params, extra: dict | None = None):
+    os.makedirs(directory, exist_ok=True)
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    with open(path, "wb") as f:
+        f.write(params_to_bytes(params))
+    meta = {"step": step, **(extra or {})}
+    with open(os.path.join(directory, f"ckpt_{step:08d}.json"), "w") as f:
+        json.dump(meta, f)
+    return path
+
+
+def restore_checkpoint(directory: str, step: int | None = None):
+    ckpts = sorted(
+        f for f in os.listdir(directory) if f.startswith("ckpt_") and f.endswith(".npz")
+    )
+    if not ckpts:
+        raise FileNotFoundError(f"no checkpoints in {directory}")
+    name = f"ckpt_{step:08d}.npz" if step is not None else ckpts[-1]
+    with open(os.path.join(directory, name), "rb") as f:
+        params = params_from_bytes(f.read())
+    meta_path = os.path.join(directory, name.replace(".npz", ".json"))
+    meta = {}
+    if os.path.exists(meta_path):
+        with open(meta_path) as f:
+            meta = json.load(f)
+    return params, meta

@@ -1,0 +1,12 @@
+from repro.common.types import ParamSpec, init_params, logical_axes, stack_specs
+from repro.common.tree import count_params, tree_bytes, cast_tree
+
+__all__ = [
+    "ParamSpec",
+    "init_params",
+    "logical_axes",
+    "stack_specs",
+    "count_params",
+    "tree_bytes",
+    "cast_tree",
+]

@@ -1,0 +1,47 @@
+"""Pytree helpers used across the framework."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def count_params(tree) -> int:
+    return int(sum(np.prod(x.shape) for x in jax.tree_util.tree_leaves(tree)))
+
+
+def tree_bytes(tree) -> int:
+    return int(
+        sum(np.prod(x.shape) * x.dtype.itemsize for x in jax.tree_util.tree_leaves(tree))
+    )
+
+
+def cast_tree(tree, dtype):
+    def cast(x):
+        if jnp.issubdtype(x.dtype, jnp.floating):
+            return x.astype(dtype)
+        return x
+
+    return jax.tree_util.tree_map(cast, tree)
+
+
+def tree_add(a, b):
+    return jax.tree_util.tree_map(lambda x, y: x + y, a, b)
+
+
+def tree_scale(tree, s):
+    return jax.tree_util.tree_map(lambda x: x * s, tree)
+
+
+def tree_zeros_like(tree):
+    return jax.tree_util.tree_map(jnp.zeros_like, tree)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def tree_isfinite(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.all(jnp.stack([jnp.all(jnp.isfinite(x)) for x in leaves]))

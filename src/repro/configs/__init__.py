@@ -1,0 +1,43 @@
+"""Architecture registry: 10 assigned architectures + paper-figure scenarios.
+
+Each module exposes ``CONFIG`` (the exact assigned configuration, citing its
+source) and ``SMOKE`` (a reduced same-family variant for CPU smoke tests:
+<=2 layers, d_model<=512, <=4 experts).
+"""
+from __future__ import annotations
+
+import importlib
+
+ARCH_IDS = [
+    "nemotron_4_15b",
+    "deepseek_coder_33b",
+    "zamba2_2_7b",
+    "qwen3_moe_235b_a22b",
+    "chameleon_34b",
+    "llama4_scout_17b_a16e",
+    "whisper_base",
+    "qwen2_1_5b",
+    "xlstm_1_3b",
+    "minitron_4b",
+]
+
+_ALIAS = {i.replace("_", "-"): i for i in ARCH_IDS}
+
+
+def _module(arch: str):
+    arch = _ALIAS.get(arch, arch)
+    if arch not in ARCH_IDS:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_ALIAS)}")
+    return importlib.import_module(f"repro.configs.{arch}")
+
+
+def get_config(arch: str):
+    return _module(arch).CONFIG
+
+
+def get_smoke_config(arch: str):
+    return _module(arch).SMOKE
+
+
+def all_configs():
+    return {a: get_config(a) for a in ARCH_IDS}

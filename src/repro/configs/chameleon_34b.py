@@ -1,0 +1,30 @@
+"""Chameleon 34B — early-fusion VLM; images enter as VQ tokens inside the
+65536-entry vocab, so the token stream itself is multimodal and no separate
+patch-embedding input is needed [arXiv:2405.09818].
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="chameleon-34b",
+    family="vlm",
+    num_layers=48,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=22016,
+    vocab_size=65536,
+    mlp_type="swiglu",
+    num_patches=0,  # VQ image tokens share the text vocab (early fusion)
+)
+
+SMOKE = CONFIG.replace(
+    name="chameleon-34b-smoke",
+    num_layers=2,
+    d_model=256,
+    num_heads=8,
+    num_kv_heads=2,
+    head_dim=32,
+    d_ff=768,
+    vocab_size=512,
+)

@@ -1,0 +1,27 @@
+"""DeepSeek-Coder 33B — dense, llama-arch (SwiGLU, GQA) [arXiv:2401.14196]."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-coder-33b",
+    family="dense",
+    num_layers=62,
+    d_model=7168,
+    num_heads=56,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=19200,
+    vocab_size=32256,
+    mlp_type="swiglu",
+    rope_theta=100_000.0,
+)
+
+SMOKE = CONFIG.replace(
+    name="deepseek-coder-33b-smoke",
+    num_layers=2,
+    d_model=256,
+    num_heads=8,
+    num_kv_heads=2,
+    head_dim=32,
+    d_ff=768,
+    vocab_size=512,
+)

@@ -1,0 +1,40 @@
+"""Llama-4 Scout 17B-A16E — MoE (16 experts, top-1, shared expert) with
+early-fusion vision: the vision-encoder frontend is a STUB and supplies
+precomputed patch embeddings that overwrite the first ``num_patches`` token
+positions [hf:meta-llama/Llama-4-Scout-17B-16E].
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama4-scout-17b-a16e",
+    family="moe",
+    num_layers=48,
+    d_model=5120,
+    num_heads=40,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=8192,
+    vocab_size=202048,
+    mlp_type="swiglu",
+    num_experts=16,
+    experts_per_token=1,
+    moe_d_ff=8192,
+    num_shared_experts=1,
+    num_patches=144,
+    rope_theta=500_000.0,
+)
+
+SMOKE = CONFIG.replace(
+    name="llama4-scout-smoke",
+    num_layers=2,
+    d_model=256,
+    num_heads=8,
+    num_kv_heads=2,
+    head_dim=32,
+    d_ff=512,
+    vocab_size=512,
+    num_experts=4,
+    experts_per_token=1,
+    moe_d_ff=512,
+    num_patches=8,
+)

@@ -1,0 +1,26 @@
+"""Minitron 4B — pruned Nemotron-4 (GQA, squared-ReLU) [arXiv:2407.14679]."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="minitron-4b",
+    family="dense",
+    num_layers=32,
+    d_model=3072,
+    num_heads=24,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=9216,
+    vocab_size=256000,
+    mlp_type="squared_relu",
+)
+
+SMOKE = CONFIG.replace(
+    name="minitron-4b-smoke",
+    num_layers=2,
+    d_model=256,
+    num_heads=8,
+    num_kv_heads=2,
+    head_dim=32,
+    d_ff=1024,
+    vocab_size=512,
+)

@@ -1,0 +1,35 @@
+"""Qwen3-MoE 235B-A22B — 128 experts, top-8 routing, GQA
+[hf:Qwen/Qwen3-30B-A3B scaled per assignment].
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-moe-235b-a22b",
+    family="moe",
+    num_layers=94,
+    d_model=4096,
+    num_heads=64,
+    num_kv_heads=4,
+    head_dim=128,
+    d_ff=1536,
+    vocab_size=151936,
+    mlp_type="swiglu",
+    num_experts=128,
+    experts_per_token=8,
+    moe_d_ff=1536,
+    rope_theta=1_000_000.0,
+)
+
+SMOKE = CONFIG.replace(
+    name="qwen3-moe-smoke",
+    num_layers=2,
+    d_model=256,
+    num_heads=8,
+    num_kv_heads=2,
+    head_dim=32,
+    d_ff=256,
+    vocab_size=512,
+    num_experts=4,
+    experts_per_token=2,
+    moe_d_ff=256,
+)

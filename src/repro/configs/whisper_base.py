@@ -1,0 +1,32 @@
+"""Whisper base — encoder-decoder; the mel-spectrogram + conv frontend is a
+STUB supplying (B, 1500, 512) frame embeddings [arXiv:2212.04356].
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-base",
+    family="audio",
+    num_layers=6,
+    encoder_layers=6,
+    d_model=512,
+    num_heads=8,
+    num_kv_heads=8,
+    head_dim=64,
+    d_ff=2048,
+    vocab_size=51865,
+    mlp_type="gelu",
+    num_frames=1500,
+)
+
+SMOKE = CONFIG.replace(
+    name="whisper-base-smoke",
+    num_layers=2,
+    encoder_layers=2,
+    d_model=128,
+    num_heads=4,
+    num_kv_heads=4,
+    head_dim=32,
+    d_ff=512,
+    vocab_size=512,
+    num_frames=64,
+)

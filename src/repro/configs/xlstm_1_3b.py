@@ -1,0 +1,29 @@
+"""xLSTM 1.3B — sLSTM + mLSTM blocks at 7:1 ratio (every 8th block is
+sLSTM) [arXiv:2405.04517].  d_ff=0: xLSTM blocks carry their own up/down
+projections instead of a separate FFN.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="xlstm-1.3b",
+    family="ssm",
+    block_type="xlstm",
+    num_layers=48,
+    d_model=2048,
+    num_heads=4,
+    num_kv_heads=4,
+    d_ff=0,
+    vocab_size=50304,
+    slstm_every=8,
+    xlstm_proj_factor=2.0,
+)
+
+SMOKE = CONFIG.replace(
+    name="xlstm-1.3b-smoke",
+    num_layers=4,
+    d_model=256,
+    num_heads=4,
+    num_kv_heads=4,
+    vocab_size=512,
+    slstm_every=2,
+)

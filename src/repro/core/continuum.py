@@ -1,0 +1,100 @@
+"""Edge-to-cloud continuum topology + communication cost model.
+
+The paper's architecture (Fig. 2) spans three tiers:
+
+  device tier  — learning parties (train locally, request models)
+  edge tier    — edge servers hosting model vaults
+  cloud tier   — the discovery & distillation service (cards only)
+
+This module models the tiers and their links, and accounts the bytes/latency
+of every MDD exchange — which lets the benchmarks compare MDD's
+model-transfer traffic against FL's per-round update traffic (the paper's
+"expensive communication" argument, quantified).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+from repro.core.discovery import DiscoveryService
+from repro.core.vault import ModelVault
+
+
+@dataclasses.dataclass
+class Link:
+    bandwidth_mbps: float
+    latency_ms: float
+
+    def transfer_time(self, nbytes: int) -> float:
+        return self.latency_ms / 1e3 + nbytes * 8 / (self.bandwidth_mbps * 1e6)
+
+
+# default tier links (edge access vs metro vs backbone)
+DEVICE_TO_EDGE = Link(bandwidth_mbps=50.0, latency_ms=10.0)
+EDGE_TO_CLOUD = Link(bandwidth_mbps=500.0, latency_ms=40.0)
+DEVICE_TO_CLOUD = Link(bandwidth_mbps=20.0, latency_ms=60.0)
+
+
+@dataclasses.dataclass
+class EdgeServer:
+    server_id: str
+    vault: ModelVault
+    link_up: Link = dataclasses.field(default_factory=lambda: EDGE_TO_CLOUD)
+
+
+@dataclasses.dataclass
+class TrafficLog:
+    uploads_bytes: int = 0
+    downloads_bytes: int = 0
+    card_bytes: int = 0
+    total_time_s: float = 0.0
+
+    def as_dict(self):
+        return dataclasses.asdict(self)
+
+
+class Continuum:
+    """The assembled edge-to-cloud system: vaults on edges, discovery in cloud."""
+
+    def __init__(self):
+        self.edges: Dict[str, EdgeServer] = {}
+        self.discovery = DiscoveryService()
+        self.traffic = TrafficLog()
+
+    def add_edge_server(self, server_id: str) -> EdgeServer:
+        vault = ModelVault(vault_id=server_id)
+        edge = EdgeServer(server_id, vault)
+        self.edges[server_id] = edge
+        self.discovery.attach_vault(vault)
+        return edge
+
+    def nearest_edge(self, party_id: str) -> EdgeServer:
+        """Deterministic assignment of a party to its closest edge server."""
+        keys = sorted(self.edges)
+        return self.edges[keys[hash(party_id) % len(keys)]]
+
+    # -- accounted operations -----------------------------------------------
+    def publish(self, party_id: str, params, card):
+        """Device -> edge vault upload; card -> cloud index."""
+        edge = self.nearest_edge(party_id)
+        final = edge.vault.store(params, card)
+        nbytes = edge.vault.blob_size(final.model_id)
+        self.traffic.uploads_bytes += nbytes
+        self.traffic.total_time_s += DEVICE_TO_EDGE.transfer_time(nbytes)
+        card_bytes = len(final.to_json().encode())
+        self.traffic.card_bytes += card_bytes
+        self.traffic.total_time_s += edge.link_up.transfer_time(card_bytes)
+        self.discovery.register(final, edge.server_id)
+        return final
+
+    def discover_and_fetch(self, query, top_k: int = 3):
+        """Query cloud (cards only), then fetch blob from the winning vault."""
+        results = self.discovery.query(query, top_k=top_k)
+        if not results:
+            return None
+        best = results[0]
+        params, card = self.discovery.fetch(best)
+        nbytes = self.edges[best.vault_id].vault.blob_size(card.model_id)
+        self.traffic.downloads_bytes += nbytes
+        self.traffic.total_time_s += DEVICE_TO_EDGE.transfer_time(nbytes)
+        return params, card, best

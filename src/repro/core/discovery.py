@@ -1,0 +1,104 @@
+"""Model discovery service (paper §IV — "the key innovation").
+
+Cloud-hosted registry over all vault cards.  Learners submit a
+:class:`ModelQuery` describing the qualities they need ("a classifier for
+task T with >=90% accuracy on class D"); the service matches, ranks, and
+returns candidates WITHOUT involving any other learner — which is exactly
+how the design sidesteps client heterogeneity.
+
+Ranking = hard-constraint filter + weighted score over
+(requested-class accuracies, overall accuracy, freshness, model size).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.vault import ModelCard, ModelVault
+
+
+@dataclasses.dataclass
+class ModelQuery:
+    task: str
+    min_accuracy: float = 0.0
+    min_class_accuracy: Dict[int, float] = dataclasses.field(default_factory=dict)
+    arch: Optional[str] = None  # constrain architecture family if set
+    max_params: Optional[int] = None
+    exclude_owners: Tuple[str, ...] = ()
+
+
+@dataclasses.dataclass
+class DiscoveryResult:
+    card: ModelCard
+    vault_id: str
+    score: float
+
+
+class DiscoveryService:
+    """Registry + matchmaking over model cards (not blobs — cards only)."""
+
+    def __init__(self):
+        self._index: Dict[str, Tuple[ModelCard, str]] = {}
+        self._vaults: Dict[str, ModelVault] = {}
+        self.stats = {"queries": 0, "hits": 0, "fetches": 0}
+
+    def attach_vault(self, vault: ModelVault):
+        self._vaults[vault.vault_id] = vault
+        for card in vault.cards():
+            self._index[card.model_id] = (card, vault.vault_id)
+
+    def register(self, card: ModelCard, vault_id: str):
+        if vault_id not in self._vaults:
+            raise KeyError(f"unknown vault {vault_id}")
+        self._index[card.model_id] = (card, vault_id)
+
+    # -- matching -----------------------------------------------------------
+    def _satisfies(self, card: ModelCard, q: ModelQuery) -> bool:
+        if card.task != q.task:
+            return False
+        if q.arch and card.arch != q.arch:
+            return False
+        if card.owner in q.exclude_owners:
+            return False
+        m = card.metrics
+        if m.get("accuracy", 0.0) < q.min_accuracy:
+            return False
+        per_class = {int(k): v for k, v in m.get("per_class", {}).items()}
+        for cls, need in q.min_class_accuracy.items():
+            if per_class.get(int(cls), 0.0) < need:
+                return False
+        if q.max_params is not None and card.num_params > q.max_params:
+            return False
+        return True
+
+    def _score(self, card: ModelCard, q: ModelQuery) -> float:
+        m = card.metrics
+        score = 2.0 * m.get("accuracy", 0.0)
+        per_class = {int(k): v for k, v in m.get("per_class", {}).items()}
+        for cls in q.min_class_accuracy:
+            score += per_class.get(int(cls), 0.0)
+        # freshness bonus (decays over ~1 day of simulated time)
+        age = max(time.time() - card.created_at, 0.0)
+        score += 0.1 * (1.0 / (1.0 + age / 86400))
+        # prefer smaller models at equal quality (cheaper to transfer/distill)
+        score -= 1e-9 * card.num_params
+        return score
+
+    def query(self, q: ModelQuery, top_k: int = 3) -> List[DiscoveryResult]:
+        self.stats["queries"] += 1
+        cands = [
+            DiscoveryResult(card, vid, self._score(card, q))
+            for card, vid in self._index.values()
+            if self._satisfies(card, q)
+        ]
+        cands.sort(key=lambda r: r.score, reverse=True)
+        if cands:
+            self.stats["hits"] += 1
+        return cands[:top_k]
+
+    def fetch(self, result: DiscoveryResult):
+        """Fetch + integrity-verify the winning model from its vault."""
+        self.stats["fetches"] += 1
+        vault = self._vaults[result.vault_id]
+        return vault.fetch(result.card.model_id)

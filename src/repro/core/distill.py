@@ -1,0 +1,91 @@
+"""Knowledge-distillation integration (paper §IV step: "the requester
+obtains the model and applies transfer learning (e.g., model distillation)
+to integrate the new model into its own model").
+
+Supports same-architecture and cross-architecture teachers (only the logit
+space must match), and ensembles of several discovered teachers.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.losses import distillation_loss
+from repro.data.pipeline import batch_iterator
+from repro.optim import apply_updates, sgd
+
+
+def distill(
+    student_apply: Callable,
+    student_params,
+    teacher_apply: Callable,
+    teacher_params,
+    x,
+    y,
+    *,
+    epochs: int = 5,
+    lr: float = 0.05,
+    batch_size: int = 32,
+    alpha: float = 0.5,
+    temperature: float = 2.0,
+    seed: int = 0,
+):
+    """Distill ``teacher`` into ``student`` on the student's own data.
+
+    Returns (params, history) where history logs (loss, ce, kd) per step.
+    """
+    opt = sgd(lr)
+    opt_state = opt.init(student_params)
+
+    @jax.jit
+    def step(params, opt_state, bx, by):
+        teacher_logits = teacher_apply(teacher_params, bx)
+
+        def loss_fn(p):
+            student_logits = student_apply(p, bx)
+            loss, parts = distillation_loss(
+                student_logits,
+                teacher_logits,
+                by,
+                alpha=alpha,
+                temperature=temperature,
+            )
+            return loss, parts
+
+        (loss, parts), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        return apply_updates(params, updates), opt_state, loss, parts
+
+    params = student_params
+    history = []
+    for bx, by in batch_iterator(x, y, batch_size, seed=seed, epochs=epochs):
+        params, opt_state, loss, parts = step(params, opt_state, bx, by)
+        history.append(
+            {"loss": float(loss), "ce": float(parts["ce"]), "kd": float(parts["kd"])}
+        )
+    return params, history
+
+
+def distill_ensemble(
+    student_apply: Callable,
+    student_params,
+    teachers: Sequence,  # list of (apply_fn, params, weight)
+    x,
+    y,
+    **kw,
+):
+    """Distill a weighted ensemble of teachers (averaged teacher logits)."""
+    ws = np.array([t[2] for t in teachers], np.float32)
+    ws = ws / ws.sum()
+
+    def ensemble_apply(_, bx):
+        logits = [
+            w * t_apply(t_params, bx).astype(jnp.float32)
+            for (t_apply, t_params, _), w in zip(teachers, ws)
+        ]
+        return sum(logits)
+
+    return distill(student_apply, student_params, ensemble_apply, None, x, y, **kw)

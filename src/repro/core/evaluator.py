@@ -1,0 +1,47 @@
+"""Model evaluation service — produces the quality card stored in vaults.
+
+The paper (§IV): "The system will evaluate the model either on a public
+dataset by the service or via requesting testing parties to obtain the
+quality metrics of the model."  This is that service: it computes overall
+and per-class accuracy, which the discovery service matches against
+requested qualities (e.g. ">=90% on class D").
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def evaluate_classifier(
+    apply_fn: Callable, params, x, y, *, num_classes: int, batch_size: int = 256
+) -> Dict:
+    """Returns {"accuracy", "loss", "per_class": {cls: acc}, "n"}."""
+    correct = np.zeros(num_classes, np.int64)
+    total = np.zeros(num_classes, np.int64)
+    nll_sum, n_items = 0.0, 0
+    jit_apply = jax.jit(apply_fn)
+    for start in range(0, len(y), batch_size):
+        bx, by = x[start : start + batch_size], y[start : start + batch_size]
+        logits = np.asarray(jit_apply(params, bx), np.float32)
+        if logits.ndim == 3:  # sequence model: score every position
+            logits = logits.reshape(-1, logits.shape[-1])
+            by = np.asarray(by).reshape(-1)
+        pred = logits.argmax(-1)
+        logz = np.log(np.exp(logits - logits.max(-1, keepdims=True)).sum(-1)) + logits.max(-1)
+        nll_sum += float((logz - logits[np.arange(len(by)), by]).sum())
+        n_items += len(by)
+        for k in range(num_classes):
+            m = by == k
+            total[k] += int(m.sum())
+            correct[k] += int((pred[m] == k).sum())
+    seen = total > 0
+    per_class = {int(k): float(correct[k] / total[k]) for k in np.where(seen)[0]}
+    return {
+        "accuracy": float(correct.sum() / max(total.sum(), 1)),
+        "loss": nll_sum / max(n_items, 1),
+        "per_class": per_class,
+        "n": int(total.sum()),
+    }

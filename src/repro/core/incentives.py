@@ -1,0 +1,52 @@
+"""Incentive mechanism for model sharing (paper §IV: "may also introduce
+incentive mechanisms (e.g., based on monetary income or mutual interest) to
+enable sharing of high-quality models in the network").
+
+Credit-based ledger: publishing earns credits proportional to model quality;
+every download pays the publisher; fetching costs the requester.  Parties
+with no credits can still bootstrap via a small stipend (cold-start).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+
+@dataclasses.dataclass
+class LedgerEntry:
+    balance: float = 5.0  # cold-start stipend
+    published: int = 0
+    downloads_served: int = 0
+    fetches: int = 0
+
+
+class IncentiveLedger:
+    def __init__(self, publish_reward: float = 1.0, fetch_cost: float = 2.0,
+                 quality_bonus: float = 5.0):
+        self.accounts: Dict[str, LedgerEntry] = {}
+        self.publish_reward = publish_reward
+        self.fetch_cost = fetch_cost
+        self.quality_bonus = quality_bonus
+
+    def _acct(self, party: str) -> LedgerEntry:
+        return self.accounts.setdefault(party, LedgerEntry())
+
+    def on_publish(self, party: str, accuracy: float):
+        acct = self._acct(party)
+        acct.balance += self.publish_reward + self.quality_bonus * max(accuracy, 0.0)
+        acct.published += 1
+
+    def can_fetch(self, party: str) -> bool:
+        return self._acct(party).balance >= self.fetch_cost
+
+    def on_fetch(self, requester: str, publisher: str):
+        if not self.can_fetch(requester):
+            raise PermissionError(f"{requester} has insufficient credits")
+        self._acct(requester).balance -= self.fetch_cost
+        self._acct(requester).fetches += 1
+        pub = self._acct(publisher)
+        pub.balance += self.fetch_cost * 0.8  # 20% service fee to the cloud
+        pub.downloads_served += 1
+
+    def balance(self, party: str) -> float:
+        return self._acct(party).balance

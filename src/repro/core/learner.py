@@ -1,0 +1,125 @@
+"""Learning parties — the client-driven actors of the MDD architecture.
+
+Lifecycle (paper §IV): train an initial model on local data → publish to a
+vault → when improvement is needed, query the discovery service for a model
+meeting target qualities → distill the discovered model into the local one.
+All asynchronous: a party never waits on any other party.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.common.tree import count_params
+from repro.core.continuum import Continuum
+from repro.core.discovery import ModelQuery
+from repro.core.distill import distill
+from repro.core.evaluator import evaluate_classifier
+from repro.core.vault import ModelCard
+from repro.federated.client import LocalTrainer
+
+
+@dataclasses.dataclass
+class LearnerConfig:
+    lr: float = 0.05
+    batch_size: int = 32
+    distill_alpha: float = 0.5
+    distill_temperature: float = 2.0
+
+
+class LearningParty:
+    """One independent learner on the device tier."""
+
+    def __init__(
+        self,
+        party_id: str,
+        model,  # SmallModel (or any apply/init provider)
+        data,  # ClientDataset
+        task: str,
+        continuum: Optional[Continuum] = None,
+        cfg: LearnerConfig = LearnerConfig(),
+        seed: int = 0,
+    ):
+        self.party_id = party_id
+        self.model = model
+        self.data = data
+        self.task = task
+        self.continuum = continuum
+        self.cfg = cfg
+        self.seed = seed
+        import jax
+
+        self.params = model.init(jax.random.PRNGKey(seed))
+        self.trainer = LocalTrainer(
+            model.apply, lr=cfg.lr, batch_size=cfg.batch_size, seed=seed
+        )
+
+    # -- local operations ----------------------------------------------------
+    def train_local(self, epochs: int = 1):
+        self.params, loss, steps = self.trainer.train(
+            self.params, self.data.x_train, self.data.y_train, epochs=epochs
+        )
+        return loss, steps
+
+    def evaluate(self, x=None, y=None):
+        x = self.data.x_test if x is None else x
+        y = self.data.y_test if y is None else y
+        return evaluate_classifier(
+            self.model.apply, self.params, x, y, num_classes=self.model.num_classes
+        )
+
+    # -- MDD operations -------------------------------------------------------
+    def publish(self, eval_x, eval_y) -> ModelCard:
+        """Evaluate on the service's public split, then publish to the vault."""
+        assert self.continuum is not None
+        metrics = evaluate_classifier(
+            self.model.apply, self.params, eval_x, eval_y,
+            num_classes=self.model.num_classes,
+        )
+        card = ModelCard(
+            model_id=f"{self.party_id}/{self.model.name}",
+            task=self.task,
+            arch=self.model.name,
+            owner=self.party_id,
+            num_params=count_params(self.params),
+            metrics=metrics,
+        )
+        return self.continuum.publish(self.party_id, self.params, card)
+
+    def improve(
+        self,
+        query: Optional[ModelQuery] = None,
+        epochs: int = 5,
+        teacher_apply=None,
+    ):
+        """Discover a better model and distill it into the local model.
+
+        Returns (found: bool, history).  The party's own models are excluded
+        from discovery, and the teacher architecture need not match.
+        """
+        assert self.continuum is not None
+        q = query or ModelQuery(
+            task=self.task, min_accuracy=0.0, exclude_owners=(self.party_id,)
+        )
+        hit = self.continuum.discover_and_fetch(q)
+        if hit is None:
+            return False, []
+        teacher_params, teacher_card, _ = hit
+        t_apply = teacher_apply or self.model.apply  # same-arch default
+        self.params, history = distill(
+            self.model.apply,
+            self.params,
+            t_apply,
+            teacher_params,
+            self.data.x_train,
+            self.data.y_train,
+            epochs=epochs,
+            lr=self.cfg.lr,
+            batch_size=self.cfg.batch_size,
+            alpha=self.cfg.distill_alpha,
+            temperature=self.cfg.distill_temperature,
+            seed=self.seed,
+        )
+        return True, history

@@ -1,0 +1,109 @@
+"""Secure model vaults (paper §IV, Fig. 2).
+
+A vault is hosted on an edge server and stores trained models as
+content-addressed, HMAC-signed blobs together with a ModelCard carrying
+provenance and the quality metrics produced by the evaluation service.
+Integrity is verified on every fetch; tampered blobs are rejected.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import hmac
+import json
+import time
+from typing import Dict, List, Optional
+
+from repro.checkpoint.serde import params_from_bytes, params_to_bytes
+
+
+@dataclasses.dataclass
+class ModelCard:
+    """Metadata + quality card for a stored model."""
+
+    model_id: str
+    task: str  # e.g. "femnist_classification"
+    arch: str  # e.g. "cnn", "lr", "qwen2-1.5b"
+    owner: str
+    num_params: int
+    metrics: Dict  # evaluator output: accuracy, per_class, loss, n
+    version: int = 1
+    created_at: float = 0.0
+    content_hash: str = ""
+    parent: Optional[str] = None  # lineage (e.g. distilled-from)
+
+    def to_json(self) -> str:
+        return json.dumps(dataclasses.asdict(self), sort_keys=True)
+
+    @staticmethod
+    def from_json(s: str) -> "ModelCard":
+        return ModelCard(**json.loads(s))
+
+
+class IntegrityError(Exception):
+    pass
+
+
+@dataclasses.dataclass
+class VaultEntry:
+    card: ModelCard
+    blob: bytes
+    signature: bytes
+
+
+class ModelVault:
+    """One secure model store (paper: hosted by an edge server)."""
+
+    def __init__(self, vault_id: str, secret_key: bytes = b"vault-secret"):
+        self.vault_id = vault_id
+        self._key = secret_key
+        self._entries: Dict[str, VaultEntry] = {}
+
+    # -- internals ---------------------------------------------------------
+    def _sign(self, blob: bytes, card_json: str) -> bytes:
+        mac = hmac.new(self._key, blob, hashlib.sha256)
+        mac.update(card_json.encode())
+        return mac.digest()
+
+    @staticmethod
+    def content_hash(blob: bytes) -> str:
+        return hashlib.sha256(blob).hexdigest()
+
+    # -- API ----------------------------------------------------------------
+    def store(self, params, card: ModelCard) -> ModelCard:
+        """Serialize, hash, sign, and store a model. Returns the final card."""
+        blob = params_to_bytes(params)
+        prev = self._entries.get(card.model_id)
+        card = dataclasses.replace(
+            card,
+            content_hash=self.content_hash(blob),
+            created_at=time.time(),
+            version=(prev.card.version + 1) if prev else 1,
+        )
+        sig = self._sign(blob, card.to_json())
+        self._entries[card.model_id] = VaultEntry(card, blob, sig)
+        return card
+
+    def fetch(self, model_id: str):
+        """Verify integrity and return (params, card)."""
+        entry = self._entries.get(model_id)
+        if entry is None:
+            raise KeyError(f"model {model_id!r} not in vault {self.vault_id}")
+        if self.content_hash(entry.blob) != entry.card.content_hash:
+            raise IntegrityError(f"content hash mismatch for {model_id}")
+        expect = self._sign(entry.blob, entry.card.to_json())
+        if not hmac.compare_digest(expect, entry.signature):
+            raise IntegrityError(f"signature mismatch for {model_id}")
+        return params_from_bytes(entry.blob), entry.card
+
+    def cards(self) -> List[ModelCard]:
+        return [e.card for e in self._entries.values()]
+
+    def blob_size(self, model_id: str) -> int:
+        return len(self._entries[model_id].blob)
+
+    def __contains__(self, model_id: str) -> bool:
+        return model_id in self._entries
+
+    def __len__(self) -> int:
+        return len(self._entries)

@@ -1,0 +1,21 @@
+from repro.data.federated_datasets import (
+    ClientDataset,
+    FederatedDataset,
+    make_femnist_synthetic,
+    make_lr_synthetic,
+    make_reddit_synthetic,
+)
+from repro.data.partition import dirichlet_partition, shard_partition
+from repro.data.pipeline import TokenPipeline, batch_iterator
+
+__all__ = [
+    "ClientDataset",
+    "FederatedDataset",
+    "make_lr_synthetic",
+    "make_femnist_synthetic",
+    "make_reddit_synthetic",
+    "dirichlet_partition",
+    "shard_partition",
+    "TokenPipeline",
+    "batch_iterator",
+]

@@ -1,0 +1,43 @@
+"""Partitioners for turning a centralized dataset into federated clients."""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+
+def dirichlet_partition(
+    y: np.ndarray, num_clients: int, alpha: float = 0.5, seed: int = 0
+) -> Dict[str, np.ndarray]:
+    """Label-skew partition: per-client class mix ~ Dirichlet(alpha).
+
+    Returns client_id -> indices. Every sample is assigned exactly once.
+    """
+    rng = np.random.default_rng(seed)
+    num_classes = int(y.max()) + 1
+    idx_by_class = [np.where(y == k)[0] for k in range(num_classes)]
+    for idx in idx_by_class:
+        rng.shuffle(idx)
+    props = rng.dirichlet(np.full(num_clients, alpha), size=num_classes)
+    out: Dict[str, List[int]] = {f"client_{i:05d}": [] for i in range(num_clients)}
+    for k, idx in enumerate(idx_by_class):
+        cuts = (np.cumsum(props[k]) * len(idx)).astype(int)[:-1]
+        for i, part in enumerate(np.split(idx, cuts)):
+            out[f"client_{i:05d}"].extend(part.tolist())
+    return {k: np.array(sorted(v), dtype=np.int64) for k, v in out.items()}
+
+
+def shard_partition(
+    y: np.ndarray, num_clients: int, shards_per_client: int = 2, seed: int = 0
+) -> Dict[str, np.ndarray]:
+    """McMahan-style shard partition: sort by label, deal shards to clients."""
+    rng = np.random.default_rng(seed)
+    order = np.argsort(y, kind="stable")
+    total_shards = num_clients * shards_per_client
+    shards = np.array_split(order, total_shards)
+    perm = rng.permutation(total_shards)
+    out = {}
+    for i in range(num_clients):
+        take = perm[i * shards_per_client : (i + 1) * shards_per_client]
+        out[f"client_{i:05d}"] = np.concatenate([shards[s] for s in take])
+    return out

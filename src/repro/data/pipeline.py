@@ -1,0 +1,85 @@
+"""Batching pipeline used by local trainers and the big-model driver."""
+from __future__ import annotations
+
+from typing import Iterator
+
+import numpy as np
+
+
+def batch_iterator(x, y, batch_size: int, *, shuffle=True, seed=0, epochs=1):
+    """Yield (x, y) minibatches; pads the tail batch by wrapping around."""
+    n = len(y)
+    rng = np.random.default_rng(seed)
+    for _ in range(epochs):
+        order = rng.permutation(n) if shuffle else np.arange(n)
+        for start in range(0, n, batch_size):
+            idx = order[start : start + batch_size]
+            if len(idx) < batch_size:
+                extra = order[: batch_size - len(idx)]
+                idx = np.concatenate([idx, extra])
+            yield x[idx], y[idx]
+
+
+class TokenPipeline:
+    """Deterministic synthetic token stream for the big-model driver.
+
+    Generates language-model batches (tokens, labels) from a mixture of
+    per-source Markov chains — a decentralized-data stand-in that gives the
+    training loop a non-trivial, learnable distribution.
+    """
+
+    def __init__(self, vocab: int, seq_len: int, batch: int, seed: int = 0, sources: int = 8):
+        self.vocab = vocab
+        self.seq_len = seq_len
+        self.batch = batch
+        self._rng = np.random.default_rng(seed)
+        k = min(64, vocab)
+        self._k = k
+        # sparse transition structure over a k-token active set per source
+        self._active = np.stack(
+            [self._rng.choice(vocab, k, replace=False) for _ in range(sources)]
+        )
+        self._trans = self._rng.dirichlet(np.full(k, 0.2), size=(sources, k))
+
+    def __iter__(self) -> Iterator[dict]:
+        while True:
+            yield self.next_batch()
+
+    def next_batch(self) -> dict:
+        B, S = self.batch, self.seq_len
+        src = self._rng.integers(len(self._active), size=B)
+        toks = np.empty((B, S + 1), np.int32)
+        state = self._rng.integers(self._k, size=B)
+        for t in range(S + 1):
+            toks[:, t] = self._active[src, state]
+            # vectorized Markov step
+            u = self._rng.random(B)
+            cdf = np.cumsum(self._trans[src, state], axis=-1)
+            state = (u[:, None] < cdf).argmax(-1)
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+
+def synthetic_token_batches(cfg, batch: int, seq_len: int, *, steps: int, seed: int = 0):
+    """``steps`` training batches for any architecture family.
+
+    Adds the modality frontend-stub inputs (patches/frames) the VLM and
+    audio configs expect, on top of the Markov-mixture token stream.
+    """
+    import jax.numpy as jnp
+
+    pipe = TokenPipeline(cfg.vocab_size, seq_len, batch, seed=seed)
+    rng = np.random.default_rng(seed + 1)
+    for _ in range(steps):
+        b = pipe.next_batch()
+        out = {"tokens": jnp.asarray(b["tokens"]), "labels": jnp.asarray(b["labels"])}
+        if getattr(cfg, "num_patches", 0):
+            out["patches"] = jnp.asarray(
+                rng.standard_normal((batch, cfg.num_patches, cfg.d_model)),
+                jnp.bfloat16,
+            )
+        if cfg.family == "audio":
+            out["frames"] = jnp.asarray(
+                rng.standard_normal((batch, cfg.num_frames, cfg.d_model)),
+                jnp.bfloat16,
+            )
+        yield out

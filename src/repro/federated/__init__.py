@@ -1,0 +1,13 @@
+from repro.federated.client import LocalTrainer
+from repro.federated.aggregation import fedavg
+from repro.federated.selection import availability_aware_selection, random_selection
+from repro.federated.server import FLConfig, FLServer
+
+__all__ = [
+    "LocalTrainer",
+    "fedavg",
+    "random_selection",
+    "availability_aware_selection",
+    "FLConfig",
+    "FLServer",
+]

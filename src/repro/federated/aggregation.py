@@ -1,0 +1,30 @@
+"""Model aggregation rules."""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import jax
+import numpy as np
+
+
+def fedavg(param_list: Sequence, weights: Sequence[float]):
+    """Weighted average of parameter pytrees (weights ∝ client sample counts)."""
+    if not param_list:
+        raise ValueError("fedavg needs at least one client update")
+    w = np.asarray(weights, np.float64)
+    w = w / w.sum()
+
+    def avg(*leaves):
+        out = sum(wi * leaf for wi, leaf in zip(w, leaves))
+        return out.astype(leaves[0].dtype)
+
+    return jax.tree_util.tree_map(avg, *param_list)
+
+
+def fedavg_delta(global_params, param_list: Sequence, weights: Sequence[float],
+                 server_lr: float = 1.0):
+    """FedAvg expressed as a server-side pseudo-gradient step."""
+    avg = fedavg(param_list, weights)
+    return jax.tree_util.tree_map(
+        lambda g, a: (g + server_lr * (a - g)).astype(g.dtype), global_params, avg
+    )

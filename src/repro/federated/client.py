@@ -1,0 +1,55 @@
+"""Client-side local training for the FL substrate and individual learners."""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.losses import cross_entropy_loss
+from repro.data.pipeline import batch_iterator
+from repro.optim import apply_updates, sgd
+
+
+class LocalTrainer:
+    """SGD local trainer for a SmallModel-style apply fn.
+
+    Used by: FL clients (local rounds), IND parties (local epochs), and the
+    distillation loop (as the student optimizer).
+    """
+
+    def __init__(self, apply_fn: Callable, lr: float = 0.05, batch_size: int = 32,
+                 momentum: float = 0.0, seed: int = 0):
+        self.apply_fn = apply_fn
+        self.batch_size = batch_size
+        self.opt = sgd(lr, momentum=momentum)
+        self.seed = seed
+
+        @jax.jit
+        def step(params, opt_state, x, y):
+            def loss_fn(p):
+                logits = apply_fn(p, x)
+                return cross_entropy_loss(logits, y)
+
+            loss, grads = jax.value_and_grad(loss_fn)(params)
+            updates, opt_state = self.opt.update(grads, opt_state, params)
+            return apply_updates(params, updates), opt_state, loss
+
+        self._step = step
+
+    def train(self, params, x, y, epochs: int = 1, max_steps: Optional[int] = None):
+        """Returns (params, mean_loss, steps_run)."""
+        opt_state = self.opt.init(params)
+        losses = []
+        steps = 0
+        for bx, by in batch_iterator(
+            x, y, self.batch_size, seed=self.seed, epochs=epochs
+        ):
+            params, opt_state, loss = self._step(params, opt_state, bx, by)
+            losses.append(float(loss))
+            steps += 1
+            if max_steps is not None and steps >= max_steps:
+                break
+        return params, float(np.mean(losses)) if losses else 0.0, steps

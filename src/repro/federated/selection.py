@@ -1,0 +1,30 @@
+"""Client selection policies."""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import numpy as np
+
+
+def random_selection(
+    available_ids: Sequence[str], num_select: int, rng: np.random.Generator
+) -> List[str]:
+    ids = list(available_ids)
+    if len(ids) <= num_select:
+        return ids
+    return list(rng.choice(ids, num_select, replace=False))
+
+
+def availability_aware_selection(
+    available_ids: Sequence[str],
+    num_select: int,
+    rng: np.random.Generator,
+    availability_scores: dict,
+) -> List[str]:
+    """Prefer clients with historically higher availability (A2FL-style)."""
+    ids = list(available_ids)
+    if len(ids) <= num_select:
+        return ids
+    scores = np.array([availability_scores.get(i, 0.5) for i in ids])
+    p = scores / scores.sum()
+    return list(rng.choice(ids, num_select, replace=False, p=p))

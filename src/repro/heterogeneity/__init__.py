@@ -1,0 +1,16 @@
+from repro.heterogeneity.profiles import (
+    HETEROGENEITY_PROFILES,
+    ClientSystem,
+    HeterogeneityProfile,
+    sample_client_systems,
+)
+from repro.heterogeneity.availability import AvailabilityTrace, markov_trace
+
+__all__ = [
+    "ClientSystem",
+    "HeterogeneityProfile",
+    "HETEROGENEITY_PROFILES",
+    "sample_client_systems",
+    "AvailabilityTrace",
+    "markov_trace",
+]

@@ -1,0 +1,74 @@
+"""Device + behaviour heterogeneity profiles (paper Fig. 3 cases).
+
+  U  — uniform: identical devices, always available
+  BH — behaviour heterogeneity: availability traces only
+  DH — device heterogeneity: speed/network classes only
+  H  — both
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import numpy as np
+
+from repro.heterogeneity.availability import AvailabilityTrace, markov_trace
+
+
+@dataclasses.dataclass
+class ClientSystem:
+    """Per-client system configuration."""
+
+    compute_speed: float  # relative local-steps/sec (1.0 = reference device)
+    network_mbps: float  # up/down link
+    dropout_prob: float  # chance of dying mid-round (battery, backgrounding)
+
+    def round_time(self, local_steps: int, model_mb: float) -> float:
+        compute = local_steps / max(self.compute_speed, 1e-3)
+        comm = 2 * model_mb * 8 / max(self.network_mbps, 1e-3)
+        return compute + comm
+
+
+@dataclasses.dataclass
+class HeterogeneityProfile:
+    name: str
+    device_het: bool
+    behaviour_het: bool
+
+
+HETEROGENEITY_PROFILES: Dict[str, HeterogeneityProfile] = {
+    "U": HeterogeneityProfile("U", False, False),
+    "BH": HeterogeneityProfile("BH", False, True),
+    "DH": HeterogeneityProfile("DH", True, False),
+    "H": HeterogeneityProfile("H", True, True),
+}
+
+# device classes loosely follow the FLASH smartphone tiers
+_DEVICE_CLASSES = [
+    # (share, speed, mbps, dropout)
+    (0.25, 0.3, 5.0, 0.15),  # low-end
+    (0.45, 1.0, 20.0, 0.08),  # mid
+    (0.25, 2.5, 50.0, 0.04),  # high-end
+    (0.05, 4.0, 100.0, 0.02),  # flagship
+]
+
+
+def sample_client_systems(
+    num_clients: int, profile: HeterogeneityProfile, seed: int = 0, horizon: int = 500
+):
+    """Returns (list[ClientSystem], AvailabilityTrace)."""
+    rng = np.random.default_rng(seed)
+    systems = []
+    if profile.device_het:
+        shares = np.array([c[0] for c in _DEVICE_CLASSES])
+        classes = rng.choice(len(_DEVICE_CLASSES), num_clients, p=shares / shares.sum())
+        for k in classes:
+            _, speed, mbps, drop = _DEVICE_CLASSES[k]
+            jitter = rng.uniform(0.8, 1.2)
+            systems.append(ClientSystem(speed * jitter, mbps * jitter, drop))
+    else:
+        systems = [ClientSystem(1.0, 20.0, 0.0) for _ in range(num_clients)]
+    trace = markov_trace(
+        num_clients, horizon=horizon, seed=seed + 1, always_on=not profile.behaviour_het
+    )
+    return systems, trace

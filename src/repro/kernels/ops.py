@@ -1,0 +1,53 @@
+"""Dispatching wrappers: Pallas TPU kernels on TPU, jnp reference on CPU.
+
+The model code calls these; on this CPU container they resolve to the
+reference path (XLA-fused jnp), and on a TPU slice the same call sites hit
+the Pallas kernels.  ``force`` overrides for tests.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import kd_loss as _kd
+from repro.kernels import ssd_scan as _ssd
+from repro.kernels import ref as _ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, force=None, **kw):
+    use = force if force is not None else ("pallas" if _on_tpu() else "ref")
+    if use == "pallas":
+        return _fa.flash_attention(q, k, v, causal=causal, window=window, **kw)
+    if use == "interpret":
+        return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                                   interpret=True, **kw)
+    return _ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+
+
+def kd_loss(student_logits, teacher_logits, labels, *, alpha=0.5,
+            temperature=2.0, force=None, **kw):
+    use = force if force is not None else ("pallas" if _on_tpu() else "ref")
+    if use == "pallas":
+        return _kd.kd_loss(student_logits, teacher_logits, labels,
+                           alpha=alpha, temperature=temperature, **kw)
+    if use == "interpret":
+        return _kd.kd_loss(student_logits, teacher_logits, labels,
+                           alpha=alpha, temperature=temperature,
+                           interpret=True, **kw)
+    return _ref.kd_loss_ref(student_logits, teacher_logits, labels,
+                            alpha=alpha, temperature=temperature)
+
+
+def ssd_scan(x, dt, A, B_, C_, *, chunk=128, force=None):
+    use = force if force is not None else ("pallas" if _on_tpu() else "ref")
+    if use == "pallas":
+        return _ssd.ssd_scan(x, dt, A, B_, C_, chunk=chunk)
+    if use == "interpret":
+        return _ssd.ssd_scan(x, dt, A, B_, C_, chunk=chunk, interpret=True)
+    from repro.models.ssm import ssd_chunked
+
+    return ssd_chunked(x, dt, A, B_, C_, chunk=chunk)

@@ -1,0 +1,79 @@
+"""Pure-jnp oracles for every Pallas kernel (ground truth in tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None, scale=None):
+    """q: (B,H,S,hd), k/v: (B,KV,S,hd) -> (B,H,S,hd). GQA by head broadcast."""
+    B, H, S, hd = q.shape
+    KV = k.shape[1]
+    G = H // KV
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(hd)
+    qg = q.reshape(B, KV, G, S, hd).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("bkgsd,bktd->bkgst", qg, kf) * scale
+    i = jnp.arange(S)[:, None]
+    j = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask = mask & (j <= i)
+    if window is not None:
+        mask = mask & (i - j < window)
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,bktd->bkgsd", w, vf)
+    return out.reshape(B, H, S, hd).astype(q.dtype)
+
+
+def kd_loss_ref(student_logits, teacher_logits, labels, *, alpha=0.5, temperature=2.0):
+    """Per-row fused distillation loss (no mean reduction).
+
+    student/teacher: (N, V); labels: (N,) int32.  Returns (N,) f32 losses:
+      alpha * CE(student, label) + (1-alpha) * T^2 * KL(teacher_T || student_T)
+    """
+    sl = student_logits.astype(jnp.float32)
+    tl = teacher_logits.astype(jnp.float32)
+    t = temperature
+    # CE at T=1
+    logz_s1 = jax.nn.logsumexp(sl, axis=-1)
+    gold = jnp.take_along_axis(sl, labels[:, None], axis=-1)[:, 0]
+    ce = logz_s1 - gold
+    # KL at temperature T
+    log_ps = jax.nn.log_softmax(sl / t, axis=-1)
+    log_pt = jax.nn.log_softmax(tl / t, axis=-1)
+    kl = jnp.sum(jnp.exp(log_pt) * (log_pt - log_ps), axis=-1)
+    return alpha * ce + (1 - alpha) * (t * t) * kl
+
+
+def ssd_scan_ref(x, dt, A, B_, C_):
+    """Sequential SSD reference: x (B,S,H,P), dt (B,S,H), A (H,), B_/C_ (B,S,N).
+
+    Returns y (B,S,H,P), final state (B,H,P,N).  O(S) sequential — slow but
+    unambiguous ground truth for both the chunked jnp path and the kernel.
+    """
+    Bsz, S, H, P = x.shape
+    N = B_.shape[-1]
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp  # (B,H,P), (B,H), (B,N), (B,N)
+        decay = jnp.exp(dtt * A[None, :])  # (B,H)
+        state = state * decay[:, :, None, None] + jnp.einsum(
+            "bh,bn,bhp->bhpn", dtt, bt, xt
+        )
+        y = jnp.einsum("bn,bhpn->bhp", ct, state)
+        return state, y
+
+    inputs = (
+        jnp.moveaxis(x, 1, 0),
+        jnp.moveaxis(dt, 1, 0),
+        jnp.moveaxis(B_, 1, 0),
+        jnp.moveaxis(C_, 1, 0),
+    )
+    state0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    state, ys = jax.lax.scan(step, state0, inputs)
+    return jnp.moveaxis(ys, 0, 1), state

@@ -1,0 +1,178 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape)
+on the production meshes, WITHOUT allocating device memory.
+
+  single pod : (data=16, model=16)        = 256 chips
+  multi-pod  : (pod=2, data=16, model=16) = 512 chips
+
+For each combination this prints ``compiled.memory_analysis()`` (proves the
+step fits per-device HBM) and ``compiled.cost_analysis()`` (FLOPs/bytes for
+§Roofline), parses collective traffic from the partitioned HLO, and writes
+one JSON artifact per (arch, shape, mesh) that benchmarks/roofline.py reads.
+
+``--probe`` additionally lowers shallow UNROLLED depth-1/2 variants to
+reconstruct while-loop trip counts that XLA cost analysis ignores
+(hlo_analysis.py docstring).
+
+Usage:
+  python -m repro.launch.dryrun --arch all --shape all --mesh both --probe
+  python -m repro.launch.dryrun --arch qwen3_moe_235b_a22b --shape train_4k
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch.hlo_analysis import cost_summary, parse_collectives
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import input_specs, resolve_config
+from repro.models.config import INPUT_SHAPES
+from repro.common.scan import unroll_scans
+
+ART_DIR = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+
+def _n_super(cfg) -> int:
+    if cfg.family in ("dense", "moe", "vlm"):
+        return cfg.num_layers
+    if cfg.family == "hybrid":
+        return cfg.num_layers // cfg.attn_every
+    if cfg.family == "ssm":
+        return cfg.num_layers // cfg.slstm_every
+    if cfg.family == "audio":
+        return cfg.num_layers  # enc and dec scale together
+    raise ValueError(cfg.family)
+
+
+def shallow_cfg(cfg, k: int):
+    """Same family/widths, k super-blocks deep (for the unrolled cost probe)."""
+    if cfg.family == "hybrid":
+        return cfg.replace(num_layers=cfg.attn_every * k)
+    if cfg.family == "ssm":
+        return cfg.replace(num_layers=cfg.slstm_every * k)
+    if cfg.family == "audio":
+        return cfg.replace(num_layers=k, encoder_layers=k)
+    return cfg.replace(num_layers=k)
+
+
+def lower_one(cfg, shape, mesh, *, unroll=False):
+    # the mesh context makes in-graph PartitionSpec constraints
+    # (sharding.rules.constrain) active during tracing
+    with jax.set_mesh(mesh):
+        step, args = input_specs(cfg, shape, mesh)
+        jitted = step if hasattr(step, "lower") else jax.jit(step)
+        if unroll:
+            with unroll_scans():
+                lowered = jitted.lower(*args)
+        else:
+            lowered = jitted.lower(*args)
+    return lowered
+
+
+def run_pair(arch: str, shape_name: str, mesh_kind: str, *, probe: bool, verbose: bool):
+    from repro.launch.steps import OPTIMIZED
+
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    if OPTIMIZED and shape.kind == "train":
+        shape = dataclasses.replace(shape, microbatches=8)
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    t0 = time.time()
+    lowered = lower_one(cfg, shape, mesh)
+    compiled = lowered.compile()
+    t1 = time.time()
+
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_kind,
+        "n_devices": mesh.devices.size,
+        "n_super": _n_super(resolve_config(cfg, shape)),
+        "compile_s": round(t1 - t0, 2),
+    }
+    rec.update(cost_summary(compiled))
+    stats = parse_collectives(compiled.as_text())
+    rec.update({f"scanned_{k}": v for k, v in stats.as_dict().items()})
+
+    if probe:
+        # Probe with microbatches=1: gradient accumulation splits the same
+        # total work into G chunks, so per-step FLOPs/bytes are unchanged,
+        # and the unrolled probe graph is G× smaller.
+        pshape = dataclasses.replace(shape, microbatches=1)
+        for k in (1, 2):
+            scfg = shallow_cfg(cfg, k)
+            pl = lower_one(scfg, pshape, mesh, unroll=True)
+            pc = pl.compile()
+            cs = cost_summary(pc)
+            cst = parse_collectives(pc.as_text())
+            rec[f"probe{k}_flops"] = cs["hlo_flops"]
+            rec[f"probe{k}_bytes"] = cs["hlo_bytes"]
+            rec[f"probe{k}_collective_bytes"] = cst.total_bytes
+            rec[f"probe{k}_collectives"] = cst.as_dict()
+
+    if verbose:
+        print(f"--- {arch} × {shape_name} × {mesh_kind} "
+              f"(compile {rec['compile_s']}s) ---")
+        print("memory_analysis:", compiled.memory_analysis())
+        ca = compiled.cost_analysis()
+        print("cost_analysis: flops=%.3e bytes=%.3e" % (
+            ca.get("flops", 0.0), ca.get("bytes accessed", 0.0)))
+        print("collectives (scanned body):",
+              {k: v for k, v in stats.as_dict().items() if v})
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--probe", action="store_true",
+                    help="also lower unrolled depth-1/2 cost probes")
+    ap.add_argument("--out", default=str(ART_DIR))
+    ap.add_argument("--quiet", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args(argv)
+
+    archs = ARCH_IDS if args.arch == "all" else args.arch.split(",")
+    shapes = list(INPUT_SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mesh_kind in meshes:
+                key = f"{arch}__{shape}__{mesh_kind}"
+                if args.skip_existing and (outdir / f"{key}.json").exists():
+                    print(f"SKIP {key}", flush=True)
+                    continue
+                try:
+                    do_probe = args.probe and mesh_kind == "single"
+                    rec = run_pair(arch, shape, mesh_kind,
+                                   probe=do_probe, verbose=not args.quiet)
+                    (outdir / f"{key}.json").write_text(json.dumps(rec, indent=1))
+                    print(f"PASS {key}  flops/dev={rec['hlo_flops']:.3e} "
+                          f"peak_bytes/dev={rec['peak_bytes']:.3e}", flush=True)
+                except Exception as e:  # noqa: BLE001 — report and continue
+                    failures.append(key)
+                    print(f"FAIL {key}: {type(e).__name__}: {e}", flush=True)
+                    traceback.print_exc()
+    print(f"\n{len(failures)} failures of "
+          f"{len(archs) * len(shapes) * len(meshes)} combinations")
+    if failures:
+        print("failed:", failures)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,29 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this
+module never touches jax device state — the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before first jax
+init; smoke tests and benches see the real single CPU device.
+"""
+from __future__ import annotations
+
+import jax
+
+TARGET = {
+    "name": "tpu-v5e",
+    "peak_flops_bf16": 197e12,  # per chip
+    "hbm_bytes_per_s": 819e9,
+    "ici_bytes_per_s_per_link": 50e9,
+    "hbm_bytes": 16e9,
+}
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """1-device mesh with the production axis names (CPU smoke/integration)."""
+    return jax.make_mesh((1, 1), ("data", "model"))

@@ -1,0 +1,88 @@
+"""Batched serving driver: continuous-batching loop over prefill + decode.
+
+Requests arrive with different prompt lengths; the server left-pads to a
+bucket, prefills the batch, then decodes greedily until EOS/max-tokens.
+This is the same ``serve_step`` the dry-run lowers for the decode shapes.
+
+Example (CPU smoke):
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2_1_5b --smoke \
+      --requests 6 --max-new 12
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, get_smoke_config
+from repro.launch.steps import make_prefill_step, make_serve_step
+
+
+def make_requests(cfg, n, seed=0, lo=4, hi=24):
+    rng = np.random.RandomState(seed)
+    lens = rng.randint(lo, hi, size=n)
+    return [rng.randint(1, cfg.vocab_size, size=L).astype(np.int32) for L in lens]
+
+
+def pad_batch(cfg, prompts, bucket):
+    B = len(prompts)
+    toks = np.zeros((B, bucket), np.int32)
+    for i, p in enumerate(prompts):
+        toks[i, -len(p):] = p  # left-pad so decode continues from the end
+    batch = {"tokens": jnp.asarray(toks)}
+    if cfg.num_patches:
+        batch["patches"] = jnp.zeros((B, cfg.num_patches, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "audio":
+        batch["frames"] = jnp.zeros((B, cfg.num_frames, cfg.d_model), jnp.bfloat16)
+    return batch
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2_1_5b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--bucket", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    prefill_fn, model = make_prefill_step(cfg)
+    serve_fn, _ = make_serve_step(cfg)
+    prefill_fn = jax.jit(prefill_fn)
+    serve_fn = jax.jit(serve_fn, donate_argnums=(1,))
+
+    params = model.init(jax.random.PRNGKey(args.seed))
+    prompts = make_requests(cfg, args.requests, args.seed)
+    batch = pad_batch(cfg, prompts, args.bucket)
+
+    t0 = time.time()
+    logits, cache = prefill_fn(params, batch)
+    next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+    t_prefill = time.time() - t0
+
+    outs = [np.asarray(next_tok)[:, 0]]
+    t0 = time.time()
+    for _ in range(args.max_new - 1):
+        tok, logits, cache = serve_fn(params, cache, {"token": next_tok})
+        next_tok = tok[:, None]
+        outs.append(np.asarray(tok))
+    t_decode = time.time() - t0
+
+    gen = np.stack(outs, axis=1)  # (B, max_new)
+    assert gen.shape == (args.requests, args.max_new)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    for i, p in enumerate(prompts):
+        print(f"req{i}: prompt_len={len(p)} -> {gen[i, :8].tolist()}...")
+    tps = args.requests * args.max_new / max(t_decode, 1e-9)
+    print(f"prefill {t_prefill:.2f}s   decode {t_decode:.2f}s "
+          f"({tps:.1f} tok/s batch-aggregate)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

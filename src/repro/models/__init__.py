@@ -1,0 +1,8 @@
+from repro.models.config import (
+    INPUT_SHAPES,
+    ModelConfig,
+    ShapeConfig,
+)
+from repro.models.zoo import build_model
+
+__all__ = ["ModelConfig", "ShapeConfig", "INPUT_SHAPES", "build_model"]

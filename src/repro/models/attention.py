@@ -1,0 +1,286 @@
+"""Grouped-query attention with full / sliding-window causal masking and a
+ring-buffer KV cache for decode.
+
+Layouts:
+  activations  (B, S, D)
+  q            (B, S, H, hd)
+  k, v         (B, S, KV, hd)
+  cache.k/v    (B, T, KV, hd)   T = seq_len (full) or window (sliding)
+  cache.pos    (B, T) int32     absolute position per slot, -1 = empty
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.types import AXIS_EMBED, AXIS_HEADS, AXIS_KV, ParamSpec
+from repro.models.config import ModelConfig
+from repro.models.layers import apply_rope
+from repro.sharding.rules import constrain
+
+NEG_INF = -1e30
+
+
+def _constrain_gqa(qg, k, v):
+    """Pin the KV-head dim to the model axis (GSPMD pads KV<model).
+
+    Without this, GSPMD splits the *head_dim contraction* across the spare
+    model-axis factor and partial-sums full (S,T) score tensors — measured
+    60 GB all-reduces per layer on deepseek prefill_32k.  Padding the KV
+    dim duplicates some QK^T compute instead, which is ~8× cheaper than
+    the collective at these shapes.
+
+    qg: (B,S,KV,G,hd); k, v: (B,T,KV,hd).
+    """
+    qg = constrain(qg, "data", None, "model", None, None)
+    k = constrain(k, "data", None, "model", None)
+    v = constrain(v, "data", None, "model", None)
+    return qg, k, v
+
+
+def attention_spec(cfg: ModelConfig, *, cross: bool = False):
+    hd = cfg.resolved_head_dim
+    spec = {
+        "wq": ParamSpec((cfg.d_model, cfg.num_heads * hd), (AXIS_EMBED, AXIS_HEADS)),
+        "wk": ParamSpec((cfg.d_model, cfg.num_kv_heads * hd), (AXIS_EMBED, AXIS_KV)),
+        "wv": ParamSpec((cfg.d_model, cfg.num_kv_heads * hd), (AXIS_EMBED, AXIS_KV)),
+        "wo": ParamSpec((cfg.num_heads * hd, cfg.d_model), (AXIS_HEADS, AXIS_EMBED)),
+    }
+    if cfg.qkv_bias and not cross:
+        spec["bq"] = ParamSpec((cfg.num_heads * hd,), (AXIS_HEADS,), init="zeros")
+        spec["bk"] = ParamSpec((cfg.num_kv_heads * hd,), (AXIS_KV,), init="zeros")
+        spec["bv"] = ParamSpec((cfg.num_kv_heads * hd,), (AXIS_KV,), init="zeros")
+    return spec
+
+
+def _project_qkv(params, cfg: ModelConfig, x, kv_input=None):
+    hd = cfg.resolved_head_dim
+    kv_src = x if kv_input is None else kv_input
+    q = jnp.einsum("bsd,dh->bsh", x, params["wq"])
+    k = jnp.einsum("bsd,dh->bsh", kv_src, params["wk"])
+    v = jnp.einsum("bsd,dh->bsh", kv_src, params["wv"])
+    if "bq" in params:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    q = q.reshape(*q.shape[:-1], cfg.num_heads, hd)
+    k = k.reshape(*k.shape[:-1], cfg.num_kv_heads, hd)
+    v = v.reshape(*v.shape[:-1], cfg.num_kv_heads, hd)
+    return q, k, v
+
+
+def _gqa_scores(q, k, v=None, *, pin=False):
+    """q: (B,S,H,hd), k: (B,T,KV,hd) -> scores (B,KV,G,S,T)."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, S, KV, G, hd)
+    if pin and v is not None:
+        qg, k, v = _constrain_gqa(qg, k, v)
+    return jnp.einsum("bskgd,btkd->bkgst", qg, k) / jnp.sqrt(hd).astype(q.dtype)
+
+
+def _gqa_out(weights, v, out_dtype):
+    """weights: (B,KV,G,S,T), v: (B,T,KV,hd) -> (B,S,H*hd)."""
+    B, KV, G, S, T = weights.shape
+    hd = v.shape[-1]
+    o = jnp.einsum("bkgst,btkd->bskgd", weights, v)
+    return o.reshape(B, S, KV * G * hd).astype(out_dtype)
+
+
+def _softmax(scores):
+    return jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
+
+
+def _attend_chunked(q, k, v, positions, *, causal, window, chunk, out_dtype,
+                    pin=False):
+    """Flash-style online-softmax attention in pure jnp (lax.scan over KV
+    chunks) — never materializes the (S,T) score matrix.  This is the
+    TPU-dry-run / CPU mirror of kernels/flash_attention.py, used for long
+    sequences where dense scores dominate peak memory.  q roped (B,S,H,hd);
+    k, v roped (B,T,KV,hd)."""
+    from repro.common.scan import maybe_scan
+
+    B, S, H, hd = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    nc = T // chunk
+    assert T % chunk == 0, (T, chunk)
+    qg = q.reshape(B, S, KV, G, hd).astype(jnp.float32)
+    if pin:
+        qg, k, v = _constrain_gqa(qg, k, v)
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+
+    kc = jnp.moveaxis(k.reshape(B, nc, chunk, KV, hd), 1, 0)
+    vc = jnp.moveaxis(v.reshape(B, nc, chunk, KV, hd), 1, 0)
+    pc = jnp.moveaxis(positions.reshape(B, nc, chunk), 1, 0)
+    i = positions[:, None, None, :, None]  # query positions (B,1,1,S,1)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        k_i, v_i, pos_i = inp
+        s = jnp.einsum("bskgd,bckd->bkgsc", qg, k_i.astype(jnp.float32)) * scale
+        j = pos_i[:, None, None, None, :]
+        mask = jnp.ones(s.shape[-2:], bool)[None, None, None]
+        if causal:
+            mask = mask & (j <= i)
+        if window is not None:
+            mask = mask & (i - j < window)
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        alive = m_new > NEG_INF / 2
+        p = jnp.where(alive[..., None], jnp.exp(s - m_new[..., None]), 0.0)
+        corr = jnp.where(alive, jnp.exp(m - m_new), 1.0)
+        l = l * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bkgsc,bckd->bkgsd", p, v_i.astype(jnp.float32)
+        )
+        return (m_new, l, acc), None
+
+    init = (
+        jnp.full((B, KV, G, S), NEG_INF, jnp.float32),
+        jnp.zeros((B, KV, G, S), jnp.float32),
+        jnp.zeros((B, KV, G, S, hd), jnp.float32),
+    )
+    (m, l, acc), _ = maybe_scan(body, init, (kc, vc, pc))
+    safe = jnp.where(l > 0, l, 1.0)
+    out = (acc / safe[..., None]).astype(out_dtype)  # (B,KV,G,S,hd)
+    return jnp.moveaxis(out, 3, 1).reshape(B, S, KV * G * hd)
+
+
+def attend_full(
+    params,
+    cfg: ModelConfig,
+    x,
+    positions,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+):
+    """Self-attention over a contiguous sequence (train / prefill)."""
+    q, k, v = _project_qkv(params, cfg, x)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    S = q.shape[1]
+    if cfg.attn_chunk and S > cfg.attn_chunk and S % cfg.attn_chunk == 0:
+        out = _attend_chunked(q, k, v, positions, causal=causal, window=window,
+                              chunk=cfg.attn_chunk, out_dtype=x.dtype,
+                              pin=cfg.attn_pin_kv)
+        return jnp.einsum("bsh,hd->bsd", out, params["wo"]), (k, v)
+    scores = _gqa_scores(q, k, v, pin=cfg.attn_pin_kv)  # (B,KV,G,S,T), T == S
+    i = positions[:, None, None, :, None]
+    j = positions[:, None, None, None, :]
+    mask = jnp.ones(scores.shape[-2:], dtype=bool)[None, None, None]
+    if causal:
+        mask = mask & (j <= i)
+    if window is not None:
+        mask = mask & (i - j < window)
+    scores = jnp.where(mask, scores, NEG_INF)
+    weights = _softmax(scores).astype(x.dtype)
+    out = _gqa_out(weights, v, x.dtype)
+    return jnp.einsum("bsh,hd->bsd", out, params["wo"]), (k, v)
+
+
+def attend_cross(params, cfg: ModelConfig, x, memory):
+    """Cross-attention (decoder query -> encoder memory); no RoPE, no mask.
+
+    Returns (out, (k, v)) so prefill can cache the memory projections.
+    """
+    q, k, v = _project_qkv(params, cfg, x, kv_input=memory)
+    scores = _gqa_scores(q, k)
+    weights = _softmax(scores).astype(x.dtype)
+    out = _gqa_out(weights, v, x.dtype)
+    return jnp.einsum("bsh,hd->bsd", out, params["wo"]), (k, v)
+
+
+def attend_cross_cached(params, cfg: ModelConfig, x, xk, xv):
+    """Cross-attention against precomputed memory K/V (decode path)."""
+    hd = cfg.resolved_head_dim
+    q = jnp.einsum("bsd,dh->bsh", x, params["wq"])
+    if "bq" in params:
+        q = q + params["bq"]
+    q = q.reshape(*q.shape[:-1], cfg.num_heads, hd)
+    scores = _gqa_scores(q, xk)
+    weights = _softmax(scores).astype(x.dtype)
+    out = _gqa_out(weights, xv, x.dtype)
+    return jnp.einsum("bsh,hd->bsd", out, params["wo"])
+
+
+# ---------------------------------------------------------------------------
+# KV cache (decode)
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int, dtype):
+    """Cache for one attention layer. T = window size when sliding."""
+    T = seq_len if cfg.sliding_window is None else min(cfg.sliding_window, seq_len)
+    hd = cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((batch, T, cfg.num_kv_heads, hd), dtype),
+        "v": jnp.zeros((batch, T, cfg.num_kv_heads, hd), dtype),
+        "pos": jnp.full((batch, T), -1, jnp.int32),
+    }
+
+
+def cache_abstract(cfg: ModelConfig, batch: int, seq_len: int, dtype):
+    T = seq_len if cfg.sliding_window is None else min(cfg.sliding_window, seq_len)
+    hd = cfg.resolved_head_dim
+    return {
+        "k": jax.ShapeDtypeStruct((batch, T, cfg.num_kv_heads, hd), dtype),
+        "v": jax.ShapeDtypeStruct((batch, T, cfg.num_kv_heads, hd), dtype),
+        "pos": jax.ShapeDtypeStruct((batch, T), jnp.int32),
+    }
+
+
+def decode_step(params, cfg: ModelConfig, cache, x, pos):
+    """One-token decode. x: (B,1,D); pos: scalar int32 absolute position.
+
+    Returns (out (B,1,D), new_cache).
+    """
+    q, k, v = _project_qkv(params, cfg, x)
+    positions = jnp.full((x.shape[0], 1), pos, jnp.int32)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    T = cache["k"].shape[1]
+    if cfg.sliding_window is None:
+        slot = jnp.asarray(pos, jnp.int32)
+    else:
+        slot = jnp.asarray(pos % T, jnp.int32)
+    ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+    cpos = jax.lax.dynamic_update_slice(
+        cache["pos"], positions.astype(jnp.int32), (0, slot)
+    )
+
+    scores = _gqa_scores(q, ck)  # (B,KV,G,1,T)
+    valid = (cpos >= 0) & (cpos <= pos)
+    if cfg.sliding_window is not None:
+        valid = valid & (pos - cpos < cfg.sliding_window)
+    scores = jnp.where(valid[:, None, None, None, :], scores, NEG_INF)
+    weights = _softmax(scores).astype(x.dtype)
+    out = _gqa_out(weights, cv, x.dtype)
+    out = jnp.einsum("bsh,hd->bsd", out, params["wo"])
+    return out, {"k": ck, "v": cv, "pos": cpos}
+
+
+def fill_cache_from_prefill(cfg: ModelConfig, kv, positions, seq_len: int):
+    """Build a decode cache from prefill K/V (already roped).
+
+    kv: (k, v) each (B,S,KV,hd); keeps the trailing ``window`` slots when
+    sliding-window attention is active.
+    """
+    k, v = kv
+    B, S = k.shape[0], k.shape[1]
+    T = seq_len if cfg.sliding_window is None else min(cfg.sliding_window, seq_len)
+    if S >= T:
+        k_t, v_t = k[:, S - T :], v[:, S - T :]
+        pos_t = positions[:, S - T :]
+    else:
+        pad = T - S
+        k_t = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v_t = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        pos_t = jnp.pad(positions, ((0, 0), (0, pad)), constant_values=-1)
+    return {"k": k_t, "v": v_t, "pos": pos_t.astype(jnp.int32)}

@@ -1,0 +1,136 @@
+"""Small models for the paper-figure experiments (Figs. 4-6):
+
+  LR   — logistic regression on feature vectors (LR-Synthetic, Fig. 4)
+  CNN  — 2×conv + fc classifier on 28×28 images (CNN-Femnist, Fig. 5)
+  RNN  — LSTM language model on token sequences (RNN-Reddit, Fig. 6)
+
+All use the ParamSpec system and expose ``apply(params, x) -> logits`` so
+they plug directly into the MDD vault/discovery/distillation machinery.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.types import ParamSpec, init_params
+
+
+class SmallModel(NamedTuple):
+    name: str
+    param_specs: Callable[[], dict]
+    apply: Callable  # (params, x) -> logits
+    num_classes: int
+
+    def init(self, key):
+        return init_params(self.param_specs(), key)
+
+
+# ---------------------------------------------------------------------------
+# Logistic regression
+# ---------------------------------------------------------------------------
+
+
+def make_lr(num_features: int = 60, num_classes: int = 10) -> SmallModel:
+    def specs():
+        return {
+            "w": ParamSpec((num_features, num_classes), (None, None)),
+            "b": ParamSpec((num_classes,), (None,), init="zeros"),
+        }
+
+    def apply(params, x):
+        return jnp.einsum("bf,fc->bc", x, params["w"]) + params["b"]
+
+    return SmallModel("lr", specs, apply, num_classes)
+
+
+# ---------------------------------------------------------------------------
+# CNN (femnist-style 28x28, 62 classes)
+# ---------------------------------------------------------------------------
+
+
+def make_cnn(num_classes: int = 62, channels: int = 16) -> SmallModel:
+    c = channels
+
+    def specs():
+        return {
+            "conv1": ParamSpec((3, 3, 1, c), (None, None, None, None)),
+            "b1": ParamSpec((c,), (None,), init="zeros"),
+            "conv2": ParamSpec((3, 3, c, 2 * c), (None, None, None, None)),
+            "b2": ParamSpec((2 * c,), (None,), init="zeros"),
+            "fc1": ParamSpec((7 * 7 * 2 * c, 128), (None, None)),
+            "bf1": ParamSpec((128,), (None,), init="zeros"),
+            "fc2": ParamSpec((128, num_classes), (None, None)),
+            "bf2": ParamSpec((num_classes,), (None,), init="zeros"),
+        }
+
+    def conv(x, w, b):
+        y = jax.lax.conv_general_dilated(
+            x, w, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+        )
+        return jax.nn.relu(y + b)
+
+    def pool(x):
+        return jax.lax.reduce_window(
+            x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+        )
+
+    def apply(params, x):
+        # x: (B, 28, 28) or (B, 784)
+        if x.ndim == 2:
+            x = x.reshape(-1, 28, 28)
+        x = x[..., None]
+        x = pool(conv(x, params["conv1"], params["b1"]))  # (B,14,14,c)
+        x = pool(conv(x, params["conv2"], params["b2"]))  # (B,7,7,2c)
+        x = x.reshape(x.shape[0], -1)
+        x = jax.nn.relu(jnp.einsum("bf,fh->bh", x, params["fc1"]) + params["bf1"])
+        return jnp.einsum("bh,hc->bc", x, params["fc2"]) + params["bf2"]
+
+    return SmallModel("cnn", specs, apply, num_classes)
+
+
+# ---------------------------------------------------------------------------
+# RNN LM (reddit-style next-token prediction)
+# ---------------------------------------------------------------------------
+
+
+def make_rnn(vocab: int = 256, d_model: int = 64) -> SmallModel:
+    d = d_model
+
+    def specs():
+        return {
+            "embed": ParamSpec((vocab, d), (None, None), init="small"),
+            "wx": ParamSpec((d, 4 * d), (None, None)),
+            "wh": ParamSpec((d, 4 * d), (None, None)),
+            "bias": ParamSpec((4 * d,), (None,), init="zeros"),
+            "out": ParamSpec((d, vocab), (None, None)),
+        }
+
+    def apply(params, tokens):
+        # tokens: (B, S) int32; returns next-token logits (B, S, vocab)
+        x = jnp.take(params["embed"], tokens, axis=0)  # (B,S,d)
+
+        def cell(carry, xt):
+            h, c = carry
+            gates = (
+                jnp.einsum("bd,de->be", xt, params["wx"])
+                + jnp.einsum("bd,de->be", h, params["wh"])
+                + params["bias"]
+            )
+            i, f, g, o = jnp.split(gates, 4, axis=-1)
+            c = jax.nn.sigmoid(f + 1.0) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+            h = jax.nn.sigmoid(o) * jnp.tanh(c)
+            return (h, c), h
+
+        B = tokens.shape[0]
+        h0 = jnp.zeros((B, d), x.dtype)
+        (_, _), hs = jax.lax.scan(cell, (h0, h0), jnp.moveaxis(x, 1, 0))
+        hs = jnp.moveaxis(hs, 0, 1)  # (B,S,d)
+        return jnp.einsum("bsd,dv->bsv", hs, params["out"])
+
+    return SmallModel("rnn", specs, apply, vocab)
+
+
+SMALL_MODELS = {"lr": make_lr, "cnn": make_cnn, "rnn": make_rnn}

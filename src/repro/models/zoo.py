@@ -1,0 +1,14 @@
+"""Model zoo dispatcher: ModelConfig -> Model (init/forward/prefill/decode)."""
+from __future__ import annotations
+
+from repro.models.config import ModelConfig
+from repro.models.encdec import build_encdec_model
+from repro.models.transformer import Model, build_decoder_model
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    if cfg.family == "audio" or cfg.is_encoder_decoder:
+        return build_encdec_model(cfg)
+    if cfg.family in ("dense", "moe", "vlm", "hybrid", "ssm"):
+        return build_decoder_model(cfg)
+    raise ValueError(f"unknown family {cfg.family!r}")

@@ -1,0 +1,93 @@
+"""Optimizers (optax-style pure functions, no external dependency).
+
+An optimizer is a pair of pure functions:
+  init(params)                    -> state
+  update(grads, state, params)    -> (updates, state)
+Updates are ADDED to params by ``apply_updates``.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.tree import global_norm
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable
+
+
+def apply_updates(params, updates):
+    return jax.tree_util.tree_map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), norm
+
+
+def sgd(lr, momentum: float = 0.0):
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        mom = jax.tree_util.tree_map(jnp.zeros_like, params) if momentum else ()
+        return {"step": jnp.zeros((), jnp.int32), "mom": mom}
+
+    def update(grads, state, params=None):
+        step = state["step"] + 1
+        lr_t = lr_fn(step)
+        if momentum:
+            mom = jax.tree_util.tree_map(
+                lambda m, g: momentum * m + g, state["mom"], grads
+            )
+            updates = jax.tree_util.tree_map(lambda m: -lr_t * m, mom)
+            return updates, {"step": step, "mom": mom}
+        updates = jax.tree_util.tree_map(lambda g: -lr_t * g, grads)
+        return updates, {"step": step, "mom": ()}
+
+    return Optimizer(init, update)
+
+
+def adamw(
+    lr,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+    moment_dtype=jnp.float32,
+):
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, moment_dtype)
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "mu": jax.tree_util.tree_map(zeros, params),
+            "nu": jax.tree_util.tree_map(zeros, params),
+        }
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr_t = lr_fn(step)
+        g32 = jax.tree_util.tree_map(lambda g: g.astype(moment_dtype), grads)
+        mu = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g, state["mu"], g32)
+        nu = jax.tree_util.tree_map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g), state["nu"], g32
+        )
+        bc1 = 1 - b1 ** step.astype(moment_dtype)
+        bc2 = 1 - b2 ** step.astype(moment_dtype)
+
+        def upd(m, v, p):
+            mhat = m / bc1
+            vhat = v / bc2
+            u = -lr_t * (mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(moment_dtype))
+            return u.astype(p.dtype)
+
+        updates = jax.tree_util.tree_map(upd, mu, nu, params)
+        return updates, {"step": step, "mu": mu, "nu": nu}
+
+    return Optimizer(init, update)

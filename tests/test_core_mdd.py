@@ -1,0 +1,254 @@
+"""End-to-end behaviour of the paper's system: vaults, discovery,
+distillation, the full MDD loop (paper §IV), and the continuum cost model."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.common.tree import count_params
+from repro.core import losses
+from repro.core.continuum import Continuum, Link
+from repro.core.discovery import DiscoveryService, ModelQuery
+from repro.core.distill import distill, distill_ensemble
+from repro.core.evaluator import evaluate_classifier
+from repro.core.learner import LearnerConfig, LearningParty
+from repro.core.vault import IntegrityError, ModelCard, ModelVault
+from repro.data.federated_datasets import make_lr_synthetic
+from repro.models.small import make_lr
+
+
+def _card(mid="m1", task="t", acc=0.8, per_class=None, owner="o1", n=1000):
+    return ModelCard(
+        model_id=mid, task=task, arch="lr", owner=owner, num_params=n,
+        metrics={"accuracy": acc, "per_class": per_class or {}},
+    )
+
+
+def _params(seed=0):
+    model = make_lr(num_features=8, num_classes=4)
+    return model, model.init(jax.random.PRNGKey(seed))
+
+
+# -- vault -------------------------------------------------------------------
+
+
+def test_vault_roundtrip_and_versioning():
+    model, params = _params()
+    v = ModelVault("edge0")
+    card = v.store(params, _card())
+    assert card.content_hash and card.version == 1
+    got, got_card = v.fetch("m1")
+    for a, b in zip(jax.tree_util.tree_leaves(params), jax.tree_util.tree_leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    card2 = v.store(params, _card())
+    assert card2.version == 2
+
+
+def test_vault_tamper_detection():
+    model, params = _params()
+    v = ModelVault("edge0")
+    v.store(params, _card())
+    entry = v._entries["m1"]
+    entry.blob = entry.blob[:-1] + bytes([entry.blob[-1] ^ 0xFF])
+    with pytest.raises(IntegrityError):
+        v.fetch("m1")
+
+
+def test_vault_card_tamper_detection():
+    """Inflating the quality card after signing must be detected."""
+    model, params = _params()
+    v = ModelVault("edge0")
+    v.store(params, _card(acc=0.5))
+    entry = v._entries["m1"]
+    entry.card = dataclasses.replace(entry.card, metrics={"accuracy": 0.99})
+    with pytest.raises(IntegrityError):
+        v.fetch("m1")
+
+
+# -- discovery ----------------------------------------------------------------
+
+
+def _service_with(cards):
+    svc = DiscoveryService()
+    v = ModelVault("edge0")
+    svc.attach_vault(v)
+    model, params = _params()
+    for c in cards:
+        stored = v.store(params, c)
+        svc.register(stored, "edge0")
+    return svc
+
+
+def test_discovery_constraints_and_ranking():
+    svc = _service_with([
+        _card("a", acc=0.95, per_class={3: 0.5}),
+        _card("b", acc=0.80, per_class={3: 0.95}),
+        _card("c", acc=0.99, per_class={3: 0.2}, owner="me"),
+        _card("d", task="other", acc=1.0),
+    ])
+    # paper's example: "a classifier needing >=90% accuracy for class D"
+    res = svc.query(ModelQuery(task="t", min_class_accuracy={3: 0.9}))
+    assert [r.card.model_id for r in res] == ["b"]
+    # exclude own models
+    res = svc.query(ModelQuery(task="t", exclude_owners=("me",)))
+    assert "c" not in [r.card.model_id for r in res]
+    # ranking: highest accuracy first when constraints allow both
+    res = svc.query(ModelQuery(task="t", min_accuracy=0.7))
+    assert res[0].card.metrics["accuracy"] >= res[-1].card.metrics["accuracy"]
+
+
+def test_discovery_fetch_verifies():
+    svc = _service_with([_card("a", acc=0.9)])
+    res = svc.query(ModelQuery(task="t"))
+    params, card = svc.fetch(res[0])
+    assert card.model_id == "a"
+    assert svc.stats["fetches"] == 1
+
+
+def test_discovery_max_params():
+    svc = _service_with([_card("small", n=10), _card("big", n=10_000_000)])
+    res = svc.query(ModelQuery(task="t", max_params=1000))
+    assert [r.card.model_id for r in res] == ["small"]
+
+
+# -- distillation -------------------------------------------------------------
+
+
+def test_distill_improves_student_toward_teacher():
+    """A weak student distilled from a strong teacher improves (Fig. 4-6)."""
+    ds = make_lr_synthetic(num_clients=30, seed=0)
+    model = make_lr(num_features=ds.num_features, num_classes=ds.num_classes)
+    merged_x, merged_y = ds.merged_test()
+
+    # strong teacher: trained on pooled data from many clients
+    from repro.federated.client import LocalTrainer
+
+    teacher_params = model.init(jax.random.PRNGKey(0))
+    tx = np.concatenate([ds.clients[c].x_train for c in ds.client_ids()])
+    ty = np.concatenate([ds.clients[c].y_train for c in ds.client_ids()])
+    trainer = LocalTrainer(model.apply, lr=0.1, batch_size=64)
+    teacher_params, _, _ = trainer.train(teacher_params, tx, ty, epochs=3)
+    t_acc = evaluate_classifier(model.apply, teacher_params, merged_x, merged_y,
+                                num_classes=ds.num_classes)["accuracy"]
+
+    # weak student: one client's data only
+    c0 = ds.clients[ds.client_ids()[0]]
+    student_params = model.init(jax.random.PRNGKey(7))
+    s_acc0 = evaluate_classifier(model.apply, student_params, merged_x, merged_y,
+                                 num_classes=ds.num_classes)["accuracy"]
+    student_params, hist = distill(
+        model.apply, student_params, model.apply, teacher_params,
+        c0.x_train, c0.y_train, epochs=10, lr=0.1,
+    )
+    s_acc1 = evaluate_classifier(model.apply, student_params, merged_x, merged_y,
+                                 num_classes=ds.num_classes)["accuracy"]
+    assert s_acc1 > s_acc0 + 0.03, (s_acc0, s_acc1, t_acc)
+    assert hist[-1]["loss"] < hist[0]["loss"]
+
+
+def test_distill_ensemble_runs():
+    ds = make_lr_synthetic(num_clients=5, seed=1)
+    model = make_lr(num_features=ds.num_features, num_classes=ds.num_classes)
+    p0 = model.init(jax.random.PRNGKey(0))
+    teachers = [(model.apply, model.init(jax.random.PRNGKey(i)), 1.0) for i in (1, 2)]
+    c0 = ds.clients[ds.client_ids()[0]]
+    params, hist = distill_ensemble(
+        model.apply, p0, teachers, c0.x_train, c0.y_train, epochs=1
+    )
+    assert np.isfinite(hist[-1]["loss"])
+
+
+def test_distillation_loss_weights():
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    s = jax.random.normal(k1, (16, 8))
+    t = jax.random.normal(k2, (16, 8))
+    y = jax.random.randint(k1, (16,), 0, 8)
+    total, parts = losses.distillation_loss(s, t, y, alpha=1.0)
+    np.testing.assert_allclose(float(total), float(parts["ce"]), rtol=1e-6)
+    total0, parts0 = losses.distillation_loss(s, t, y, alpha=0.0)
+    np.testing.assert_allclose(float(total0), float(parts0["kd"]), rtol=1e-6)
+    # KD of identical distributions is ~0
+    kd_same = losses.kd_kl_loss(s, s)
+    assert abs(float(kd_same)) < 1e-5
+
+
+# -- full MDD loop over the continuum ------------------------------------------
+
+
+def test_mdd_loop_end_to_end():
+    """Train-local -> publish -> discover -> distill across the continuum."""
+    ds = make_lr_synthetic(num_clients=12, seed=3)
+    model = make_lr(num_features=ds.num_features, num_classes=ds.num_classes)
+    cont = Continuum()
+    cont.add_edge_server("edge0")
+    cont.add_edge_server("edge1")
+    ex, ey = ds.merged_test(max_per_client=20)
+
+    # a strong publisher party (lots of data, many epochs)
+    pub = LearningParty(
+        "pub", model,
+        ds.clients[ds.client_ids()[0]], "lr", cont, seed=0,
+    )
+    tx = np.concatenate([ds.clients[c].x_train for c in ds.client_ids()])
+    ty = np.concatenate([ds.clients[c].y_train for c in ds.client_ids()])
+    pub.data = dataclasses.replace(pub.data, x_train=tx, y_train=ty)
+    pub.train_local(epochs=3)
+    card = pub.publish(ex, ey)
+    assert card.content_hash
+
+    # a requester party improves via discovery + distillation
+    req = LearningParty(
+        "req", model, ds.clients[ds.client_ids()[1]], "lr", cont, seed=9,
+    )
+    req.train_local(epochs=1)
+    acc0 = req.evaluate(ex, ey)["accuracy"]
+    found, hist = req.improve(epochs=4)
+    assert found
+    acc1 = req.evaluate(ex, ey)["accuracy"]
+    assert acc1 >= acc0 - 1e-6, (acc0, acc1)
+    # traffic was accounted: one upload (publish) + one download (fetch)
+    assert cont.traffic.uploads_bytes > 0
+    assert cont.traffic.downloads_bytes > 0
+    assert cont.traffic.total_time_s > 0
+
+
+def test_link_cost_model():
+    link = Link(bandwidth_mbps=100.0, latency_ms=10.0)
+    t = link.transfer_time(125_000_00)  # 12.5 MB -> 1 s at 100 Mbps
+    np.testing.assert_allclose(t, 1.01, rtol=1e-6)
+
+
+# -- incentives -----------------------------------------------------------------
+
+
+def test_incentive_ledger_flow():
+    from repro.core.incentives import IncentiveLedger
+
+    led = IncentiveLedger()
+    led.on_publish("alice", accuracy=0.9)
+    assert led.balance("alice") > 5.0
+    b0 = led.balance("bob")
+    led.on_fetch("bob", "alice")
+    assert led.balance("bob") == b0 - led.fetch_cost
+    assert led.accounts["alice"].downloads_served == 1
+    # drain bob's credits -> fetch refused
+    led.accounts["bob"].balance = 0.0
+    import pytest as _pytest
+    with _pytest.raises(PermissionError):
+        led.on_fetch("bob", "alice")
+
+
+def test_evaluator_per_class_metrics():
+    import jax as _jax
+    from repro.core.evaluator import evaluate_classifier
+    from repro.models.small import make_lr
+
+    model = make_lr(num_features=6, num_classes=3)
+    params = model.init(_jax.random.PRNGKey(0))
+    x = np.random.RandomState(0).randn(60, 6).astype(np.float32)
+    y = np.random.RandomState(1).randint(0, 3, 60)
+    m = evaluate_classifier(model.apply, params, x, y, num_classes=3)
+    assert 0.0 <= m["accuracy"] <= 1.0
+    assert set(m["per_class"]) == {0, 1, 2}
+    assert m["n"] == 60

@@ -1,0 +1,143 @@
+"""FL substrate: aggregation, selection, heterogeneity, full FL rounds."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.evaluator import evaluate_classifier
+from repro.data.federated_datasets import (
+    make_femnist_synthetic,
+    make_lr_synthetic,
+    make_reddit_synthetic,
+)
+from repro.data.partition import dirichlet_partition, shard_partition
+from repro.federated.aggregation import fedavg, fedavg_delta
+from repro.federated.selection import availability_aware_selection, random_selection
+from repro.federated.server import FLConfig, FLServer
+from repro.heterogeneity.availability import markov_trace
+from repro.heterogeneity.profiles import (
+    HETEROGENEITY_PROFILES,
+    sample_client_systems,
+)
+from repro.models.small import make_lr
+
+
+def test_fedavg_weighted_mean():
+    t1 = {"w": np.ones((2, 2), np.float32)}
+    t2 = {"w": np.full((2, 2), 3.0, np.float32)}
+    avg = fedavg([t1, t2], [1.0, 3.0])
+    np.testing.assert_allclose(np.asarray(avg["w"]), 2.5)
+
+
+def test_fedavg_delta_matches_direct():
+    rng = np.random.RandomState(0)
+    g = {"w": rng.randn(3).astype(np.float32)}
+    locals_ = [{"w": rng.randn(3).astype(np.float32)} for _ in range(3)]
+    w = [1.0, 2.0, 1.0]
+    direct = fedavg(locals_, w)
+    via_delta = fedavg_delta(g, locals_, w)
+    np.testing.assert_allclose(np.asarray(direct["w"]), np.asarray(via_delta["w"]),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_selection():
+    rng = np.random.default_rng(0)
+    ids = [f"c{i}" for i in range(100)]
+    sel = random_selection(ids, 10, rng)
+    assert len(sel) == 10 and len(set(sel)) == 10
+    scores = {c: (1.0 if i % 3 == 0 else 1e-9) for i, c in enumerate(ids)}
+    sel = availability_aware_selection(ids, 10, rng, scores)
+    assert sum(1 for c in sel if scores[c] == 1.0) >= 9  # strongly prefers available
+
+
+def test_markov_trace_stationarity():
+    tr = markov_trace(num_clients=500, horizon=100, seed=0)
+    assert 0.2 < tr.mean_availability < 0.8
+    on = markov_trace(num_clients=10, horizon=10, always_on=True)
+    assert on.mean_availability == 1.0
+
+
+@pytest.mark.parametrize("profile,speed_spread,always_on", [
+    ("U", False, True),
+    ("DH", True, True),
+    ("BH", False, False),
+    ("H", True, False),
+])
+def test_heterogeneity_profiles(profile, speed_spread, always_on):
+    systems, trace = sample_client_systems(
+        200, HETEROGENEITY_PROFILES[profile], seed=0, horizon=50
+    )
+    times = [s.round_time(local_steps=10, model_mb=5.0) for s in systems]
+    if speed_spread:
+        assert max(times) / min(times) > 2.0
+    else:
+        assert max(times) / min(times) < 1.01
+    assert (trace.mean_availability == 1.0) == always_on
+
+
+def test_dirichlet_partition_noniid():
+    labels = np.random.RandomState(0).randint(0, 10, size=2000)
+    parts_iid = dirichlet_partition(labels, num_clients=20, alpha=100.0, seed=0)
+    parts_noniid = dirichlet_partition(labels, num_clients=20, alpha=0.05, seed=0)
+    assert sum(len(p) for p in parts_iid.values()) == 2000
+    assert sum(len(p) for p in parts_noniid.values()) == 2000
+
+    def mean_entropy(parts):
+        es = []
+        for p in parts.values():
+            if len(p) == 0:
+                continue
+            c = np.bincount(labels[p], minlength=10) / len(p)
+            es.append(-(c[c > 0] * np.log(c[c > 0])).sum())
+        return np.mean(es)
+
+    assert mean_entropy(parts_noniid) < mean_entropy(parts_iid) - 0.5
+
+
+def test_shard_partition_covers_all():
+    labels = np.random.RandomState(1).randint(0, 5, size=1000)
+    parts = shard_partition(labels, num_clients=10, shards_per_client=2, seed=0)
+    allidx = np.concatenate(list(parts.values()))
+    assert len(allidx) == 1000 and len(np.unique(allidx)) == 1000
+
+
+def test_fl_rounds_improve():
+    ds = make_lr_synthetic(num_clients=20, seed=0)
+    model = make_lr(num_features=ds.num_features, num_classes=ds.num_classes)
+    server = FLServer(model, ds, FLConfig(rounds=8, clients_per_round=5,
+                                          local_epochs=1, lr=0.1, seed=0))
+    params0 = model.init(jax.random.PRNGKey(0))
+    x, y = ds.merged_test(max_per_client=20)
+    acc0 = evaluate_classifier(model.apply, params0, x, y,
+                               num_classes=ds.num_classes)["accuracy"]
+    params = server.run(params0)
+    acc1 = evaluate_classifier(model.apply, params, x, y,
+                               num_classes=ds.num_classes)["accuracy"]
+    assert acc1 > acc0, (acc0, acc1)
+    assert len(server.history) == 8
+    assert all(r.survived <= r.selected for r in server.history)
+
+
+def test_fl_heterogeneous_profile_drops_clients():
+    ds = make_lr_synthetic(num_clients=30, seed=1)
+    model = make_lr(num_features=ds.num_features, num_classes=ds.num_classes)
+    server = FLServer(model, ds, FLConfig(rounds=6, clients_per_round=10,
+                                          local_epochs=1, lr=0.1, seed=1,
+                                          profile="H", round_deadline=30.0))
+    server.run(model.init(jax.random.PRNGKey(0)))
+    total_sel = sum(r.selected for r in server.history)
+    total_sur = sum(r.survived for r in server.history)
+    assert total_sur < total_sel  # stragglers/dropouts happened
+
+
+def test_datasets_shapes():
+    for fn, kw in [
+        (make_lr_synthetic, dict(num_clients=10)),
+        (make_femnist_synthetic, dict(num_clients=10)),
+        (make_reddit_synthetic, dict(num_clients=10)),
+    ]:
+        ds = fn(seed=0, **kw)
+        assert len(ds.client_ids()) == 10
+        c = ds.clients[ds.client_ids()[0]]
+        assert len(c.x_train) == len(c.y_train) > 0
+        x, y = ds.merged_test(max_per_client=5)
+        assert len(x) == len(y) > 0

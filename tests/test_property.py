@@ -1,0 +1,191 @@
+"""Hypothesis property tests on system invariants."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint.serde import params_from_bytes, params_to_bytes
+from repro.core.discovery import DiscoveryService, ModelQuery
+from repro.core.vault import ModelCard, ModelVault
+from repro.federated.aggregation import fedavg
+from repro.models.moe import _expert_ranks
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+# -- checkpoint serde: any nested dict of arrays round-trips exactly -----------
+
+_arrays = st.one_of(
+    st.integers(1, 6).flatmap(
+        lambda n: st.lists(
+            st.floats(-1e6, 1e6, allow_nan=False, width=32), min_size=n, max_size=n
+        ).map(lambda xs: np.asarray(xs, np.float32))
+    ),
+    st.integers(1, 4).flatmap(
+        lambda n: st.lists(st.integers(-1000, 1000), min_size=n, max_size=n).map(
+            lambda xs: np.asarray(xs, np.int32)
+        )
+    ),
+)
+_keys = st.text(
+    alphabet=st.characters(whitelist_categories=("Ll", "Nd")), min_size=1, max_size=6
+)
+_trees = st.recursive(
+    _arrays,
+    lambda children: st.dictionaries(_keys, children, min_size=1, max_size=3),
+    max_leaves=8,
+)
+
+
+@given(tree=st.dictionaries(_keys, _trees, min_size=1, max_size=4))
+@settings(**SETTINGS)
+def test_serde_roundtrip(tree):
+    blob = params_to_bytes(tree)
+    back = params_from_bytes(blob)
+    la, lb = jax.tree_util.tree_leaves(tree), jax.tree_util.tree_leaves(back)
+    assert len(la) == len(lb)
+    assert jax.tree_util.tree_structure(tree) == jax.tree_util.tree_structure(back)
+    for a, b in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert np.asarray(a).dtype == np.asarray(b).dtype
+
+
+# -- fedavg: convexity / identity / weight normalization ----------------------
+
+
+@given(
+    n=st.integers(1, 5),
+    seed=st.integers(0, 2**16),
+    w_raw=st.lists(st.floats(0.1, 10.0, allow_nan=False), min_size=5, max_size=5),
+)
+@settings(**SETTINGS)
+def test_fedavg_convex_and_identity(n, seed, w_raw):
+    rng = np.random.RandomState(seed)
+    trees = [
+        {"a": rng.randn(3, 2).astype(np.float32), "b": {"c": rng.randn(4).astype(np.float32)}}
+        for _ in range(n)
+    ]
+    w = w_raw[:n]
+    avg = fedavg(trees, w)
+    for path in (("a",), ("b", "c")):
+        stack = np.stack([t[path[0]] if len(path) == 1 else t["b"]["c"] for t in trees])
+        got = avg[path[0]] if len(path) == 1 else avg["b"]["c"]
+        assert np.all(got <= stack.max(0) + 1e-5)
+        assert np.all(got >= stack.min(0) - 1e-5)
+    same = fedavg([trees[0]] * n, w)
+    np.testing.assert_allclose(same["a"], trees[0]["a"], rtol=1e-6)
+    # scale-invariance of weights
+    avg2 = fedavg(trees, [x * 7.5 for x in w])
+    np.testing.assert_allclose(avg2["a"], avg["a"], rtol=1e-5)
+
+
+# -- vault: fetch returns exactly what was stored; any tamper detected --------
+
+
+@given(seed=st.integers(0, 2**16), flip=st.integers(0, 200))
+@settings(**SETTINGS)
+def test_vault_tamper_any_byte(seed, flip):
+    rng = np.random.RandomState(seed)
+    params = {"w": rng.randn(4, 3).astype(np.float32), "b": rng.randn(3).astype(np.float32)}
+    v = ModelVault("e")
+    v.store(params, ModelCard("m", "t", "lr", "o", 15, {"accuracy": 0.5}))
+    entry = v._entries["m"]
+    i = flip % len(entry.blob)
+    tampered = bytearray(entry.blob)
+    tampered[i] ^= 0x01
+    entry.blob = bytes(tampered)
+    try:
+        v.fetch("m")
+        raised = False
+    except Exception:
+        raised = True
+    assert raised
+
+
+# -- discovery: every result satisfies every hard constraint ------------------
+
+
+_cards = st.lists(
+    st.tuples(
+        st.floats(0, 1, allow_nan=False),           # accuracy
+        st.floats(0, 1, allow_nan=False),           # class-3 accuracy
+        st.integers(10, 10_000_000),                # num_params
+        st.sampled_from(["o1", "o2", "me"]),
+    ),
+    min_size=1,
+    max_size=8,
+)
+
+
+@given(cards=_cards, min_acc=st.floats(0, 1), min_c3=st.floats(0, 1))
+@settings(**SETTINGS)
+def test_discovery_results_satisfy_constraints(cards, min_acc, min_c3):
+    svc = DiscoveryService()
+    v = ModelVault("e")
+    svc.attach_vault(v)
+    params = {"w": np.zeros(3, np.float32)}
+    for i, (acc, c3, n, owner) in enumerate(cards):
+        card = ModelCard(
+            f"m{i}", "t", "lr", owner, n,
+            {"accuracy": acc, "per_class": {3: c3}},
+        )
+        svc.register(v.store(params, card), "e")
+    q = ModelQuery(
+        task="t", min_accuracy=min_acc, min_class_accuracy={3: min_c3},
+        exclude_owners=("me",), max_params=1_000_000,
+    )
+    res = svc.query(q, top_k=10)
+    for r in res:
+        m = r.card.metrics
+        assert m["accuracy"] >= min_acc
+        assert m["per_class"][3] >= min_c3 or m["per_class"].get("3", 0) >= min_c3
+        assert r.card.owner != "me"
+        assert r.card.num_params <= 1_000_000
+    # scores are sorted descending
+    assert all(res[i].score >= res[i + 1].score for i in range(len(res) - 1))
+
+
+# -- MoE ranks: permutation-within-expert invariant ----------------------------
+
+
+@given(
+    seed=st.integers(0, 2**16),
+    n=st.integers(1, 128),
+    e=st.integers(1, 16),
+)
+@settings(**SETTINGS)
+def test_expert_ranks_property(seed, n, e):
+    rng = np.random.RandomState(seed)
+    flat = jnp.asarray(rng.randint(0, e, size=n), jnp.int32)
+    ranks = np.asarray(_expert_ranks(flat, e))
+    flat = np.asarray(flat)
+    for ee in np.unique(flat):
+        rr = np.sort(ranks[flat == ee])
+        np.testing.assert_array_equal(rr, np.arange(len(rr)))
+
+
+# -- optimizer: adamw decreases a convex quadratic -----------------------------
+
+
+@given(seed=st.integers(0, 2**16))
+@settings(max_examples=10, deadline=None)
+def test_adamw_descends_quadratic(seed):
+    from repro.optim import adamw, apply_updates
+
+    rng = np.random.RandomState(seed)
+    target = jnp.asarray(rng.randn(8), jnp.float32)
+    params = {"x": jnp.zeros(8, jnp.float32)}
+    opt = adamw(0.1)
+    state = opt.init(params)
+
+    def loss(p):
+        return jnp.sum((p["x"] - target) ** 2)
+
+    l0 = float(loss(params))
+    for _ in range(50):
+        g = jax.grad(loss)(params)
+        upd, state = opt.update(g, state, params)
+        params = apply_updates(params, upd)
+    assert float(loss(params)) < l0 * 0.5
