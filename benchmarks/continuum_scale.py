@@ -1,0 +1,200 @@
+"""Continuum scale benchmark: 10k parties on the event-driven runtime.
+
+Two measurements, printed as ``name,us_per_call,derived`` rows like the
+other benchmark sections:
+
+* ``query@Ncards`` — discovery query latency + cards actually scanned as
+  the registry grows 100 -> 1k -> 10k.  The per-task inverted index with
+  accuracy-sorted pruning keeps the scan count roughly flat while the
+  registry grows 100x, i.e. query cost is sublinear in registered cards.
+
+* ``events`` / ``cycle`` — the full event-driven run: N parties x C MDD
+  cycles (vmapped cohort training + per-party publish/query/fetch events
+  with availability-trace churn), reporting wall time and events/sec.
+
+  PYTHONPATH=src python benchmarks/continuum_scale.py [--parties 10000]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.core.continuum import Continuum
+from repro.core.discovery import DiscoveryService, ModelQuery
+from repro.core.vault import ModelCard, ModelVault
+from repro.heterogeneity.availability import markov_trace
+from repro.models.small import make_lr
+from repro.runtime.clock import SimClock
+from repro.runtime.population import PartyPopulation
+
+
+def _make_party_data(n_parties, n_per_party, n_feat, n_classes, seed):
+    """Shared linear concept; per-party label noise => accuracy spread."""
+    rng = np.random.default_rng(seed)
+    w_true = rng.normal(size=(n_feat, n_classes)).astype(np.float32)
+    x = rng.normal(size=(n_parties, n_per_party, n_feat)).astype(np.float32)
+    y_clean = (x @ w_true).argmax(-1)
+    noise = rng.uniform(0.0, 0.6, size=n_parties)
+    flip = rng.random((n_parties, n_per_party)) < noise[:, None]
+    y = np.where(flip, rng.integers(0, n_classes, y_clean.shape), y_clean)
+    ex = rng.normal(size=(256, n_feat)).astype(np.float32)
+    ey = (ex @ w_true).argmax(-1)
+    return x, y.astype(np.int32), ex, ey.astype(np.int32)
+
+
+# -- query latency vs registry size ------------------------------------------
+
+
+def bench_query_scaling(sizes=(100, 1000, 10000), queries_per_size=500,
+                        seed=0):
+    rng = np.random.default_rng(seed)
+    clock = SimClock()
+    svc = DiscoveryService(clock=clock)
+    vault = ModelVault("edge0", clock=clock)
+    svc.attach_vault(vault)
+    model = make_lr(num_features=4, num_classes=2)
+    params = model.init(jax.random.PRNGKey(0))
+
+    rows = []
+    registered = 0
+    for size in sizes:
+        while registered < size:
+            acc = float(rng.uniform(0.2, 0.95))
+            card = ModelCard(
+                model_id=f"m{registered}", task="t", arch="lr",
+                owner=f"o{registered}", num_params=10,
+                metrics={"accuracy": acc, "per_class": {}},
+            )
+            svc.register(vault.store(params, card), "edge0")
+            registered += 1
+        scanned0 = svc.stats["scanned"]
+        t0 = time.perf_counter()
+        for _ in range(queries_per_size):
+            svc.query(ModelQuery(task="t", min_accuracy=0.0), top_k=3)
+        dt = time.perf_counter() - t0
+        scanned = (svc.stats["scanned"] - scanned0) / queries_per_size
+        rows.append((size, dt / queries_per_size * 1e6, scanned))
+    return rows
+
+
+# -- full event-driven run ----------------------------------------------------
+
+
+def bench_event_run(n_parties=10000, cycles=3, edges=32, seed=0):
+    n_per_party, n_feat, n_classes = 64, 16, 8
+    x, y, ex, ey = _make_party_data(n_parties, n_per_party, n_feat,
+                                    n_classes, seed)
+    model = make_lr(num_features=n_feat, num_classes=n_classes)
+    pop = PartyPopulation(model, x, y, task="lr_bench", lr=0.1,
+                          batch_size=32, seed=seed)
+    cont = Continuum()
+    for e in range(edges):
+        cont.add_edge_server(f"edge{e:03d}")
+    trace = markov_trace(n_parties, horizon=max(cycles, 8), seed=seed)
+
+    cycle_len = 600.0  # simulated seconds per MDD cycle
+    stats_per_cycle = []
+    wall0 = time.perf_counter()
+
+    for cycle in range(cycles):
+        t0 = cycle * cycle_len
+        avail = np.asarray(trace.available(cycle))
+        online = np.where(avail)[0]
+
+        # cohort-level local training: one vmapped update chain
+        def do_train(now, _cycle=cycle):
+            pop.train_epochs(1)
+
+        cont.loop.call_at(t0, do_train, label=f"cohort-train c{cycle}")
+        cont.loop.run_to_quiescence()
+        accs = pop.evaluate(ex, ey)
+
+        # per-party publishes, staggered across the cycle's first half
+        for j, i in enumerate(online):
+            def do_pub(now, i=int(i)):
+                cont.publish_async(pop.party_ids[i], pop.party_params(i),
+                                   pop.make_card(i, accs[i]))
+
+            cont.loop.call_at(t0 + 10.0 + 250.0 * j / max(len(online), 1),
+                              do_pub, label=f"pub p{i}")
+
+        # per-party discovery queries + fetches in the second half
+        hits = {"n": 0}
+        for j, i in enumerate(online):
+            def do_query(now, i=int(i)):
+                q = ModelQuery(task="lr_bench",
+                               exclude_owners=(pop.party_ids[i],))
+
+                def done(hit, now2):
+                    if hit is not None:
+                        hits["n"] += 1
+
+                cont.discover_and_fetch_async(q, done)
+
+            cont.loop.call_at(t0 + 300.0 + 250.0 * j / max(len(online), 1),
+                              do_query, label=f"query p{i}")
+        cont.loop.run_to_quiescence()
+
+        # cohort distill from the globally best card (one vmapped chain)
+        best = cont.discovery.query(ModelQuery(task="lr_bench"), top_k=1)
+        if best:
+            t_params, _ = cont.discovery.fetch(best[0])
+            pop.distill_from(
+                jax.tree_util.tree_map(np.asarray, t_params), epochs=1
+            )
+        stats_per_cycle.append({
+            "cycle": cycle, "online": int(len(online)),
+            "hits": hits["n"], "mean_acc": float(accs.mean()),
+            "best_acc": float(accs.max()),
+        })
+
+    wall = time.perf_counter() - wall0
+    return {
+        "wall_s": wall,
+        "events": cont.loop.events_processed,
+        "events_per_s": cont.loop.events_processed / wall,
+        "sim_time_s": cont.clock.now(),
+        "cards": len(cont.discovery),
+        "queries": cont.discovery.stats["queries"],
+        "scanned_per_query": (cont.discovery.stats["scanned"]
+                              / max(cont.discovery.stats["queries"], 1)),
+        "cycles": stats_per_cycle,
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--parties", type=int, default=10000)
+    ap.add_argument("--cycles", type=int, default=3)
+    ap.add_argument("--edges", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    if args.parties < 1 or args.cycles < 1 or args.edges < 1:
+        ap.error("--parties, --cycles, and --edges must all be >= 1")
+
+    for size, us, scanned in bench_query_scaling():
+        print(f"continuum_scale/query@{size}cards,{us:.1f},"
+              f"scanned={scanned:.1f}", flush=True)
+
+    res = bench_event_run(args.parties, args.cycles, args.edges, args.seed)
+    print(f"continuum_scale/run,{res['wall_s']*1e6:.0f},"
+          f"parties={args.parties};cycles={args.cycles};"
+          f"events={res['events']};events_per_s={res['events_per_s']:.0f};"
+          f"cards={res['cards']};scanned_per_query="
+          f"{res['scanned_per_query']:.1f};sim_time_s={res['sim_time_s']:.0f}")
+    for c in res["cycles"]:
+        print(f"continuum_scale/cycle{c['cycle']},0,"
+              f"online={c['online']};hits={c['hits']};"
+              f"mean_acc={c['mean_acc']:.3f};best_acc={c['best_acc']:.3f}")
+    if res["wall_s"] < 60:
+        print(f"# {args.parties} parties x {args.cycles} cycles in "
+              f"{res['wall_s']:.1f}s (<60s target)")
+    else:
+        print(f"# WARNING: wall time {res['wall_s']:.1f}s exceeds 60s target")
+
+
+if __name__ == "__main__":
+    main()

@@ -3,11 +3,12 @@
 Prints ``name,us_per_call,derived`` CSV rows (plus section markers) so the
 output is both human-skimmable and machine-parsable.
 
-  fig3      — heterogeneity ablation (paper Fig. 3)
-  figs456   — IND vs FL vs MDD (paper Figs. 4-6)
-  kernels   — Pallas kernel validation + reference timings
-  traffic   — MDD vs FL communication cost (continuum model)
-  roofline  — three-term roofline from dry-run artifacts (if present)
+  fig3            — heterogeneity ablation (paper Fig. 3)
+  figs456         — IND vs FL vs MDD (paper Figs. 4-6)
+  kernels         — Pallas kernel validation + reference timings
+  traffic         — MDD vs FL communication cost (continuum model)
+  continuum_scale — event-driven runtime: 10k parties, sublinear discovery
+  roofline        — three-term roofline from dry-run artifacts (if present)
 
 Usage: python -m benchmarks.run [sections...]
 """
@@ -68,6 +69,13 @@ def run_traffic():
           f"saving={fl_bytes/mdd_bytes:.0f}x")
 
 
+def run_continuum_scale():
+    """Event-driven runtime at 10k parties + sublinear discovery queries."""
+    from benchmarks.continuum_scale import main as cmain
+
+    cmain([])
+
+
 def run_kernels():
     from benchmarks.kernels_bench import main as kmain
 
@@ -85,11 +93,14 @@ def run_roofline():
 
 def main():
     which = set(sys.argv[1:]) or {"fig3", "figs456", "kernels", "traffic",
-                                  "roofline"}
+                                  "continuum_scale", "roofline"}
     print("name,us_per_call,derived")
     if "fig3" in which:
         section("Fig.3 heterogeneity impact")
         run_fig3()
+    if "continuum_scale" in which:
+        section("Continuum scale (event-driven runtime)")
+        run_continuum_scale()
     if "figs456" in which:
         section("Figs.4-6 IND vs FL vs MDD")
         run_figs456()

@@ -79,6 +79,13 @@ def main(argv=None):
     print("continuum traffic:", cont.traffic.as_dict())
     print("discovery stats:  ", cont.discovery.stats)
 
+    # simulated-time timeline: every continuum exchange as a clocked event
+    print(f"simulated time:    {cont.clock.now():.3f}s over "
+          f"{cont.loop.events_processed} events")
+    print("timeline (first publish + last fetch cycle):")
+    for line in cont.timeline()[:3] + ["  ..."] + cont.timeline(last=3):
+        print(" ", line)
+
 
 if __name__ == "__main__":
     main()

@@ -1,6 +1,6 @@
 """The paper's primary contribution: the MDD (Model Discovery &
 Distillation) system over the edge-to-cloud continuum."""
-from repro.core.continuum import Continuum, Link, TrafficLog
+from repro.core.continuum import Continuum, EdgeServer, Link, TrafficLog
 from repro.core.discovery import DiscoveryResult, DiscoveryService, ModelQuery
 from repro.core.distill import distill, distill_ensemble
 from repro.core.evaluator import evaluate_classifier
@@ -10,7 +10,7 @@ from repro.core.losses import cross_entropy_loss, distillation_loss, kd_kl_loss
 from repro.core.vault import IntegrityError, ModelCard, ModelVault
 
 __all__ = [
-    "Continuum", "Link", "TrafficLog",
+    "Continuum", "EdgeServer", "Link", "TrafficLog",
     "DiscoveryService", "DiscoveryResult", "ModelQuery",
     "distill", "distill_ensemble", "evaluate_classifier",
     "IncentiveLedger", "LearningParty", "LearnerConfig",

@@ -10,14 +10,27 @@ This module models the tiers and their links, and accounts the bytes/latency
 of every MDD exchange — which lets the benchmarks compare MDD's
 model-transfer traffic against FL's per-round update traffic (the paper's
 "expensive communication" argument, quantified).
+
+Since the event-driven refactor, every exchange is a *scheduled event* on a
+shared :class:`~repro.runtime.loop.EventLoop`: a publish is a device->edge
+blob transfer followed by an edge->cloud card transfer, and the card only
+becomes discoverable when the card transfer completes in simulated time.
+The completion times come from the :class:`Link` cost model.  The classic
+synchronous methods (``publish``, ``discover_and_fetch``) remain as thin
+wrappers that schedule the events and run the loop to quiescence, so
+single-threaded callers observe exactly the old behaviour.
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
-from typing import Dict, List, Optional
+import hashlib
+from typing import Callable, Dict, List, Optional
 
 from repro.core.discovery import DiscoveryService
 from repro.core.vault import ModelVault
+from repro.runtime.clock import SimClock
+from repro.runtime.loop import EventLoop
 
 
 @dataclasses.dataclass
@@ -53,48 +66,128 @@ class TrafficLog:
         return dataclasses.asdict(self)
 
 
-class Continuum:
-    """The assembled edge-to-cloud system: vaults on edges, discovery in cloud."""
+def _stable_bucket(party_id: str, n: int) -> int:
+    """PYTHONHASHSEED-independent assignment (builtin hash() is salted)."""
+    digest = hashlib.sha256(party_id.encode("utf-8")).digest()
+    return int.from_bytes(digest[:8], "big") % n
 
-    def __init__(self):
+
+class Continuum:
+    """The assembled edge-to-cloud system: vaults on edges, discovery in cloud.
+
+    All state shares one simulated clock; pass ``loop`` (or ``clock``) to
+    embed the continuum in a larger simulation, or let it create its own.
+    """
+
+    def __init__(self, clock: Optional[SimClock] = None,
+                 loop: Optional[EventLoop] = None):
+        if loop is not None and clock is not None and loop.clock is not clock:
+            raise ValueError("pass either clock or loop (or a loop built on "
+                             "that clock); a loop brings its own clock")
+        self.loop = loop if loop is not None else EventLoop(clock or SimClock())
+        self.clock = self.loop.clock
         self.edges: Dict[str, EdgeServer] = {}
-        self.discovery = DiscoveryService()
+        self._edge_order: List[str] = []  # sorted edge ids, kept incrementally
+        self.discovery = DiscoveryService(clock=self.clock)
         self.traffic = TrafficLog()
 
-    def add_edge_server(self, server_id: str) -> EdgeServer:
-        vault = ModelVault(vault_id=server_id)
+    def add_edge_server(self, server_id: str,
+                        link_up: Optional[Link] = None) -> EdgeServer:
+        vault = ModelVault(vault_id=server_id, clock=self.clock)
         edge = EdgeServer(server_id, vault)
+        if link_up is not None:
+            edge.link_up = link_up
         self.edges[server_id] = edge
+        bisect.insort(self._edge_order, server_id)
         self.discovery.attach_vault(vault)
         return edge
 
     def nearest_edge(self, party_id: str) -> EdgeServer:
         """Deterministic assignment of a party to its closest edge server."""
-        keys = sorted(self.edges)
-        return self.edges[keys[hash(party_id) % len(keys)]]
+        return self.edges[self._edge_order[_stable_bucket(party_id,
+                                                          len(self._edge_order))]]
 
-    # -- accounted operations -----------------------------------------------
-    def publish(self, party_id: str, params, card):
-        """Device -> edge vault upload; card -> cloud index."""
+    # -- scheduled operations ------------------------------------------------
+    def publish_async(self, party_id: str, params, card,
+                      on_done: Optional[Callable] = None):
+        """Device -> edge vault upload; card -> cloud index.
+
+        The blob is stored (hashed, signed, versioned) at initiation; the
+        card becomes *discoverable* only when the simulated device->edge and
+        edge->cloud transfers complete.  Returns the final card immediately;
+        ``on_done(final_card, sim_time)`` fires at registration time.
+        """
         edge = self.nearest_edge(party_id)
         final = edge.vault.store(params, card)
         nbytes = edge.vault.blob_size(final.model_id)
-        self.traffic.uploads_bytes += nbytes
-        self.traffic.total_time_s += DEVICE_TO_EDGE.transfer_time(nbytes)
+        blob_t = DEVICE_TO_EDGE.transfer_time(nbytes)
         card_bytes = len(final.to_json().encode())
+        card_t = edge.link_up.transfer_time(card_bytes)
+        self.traffic.uploads_bytes += nbytes
         self.traffic.card_bytes += card_bytes
-        self.traffic.total_time_s += edge.link_up.transfer_time(card_bytes)
-        self.discovery.register(final, edge.server_id)
+        self.traffic.total_time_s += blob_t + card_t
+
+        def card_arrived(now: float):
+            self.discovery.register(final, edge.server_id)
+            if on_done is not None:
+                on_done(final, now)
+
+        def blob_arrived(now: float):
+            self.loop.call_after(card_t, card_arrived,
+                                 label=f"card->cloud {final.model_id}")
+
+        self.loop.call_after(blob_t, blob_arrived,
+                             label=f"publish {final.model_id} -> {edge.server_id}")
+        return final
+
+    def discover_and_fetch_async(self, query, on_done: Callable,
+                                 top_k: int = 3):
+        """Query cloud (cards only) then fetch the winning blob, as events.
+
+        ``on_done(hit, sim_time)`` receives ``(params, card, result)`` when
+        the download completes, or ``None`` if no card matched.
+        """
+
+        def do_query(now: float):
+            results = self.discovery.query(query, top_k=top_k)
+            if not results:
+                on_done(None, now)
+                return
+            best = results[0]
+            params, card = self.discovery.fetch(best)
+            nbytes = self.edges[best.vault_id].vault.blob_size(card.model_id)
+            dl_t = DEVICE_TO_EDGE.transfer_time(nbytes)
+            self.traffic.downloads_bytes += nbytes
+            self.traffic.total_time_s += dl_t
+
+            def delivered(now2: float):
+                on_done((params, card, best), now2)
+
+            self.loop.call_after(dl_t, delivered,
+                                 label=f"fetch {card.model_id} <- {best.vault_id}")
+
+        self.loop.call_after(0.0, do_query, label=f"query task={query.task}")
+
+    # -- synchronous wrappers (classic API) ----------------------------------
+    def publish(self, party_id: str, params, card):
+        """Schedule a publish and run the event loop to quiescence."""
+        final = self.publish_async(party_id, params, card)
+        self.loop.run_to_quiescence()
         return final
 
     def discover_and_fetch(self, query, top_k: int = 3):
-        """Query cloud (cards only), then fetch blob from the winning vault."""
-        results = self.discovery.query(query, top_k=top_k)
-        if not results:
-            return None
-        best = results[0]
-        params, card = self.discovery.fetch(best)
-        nbytes = self.edges[best.vault_id].vault.blob_size(card.model_id)
-        self.traffic.downloads_bytes += nbytes
-        self.traffic.total_time_s += DEVICE_TO_EDGE.transfer_time(nbytes)
-        return params, card, best
+        """Schedule discover+fetch and run the event loop to quiescence."""
+        box = {}
+
+        def done(hit, now):
+            box["hit"] = hit
+
+        self.discover_and_fetch_async(query, done, top_k=top_k)
+        self.loop.run_to_quiescence()
+        return box.get("hit")
+
+    # -- reporting -----------------------------------------------------------
+    def timeline(self, last: Optional[int] = None):
+        """The fired-event log (simulated-time timeline) as strings."""
+        log = self.loop.log if last is None else self.loop.log[-last:]
+        return [str(e) for e in log]

@@ -8,14 +8,30 @@ how the design sidesteps client heterogeneity.
 
 Ranking = hard-constraint filter + weighted score over
 (requested-class accuracies, overall accuracy, freshness, model size).
+
+Scale: cards are held in a per-task inverted index whose buckets are kept
+sorted by descending overall accuracy.  A query therefore (a) only touches
+its task's bucket, (b) stops at the first card below ``min_accuracy``, and
+(c) stops as soon as the current top-k floor exceeds the best score any
+remaining (lower-accuracy) card could still reach — so query cost is
+bounded by the qualifying prefix, not the registry size.  Freshness uses an
+injected simulated clock (see :mod:`repro.runtime.clock`), never
+``time.time()``.
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
-import time
-from typing import Dict, List, Optional, Tuple
+import heapq
+from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core.vault import ModelCard, ModelVault
+from repro.runtime.clock import SimClock
+
+# Score decomposition bounds used for candidate pruning (see _score):
+# beyond the 2*accuracy term, a card can gain at most 1.0 per requested
+# class plus the 0.1 freshness cap; the size penalty only lowers the score.
+_FRESHNESS_CAP = 0.1
 
 
 @dataclasses.dataclass
@@ -38,20 +54,38 @@ class DiscoveryResult:
 class DiscoveryService:
     """Registry + matchmaking over model cards (not blobs — cards only)."""
 
-    def __init__(self):
-        self._index: Dict[str, Tuple[ModelCard, str]] = {}
+    def __init__(self, clock: Optional[Callable[[], float]] = None):
+        self._cards: Dict[str, Tuple[ModelCard, str]] = {}
+        # task -> list of (-accuracy, model_id), kept sorted (= accuracy desc)
+        self._by_task: Dict[str, List[Tuple[float, str]]] = {}
         self._vaults: Dict[str, ModelVault] = {}
-        self.stats = {"queries": 0, "hits": 0, "fetches": 0}
+        self._clock = clock if clock is not None else SimClock()
+        self.stats = {"queries": 0, "hits": 0, "fetches": 0, "scanned": 0}
+
+    def __len__(self) -> int:
+        return len(self._cards)
 
     def attach_vault(self, vault: ModelVault):
         self._vaults[vault.vault_id] = vault
         for card in vault.cards():
-            self._index[card.model_id] = (card, vault.vault_id)
+            self.register(card, vault.vault_id)
+
+    @staticmethod
+    def _acc_key(card: ModelCard) -> Tuple[float, str]:
+        return (-card.metrics.get("accuracy", 0.0), card.model_id)
 
     def register(self, card: ModelCard, vault_id: str):
         if vault_id not in self._vaults:
             raise KeyError(f"unknown vault {vault_id}")
-        self._index[card.model_id] = (card, vault_id)
+        prev = self._cards.get(card.model_id)
+        if prev is not None:
+            old_bucket = self._by_task[prev[0].task]
+            old_key = self._acc_key(prev[0])
+            i = bisect.bisect_left(old_bucket, old_key)
+            if i < len(old_bucket) and old_bucket[i] == old_key:
+                old_bucket.pop(i)
+        self._cards[card.model_id] = (card, vault_id)
+        bisect.insort(self._by_task.setdefault(card.task, []), self._acc_key(card))
 
     # -- matching -----------------------------------------------------------
     def _satisfies(self, card: ModelCard, q: ModelQuery) -> bool:
@@ -79,23 +113,40 @@ class DiscoveryService:
         for cls in q.min_class_accuracy:
             score += per_class.get(int(cls), 0.0)
         # freshness bonus (decays over ~1 day of simulated time)
-        age = max(time.time() - card.created_at, 0.0)
-        score += 0.1 * (1.0 / (1.0 + age / 86400))
+        age = max(self._clock() - card.created_at, 0.0)
+        score += _FRESHNESS_CAP * (1.0 / (1.0 + age / 86400))
         # prefer smaller models at equal quality (cheaper to transfer/distill)
         score -= 1e-9 * card.num_params
         return score
 
     def query(self, q: ModelQuery, top_k: int = 3) -> List[DiscoveryResult]:
         self.stats["queries"] += 1
-        cands = [
-            DiscoveryResult(card, vid, self._score(card, q))
-            for card, vid in self._index.values()
-            if self._satisfies(card, q)
-        ]
-        cands.sort(key=lambda r: r.score, reverse=True)
-        if cands:
+        if top_k <= 0:
+            return []
+        bonus_cap = len(q.min_class_accuracy) * 1.0 + _FRESHNESS_CAP
+        # min-heap of (score, -order) keeps the k best seen so far; -order
+        # makes earlier-scanned cards win score ties (matching stable sort).
+        best: List[Tuple[float, int, DiscoveryResult]] = []
+        for order, (neg_acc, model_id) in enumerate(self._by_task.get(q.task, ())):
+            acc = -neg_acc
+            if acc < q.min_accuracy:
+                break  # accuracy-sorted: no later card can qualify
+            if len(best) == top_k and best[0][0] >= 2.0 * acc + bonus_cap:
+                break  # top-k floor already beats any remaining card's bound
+            self.stats["scanned"] += 1
+            card, vault_id = self._cards[model_id]
+            if not self._satisfies(card, q):
+                continue
+            res = DiscoveryResult(card, vault_id, self._score(card, q))
+            item = (res.score, -order, res)
+            if len(best) < top_k:
+                heapq.heappush(best, item)
+            elif item > best[0]:
+                heapq.heapreplace(best, item)
+        out = [r for _, _, r in sorted(best, key=lambda e: (-e[0], -e[1]))]
+        if out:
             self.stats["hits"] += 1
-        return cands[:top_k]
+        return out
 
     def fetch(self, result: DiscoveryResult):
         """Fetch + integrity-verify the winning model from its vault."""

@@ -39,7 +39,7 @@ class LearningParty:
         data,  # ClientDataset
         task: str,
         continuum: Optional[Continuum] = None,
-        cfg: LearnerConfig = LearnerConfig(),
+        cfg: Optional[LearnerConfig] = None,
         seed: int = 0,
     ):
         self.party_id = party_id
@@ -47,7 +47,10 @@ class LearningParty:
         self.data = data
         self.task = task
         self.continuum = continuum
-        self.cfg = cfg
+        # construct per instance: a shared default LearnerConfig would leak
+        # mutations between parties
+        self.cfg = cfg if cfg is not None else LearnerConfig()
+        cfg = self.cfg
         self.seed = seed
         import jax
 
@@ -71,14 +74,13 @@ class LearningParty:
         )
 
     # -- MDD operations -------------------------------------------------------
-    def publish(self, eval_x, eval_y) -> ModelCard:
-        """Evaluate on the service's public split, then publish to the vault."""
-        assert self.continuum is not None
+    def make_card(self, eval_x, eval_y) -> ModelCard:
+        """Evaluate on the service's public split and build the quality card."""
         metrics = evaluate_classifier(
             self.model.apply, self.params, eval_x, eval_y,
             num_classes=self.model.num_classes,
         )
-        card = ModelCard(
+        return ModelCard(
             model_id=f"{self.party_id}/{self.model.name}",
             task=self.task,
             arch=self.model.name,
@@ -86,27 +88,27 @@ class LearningParty:
             num_params=count_params(self.params),
             metrics=metrics,
         )
+
+    def publish(self, eval_x, eval_y) -> ModelCard:
+        """Evaluate on the service's public split, then publish to the vault."""
+        assert self.continuum is not None
+        card = self.make_card(eval_x, eval_y)
         return self.continuum.publish(self.party_id, self.params, card)
 
-    def improve(
-        self,
-        query: Optional[ModelQuery] = None,
-        epochs: int = 5,
-        teacher_apply=None,
-    ):
-        """Discover a better model and distill it into the local model.
-
-        Returns (found: bool, history).  The party's own models are excluded
-        from discovery, and the teacher architecture need not match.
-        """
+    def publish_async(self, eval_x, eval_y, on_done=None) -> ModelCard:
+        """Event-scheduled publish; card discoverable at transfer completion."""
         assert self.continuum is not None
-        q = query or ModelQuery(
+        card = self.make_card(eval_x, eval_y)
+        return self.continuum.publish_async(
+            self.party_id, self.params, card, on_done=on_done
+        )
+
+    def _default_query(self) -> ModelQuery:
+        return ModelQuery(
             task=self.task, min_accuracy=0.0, exclude_owners=(self.party_id,)
         )
-        hit = self.continuum.discover_and_fetch(q)
-        if hit is None:
-            return False, []
-        teacher_params, teacher_card, _ = hit
+
+    def _distill_from(self, teacher_params, epochs: int, teacher_apply=None):
         t_apply = teacher_apply or self.model.apply  # same-arch default
         self.params, history = distill(
             self.model.apply,
@@ -122,4 +124,50 @@ class LearningParty:
             temperature=self.cfg.distill_temperature,
             seed=self.seed,
         )
-        return True, history
+        return history
+
+    def improve(
+        self,
+        query: Optional[ModelQuery] = None,
+        epochs: int = 5,
+        teacher_apply=None,
+    ):
+        """Discover a better model and distill it into the local model.
+
+        Returns (found: bool, history).  The party's own models are excluded
+        from discovery, and the teacher architecture need not match.
+        """
+        assert self.continuum is not None
+        hit = self.continuum.discover_and_fetch(query or self._default_query())
+        if hit is None:
+            return False, []
+        teacher_params, _, _ = hit
+        return True, self._distill_from(teacher_params, epochs, teacher_apply)
+
+    def improve_async(
+        self,
+        query: Optional[ModelQuery] = None,
+        epochs: int = 5,
+        teacher_apply=None,
+        on_done=None,
+    ):
+        """Event-scheduled improve: the distill runs when the fetch lands.
+
+        ``on_done(found: bool, sim_time)`` fires after distillation (or a
+        discovery miss).
+        """
+        assert self.continuum is not None
+
+        def fetched(hit, now):
+            if hit is None:
+                if on_done is not None:
+                    on_done(False, now)
+                return
+            teacher_params, _, _ = hit
+            self._distill_from(teacher_params, epochs, teacher_apply)
+            if on_done is not None:
+                on_done(True, now)
+
+        self.continuum.discover_and_fetch_async(
+            query or self._default_query(), fetched
+        )

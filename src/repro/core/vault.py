@@ -11,10 +11,10 @@ import dataclasses
 import hashlib
 import hmac
 import json
-import time
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional
 
 from repro.checkpoint.serde import params_from_bytes, params_to_bytes
+from repro.runtime.clock import SimClock
 
 
 @dataclasses.dataclass
@@ -54,10 +54,18 @@ class VaultEntry:
 class ModelVault:
     """One secure model store (paper: hosted by an edge server)."""
 
-    def __init__(self, vault_id: str, secret_key: bytes = b"vault-secret"):
+    def __init__(
+        self,
+        vault_id: str,
+        secret_key: bytes = b"vault-secret",
+        clock: Optional[Callable[[], float]] = None,
+    ):
         self.vault_id = vault_id
         self._key = secret_key
         self._entries: Dict[str, VaultEntry] = {}
+        # `created_at` comes from the injected simulated clock, never the wall
+        # clock, so vault state is a pure function of the event schedule.
+        self._clock = clock if clock is not None else SimClock()
 
     # -- internals ---------------------------------------------------------
     def _sign(self, blob: bytes, card_json: str) -> bytes:
@@ -77,7 +85,7 @@ class ModelVault:
         card = dataclasses.replace(
             card,
             content_hash=self.content_hash(blob),
-            created_at=time.time(),
+            created_at=float(self._clock()),
             version=(prev.card.version + 1) if prev else 1,
         )
         sig = self._sign(blob, card.to_json())

@@ -42,6 +42,7 @@ class RoundStats:
     selected: int
     survived: int
     mean_loss: float
+    round_time_s: float = 0.0  # simulated duration (slowest survivor, capped)
 
 
 class FLServer:
@@ -66,43 +67,64 @@ class FLServer:
     def _model_mb(self, params) -> float:
         return count_params(params) * 4 / 1e6
 
-    def run(self, init_params, progress: Optional[Callable] = None):
-        params = init_params
+    def run_round(self, params, rnd: int):
+        """One FedAvg round: select, simulate stragglers/dropouts, aggregate.
+
+        Returns (params, RoundStats); the stats carry the simulated round
+        duration so an event-loop actor can advance the shared clock by it.
+        Appends to ``self.history``.
+        """
         ids = self.dataset.client_ids()
         model_mb = self._model_mb(params)
-        for rnd in range(self.cfg.rounds):
-            avail_mask = self.trace.available(rnd)
-            available = [i for i, ok in zip(ids, avail_mask) if ok]
-            if not available:
-                self.history.append(RoundStats(rnd, 0, 0, float("nan")))
-                continue
-            selected = random_selection(
-                available, self.cfg.clients_per_round, self.rng
-            )
-            updates, weights, losses = [], [], []
-            for cid in selected:
-                sysc = self.sys_by_id[cid]
-                data = self.dataset.clients[cid]
-                steps_per_epoch = max(len(data.y_train) // self.cfg.batch_size, 1)
-                local_steps = steps_per_epoch * self.cfg.local_epochs
-                # straggler / dropout simulation
-                if sysc.round_time(local_steps, model_mb) > self.cfg.round_deadline:
-                    continue
-                if self.rng.random() < sysc.dropout_prob:
-                    continue
-                new_params, loss, _ = self.trainer.train(
-                    params, data.x_train, data.y_train, epochs=self.cfg.local_epochs
-                )
-                updates.append(new_params)
-                weights.append(data.num_train)
-                losses.append(loss)
-            if updates:
-                params = fedavg(updates, weights)
-            stats = RoundStats(
-                rnd, len(selected), len(updates),
-                float(np.mean(losses)) if losses else float("nan"),
-            )
+        avail_mask = self.trace.available(rnd)
+        available = [i for i, ok in zip(ids, avail_mask) if ok]
+        if not available:
+            stats = RoundStats(rnd, 0, 0, float("nan"),
+                               self.cfg.round_deadline)
             self.history.append(stats)
+            return params, stats
+        selected = random_selection(
+            available, self.cfg.clients_per_round, self.rng
+        )
+        updates, weights, losses = [], [], []
+        slowest = 0.0
+        for cid in selected:
+            sysc = self.sys_by_id[cid]
+            data = self.dataset.clients[cid]
+            steps_per_epoch = max(len(data.y_train) // self.cfg.batch_size, 1)
+            local_steps = steps_per_epoch * self.cfg.local_epochs
+            # straggler / dropout simulation
+            client_time = sysc.round_time(local_steps, model_mb)
+            if client_time > self.cfg.round_deadline:
+                continue
+            if self.rng.random() < sysc.dropout_prob:
+                continue
+            new_params, loss, _ = self.trainer.train(
+                params, data.x_train, data.y_train, epochs=self.cfg.local_epochs
+            )
+            updates.append(new_params)
+            weights.append(data.num_train)
+            losses.append(loss)
+            slowest = max(slowest, client_time)
+        if updates:
+            params = fedavg(updates, weights)
+        # a synchronous server only learns a selected client is lost when the
+        # deadline expires, so any straggler/dropout pins the round duration
+        # to the deadline
+        round_time = (slowest if len(updates) == len(selected)
+                      else self.cfg.round_deadline)
+        stats = RoundStats(
+            rnd, len(selected), len(updates),
+            float(np.mean(losses)) if losses else float("nan"),
+            round_time,
+        )
+        self.history.append(stats)
+        return params, stats
+
+    def run(self, init_params, progress: Optional[Callable] = None):
+        params = init_params
+        for rnd in range(self.cfg.rounds):
+            params, stats = self.run_round(params, rnd)
             if progress:
                 progress(stats)
         return params

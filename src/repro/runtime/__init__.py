@@ -1,0 +1,33 @@
+"""Discrete-event continuum runtime.
+
+Simulated clock + deterministic event loop + actors: the layer that lets
+the MDD stack run thousands of concurrently-acting parties in reproducible
+simulated time (see ROADMAP "Event-driven continuum runtime").
+
+``actors``/``population`` are re-exported lazily: they import the core MDD
+stack, which itself imports :mod:`repro.runtime.clock`, so loading them at
+package-init time would be circular.
+"""
+from repro.runtime.clock import SimClock
+from repro.runtime.loop import Actor, EventLoop, EventRecord
+
+__all__ = [
+    "SimClock", "EventLoop", "EventRecord", "Actor",
+    "MDDPartyActor", "FLServerActor", "CycleRecord",
+    "PartyPopulation",
+]
+
+_LAZY = {
+    "MDDPartyActor": "repro.runtime.actors",
+    "FLServerActor": "repro.runtime.actors",
+    "CycleRecord": "repro.runtime.actors",
+    "PartyPopulation": "repro.runtime.population",
+}
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        import importlib
+
+        return getattr(importlib.import_module(_LAZY[name]), name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

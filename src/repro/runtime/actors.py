@@ -1,0 +1,174 @@
+"""Actors that drive the MDD protocol on the shared simulated clock.
+
+The paper's asynchrony claim — "a party never waits on any other party" —
+is exercised here literally: every party is an independent actor whose
+train -> publish -> query -> distill cycle is a chain of events interleaved
+with every other actor's chain on one :class:`~repro.runtime.loop.EventLoop`.
+Churn comes from :mod:`repro.heterogeneity` availability traces: an actor
+that wakes while its trace says "offline" goes back to sleep until the next
+slot, exactly like a device that left WiFi/charging.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional
+
+import numpy as np
+
+from repro.core.learner import LearningParty
+from repro.runtime.loop import EventLoop
+
+# reference device: simulated seconds of on-device compute per local step
+STEP_TIME_S = 0.05
+
+
+@dataclasses.dataclass
+class CycleRecord:
+    """One completed MDD cycle of one party, in simulated time."""
+
+    party_id: str
+    cycle: int
+    t_start: float
+    t_end: float
+    found_teacher: bool
+
+
+class MDDPartyActor:
+    """Drives one :class:`LearningParty` through MDD cycles as events.
+
+    Phases per cycle: local training (duration = steps * STEP_TIME_S /
+    compute_speed), then an event-scheduled publish (device->edge->cloud
+    transfers), then an event-scheduled discover+fetch+distill.  While a
+    transfer is in flight the actor is parked — it holds no turn on the
+    loop, so thousands of parties interleave freely.
+    """
+
+    def __init__(
+        self,
+        party: LearningParty,
+        eval_x,
+        eval_y,
+        *,
+        cycles: int = 3,
+        local_epochs: int = 1,
+        distill_epochs: int = 5,
+        compute_speed: float = 1.0,
+        availability: Optional[np.ndarray] = None,  # bool per slot
+        slot_len_s: float = 60.0,
+        start_jitter_s: float = 0.0,
+        on_cycle: Optional[Callable[[CycleRecord], None]] = None,
+    ):
+        self.party = party
+        self.eval_x, self.eval_y = eval_x, eval_y
+        self.cycles = cycles
+        self.local_epochs = local_epochs
+        self.distill_epochs = distill_epochs
+        self.compute_speed = max(compute_speed, 1e-3)
+        self.availability = availability
+        self.slot_len_s = slot_len_s
+        self.start_jitter_s = start_jitter_s
+        self.on_cycle = on_cycle
+        self.name = f"party:{party.party_id}"
+        self.records: List[CycleRecord] = []
+        self._loop: Optional[EventLoop] = None
+        self._cycle = 0
+        self._phase = "train"
+        self._t_cycle_start = 0.0
+        self.offline_waits = 0
+
+    # -- scheduling glue -----------------------------------------------------
+    def start(self, loop: EventLoop, at: float = 0.0):
+        self._loop = loop
+        loop.call_at(at + self.start_jitter_s, self._wake, label=self.name)
+
+    def _sleep(self, delay: float):
+        self._loop.call_after(delay, self._wake, label=self.name)
+
+    def _available(self, now: float) -> bool:
+        if self.availability is None:
+            return True
+        slot = int(now // self.slot_len_s) % len(self.availability)
+        return bool(self.availability[slot])
+
+    # -- the state machine ---------------------------------------------------
+    def on_wake(self, now: float) -> Optional[float]:
+        """Actor-protocol entry point; returns the next wake delay."""
+        if self._cycle >= self.cycles:
+            return None
+        if not self._available(now):
+            self.offline_waits += 1
+            return self.slot_len_s  # device churned away; try next slot
+        if self._phase == "train":
+            self._t_cycle_start = now
+            _, steps = self.party.train_local(epochs=self.local_epochs)
+            self._phase = "publish"
+            return max(steps, 1) * STEP_TIME_S / self.compute_speed
+        if self._phase == "publish":
+            self._phase = "improve"
+            self.party.publish_async(self.eval_x, self.eval_y,
+                                     on_done=self._published)
+            return None  # parked until the card lands in the cloud index
+        if self._phase == "improve":
+            self._phase = "train"
+            self.party.improve_async(epochs=self.distill_epochs,
+                                     on_done=self._improved)
+            return None  # parked until fetch + distill complete
+        raise AssertionError(f"unknown phase {self._phase}")
+
+    def _wake(self, now: float):
+        delay = self.on_wake(now)
+        if delay is not None:
+            self._sleep(delay)
+
+    def _published(self, card, now: float):
+        self._sleep(0.0)
+
+    def _improved(self, found: bool, now: float):
+        self.records.append(CycleRecord(
+            self.party.party_id, self._cycle, self._t_cycle_start, now, found
+        ))
+        if self.on_cycle is not None:
+            self.on_cycle(self.records[-1])
+        self._cycle += 1
+        self._sleep(0.0)
+
+
+class FLServerActor:
+    """Runs an :class:`~repro.federated.server.FLServer` round-by-round.
+
+    Each round is one event; the clock advances by the round's simulated
+    duration (slowest surviving client, or the deadline), so FL training
+    interleaves with MDD party activity on the same timeline.  Optionally
+    publishes the final global model into a continuum when done.
+    """
+
+    def __init__(
+        self,
+        server,
+        init_params,
+        *,
+        publish_to=None,  # (continuum, party_id, card_fn) or None
+        on_done: Optional[Callable] = None,
+    ):
+        self.server = server
+        self.params = init_params
+        self.publish_to = publish_to
+        self.on_done = on_done
+        self.name = "fl-server"
+        self._rnd = 0
+
+    def start(self, loop: EventLoop, at: float = 0.0):
+        loop.add_actor(self, start_at=at, label=self.name)
+
+    def on_wake(self, now: float) -> Optional[float]:
+        if self._rnd >= self.server.cfg.rounds:
+            if self.publish_to is not None:
+                continuum, party_id, card_fn = self.publish_to
+                continuum.publish_async(party_id, self.params,
+                                        card_fn(self.params))
+            if self.on_done is not None:
+                self.on_done(self.params, now)
+            return None
+        self.params, stats = self.server.run_round(self.params, self._rnd)
+        self._rnd += 1
+        return max(stats.round_time_s, 1e-3)

@@ -1,0 +1,109 @@
+"""Deterministic discrete-event loop driving the continuum.
+
+Events are ``(time, seq, callback)`` entries in a binary heap; ``seq`` is a
+monotone counter so same-time events fire in schedule order, which makes the
+whole simulation a pure function of its inputs (same seeds -> identical
+event log).  Actors are scheduled objects that get woken at a simulated
+time, do work (publish, query, train), and return when they want to wake
+next.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Any, Callable, List, Optional, Protocol, runtime_checkable
+
+from repro.runtime.clock import SimClock
+
+
+@runtime_checkable
+class Actor(Protocol):
+    """Anything the event loop can wake.
+
+    ``on_wake(now)`` performs the actor's next action and returns the delay
+    (seconds of simulated time) until it wants to be woken again, or ``None``
+    when the actor is finished.
+    """
+
+    def on_wake(self, now: float) -> Optional[float]: ...
+
+
+@dataclasses.dataclass(frozen=True)
+class EventRecord:
+    """One fired event, kept in the loop's log for timelines/debugging."""
+
+    time: float
+    seq: int
+    label: str
+
+    def __str__(self) -> str:
+        return f"[t={self.time:10.3f}s #{self.seq:06d}] {self.label}"
+
+
+class EventLoop:
+    """Priority-queue event loop over a :class:`SimClock`."""
+
+    def __init__(self, clock: Optional[SimClock] = None, keep_log: bool = True):
+        self.clock = clock or SimClock()
+        self._heap: List = []  # (time, seq, label, callback)
+        self._seq = 0
+        self.keep_log = keep_log
+        self.log: List[EventRecord] = []
+        self.events_processed = 0
+
+    # -- scheduling ----------------------------------------------------------
+    def call_at(self, t: float, fn: Callable[[float], Any], label: str = "") -> None:
+        if t < self.clock.now():
+            raise ValueError(
+                f"cannot schedule in the past: {t} < {self.clock.now()}"
+            )
+        heapq.heappush(self._heap, (t, self._seq, label, fn))
+        self._seq += 1
+
+    def call_after(self, delay: float, fn: Callable[[float], Any],
+                   label: str = "") -> None:
+        self.call_at(self.clock.now() + max(delay, 0.0), fn, label)
+
+    def add_actor(self, actor: Actor, start_at: float = 0.0,
+                  label: str = "") -> None:
+        """Schedule an actor's wake cycle starting at ``start_at``."""
+        name = label or getattr(actor, "name", type(actor).__name__)
+
+        def wake(now: float):
+            delay = actor.on_wake(now)
+            if delay is not None:
+                self.call_after(delay, wake, label=name)
+
+        self.call_at(start_at, wake, label=name)
+
+    # -- running -------------------------------------------------------------
+    def step(self) -> bool:
+        """Fire the single next event. Returns False when the queue is empty."""
+        if not self._heap:
+            return False
+        t, seq, label, fn = heapq.heappop(self._heap)
+        self.clock.advance_to(t)
+        if self.keep_log:
+            self.log.append(EventRecord(t, seq, label))
+        self.events_processed += 1
+        fn(t)
+        return True
+
+    def run_until(self, t_end: float) -> None:
+        """Run every event scheduled at or before ``t_end``."""
+        while self._heap and self._heap[0][0] <= t_end:
+            self.step()
+        if self.clock.now() < t_end:
+            self.clock.advance_to(t_end)
+
+    def run_to_quiescence(self, max_events: Optional[int] = None) -> int:
+        """Drain the queue; returns the number of events fired."""
+        fired = 0
+        while self.step():
+            fired += 1
+            if max_events is not None and fired >= max_events:
+                break
+        return fired
+
+    def __len__(self) -> int:
+        return len(self._heap)

@@ -11,6 +11,9 @@ from repro.launch.steps import make_serve_step, make_train_step
 from repro.models import build_model
 from repro.models.config import INPUT_SHAPES, ShapeConfig
 
+# minutes of per-arch compilation on CPU; excluded from the fast tier-1 loop
+pytestmark = pytest.mark.slow
+
 
 def _batch(cfg, B, S, key):
     batch = {

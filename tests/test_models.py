@@ -12,6 +12,9 @@ from repro.models import build_model
 from repro.models import ssm as ssm_lib
 from repro.models.config import ModelConfig
 
+# minutes of model compilation on CPU; excluded from the fast tier-1 loop
+pytestmark = pytest.mark.slow
+
 
 def test_ssd_chunked_matches_sequential():
     """Mamba2 chunked (matmul-form) scan == sequential recurrence."""
