@@ -1,0 +1,22 @@
+"""Shared helper for benchmark JSON output (the CI ``BENCH_ci.json``).
+
+Each benchmark merges its own section into one results file so the CI
+``bench-smoke`` job can run several benchmarks back-to-back and upload a
+single artifact checked by ``benchmarks/check_thresholds.py``.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+
+def merge_json_section(path: str, section: str, payload: dict) -> None:
+    """Read-modify-write ``path``, replacing its ``section`` key."""
+    results = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            results = json.load(f)
+    results[section] = payload
+    with open(path, "w") as f:
+        json.dump(results, f, indent=2, sort_keys=True)
+        f.write("\n")

@@ -1,0 +1,69 @@
+"""Compare benchmark results against checked-in CI thresholds.
+
+Usage: python benchmarks/check_thresholds.py BENCH_ci.json \
+           benchmarks/ci_thresholds.json
+
+The thresholds file maps dotted key paths into the results JSON to
+reference values.  ``max`` entries fail when the measured value exceeds
+``regression_factor`` × reference (catching e.g. a >2x wall-time
+regression on the CI smoke scale); ``min`` entries fail when the measured
+value drops below the reference (catching e.g. the exchange loop silently
+losing its cross-architecture distillations).  Missing keys fail too — a
+benchmark that stops reporting a number is a regression, not a pass.
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def lookup(tree, dotted):
+    node = tree
+    for part in dotted.split("."):
+        if not isinstance(node, dict) or part not in node:
+            return None
+        node = node[part]
+    return node
+
+
+def main(argv=None):
+    argv = argv if argv is not None else sys.argv[1:]
+    if len(argv) != 2:
+        print(__doc__)
+        return 2
+    with open(argv[0]) as f:
+        results = json.load(f)
+    with open(argv[1]) as f:
+        spec = json.load(f)
+
+    factor = float(spec.get("regression_factor", 2.0))
+    failures = []
+    for key, limit in sorted(spec.get("max", {}).items()):
+        got = lookup(results, key)
+        if got is None:
+            failures.append(f"{key}: missing from results")
+        elif float(got) > factor * float(limit):
+            failures.append(
+                f"{key}: {got:.3f} > {factor:g}x threshold {limit:.3f}"
+            )
+        else:
+            print(f"ok  {key}: {float(got):.3f} <= {factor:g}x {limit:.3f}")
+    for key, floor in sorted(spec.get("min", {}).items()):
+        got = lookup(results, key)
+        if got is None:
+            failures.append(f"{key}: missing from results")
+        elif float(got) < float(floor):
+            failures.append(f"{key}: {got:.3f} < floor {floor:.3f}")
+        else:
+            print(f"ok  {key}: {float(got):.3f} >= {floor:.3f}")
+
+    if failures:
+        for msg in failures:
+            print(f"FAIL {msg}", file=sys.stderr)
+        return 1
+    print("all benchmark thresholds passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -22,6 +22,11 @@ import time
 import jax
 import numpy as np
 
+try:
+    from benchmarks.bench_json import merge_json_section
+except ImportError:  # run as a script: benchmarks/ itself is on sys.path
+    from bench_json import merge_json_section
+
 from repro.core.continuum import Continuum
 from repro.core.discovery import DiscoveryService, ModelQuery
 from repro.core.vault import ModelCard, ModelVault
@@ -171,6 +176,8 @@ def main(argv=None):
     ap.add_argument("--cycles", type=int, default=3)
     ap.add_argument("--edges", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", type=str, default=None,
+                    help="merge headline numbers into this JSON file")
     args = ap.parse_args(argv)
     if args.parties < 1 or args.cycles < 1 or args.edges < 1:
         ap.error("--parties, --cycles, and --edges must all be >= 1")
@@ -194,6 +201,16 @@ def main(argv=None):
               f"{res['wall_s']:.1f}s (<60s target)")
     else:
         print(f"# WARNING: wall time {res['wall_s']:.1f}s exceeds 60s target")
+
+    if args.json:
+        merge_json_section(args.json, "continuum_scale", {
+            "wall_s": res["wall_s"],
+            "parties": args.parties,
+            "cycles": args.cycles,
+            "events": res["events"],
+            "cards": res["cards"],
+            "scanned_per_query": res["scanned_per_query"],
+        })
 
 
 if __name__ == "__main__":

@@ -51,7 +51,7 @@ def bench_kd_loss():
         s = jax.random.normal(key, (N, V), jnp.float32)
         t = jax.random.normal(jax.random.PRNGKey(2), (N, V), jnp.float32)
         lab = jax.random.randint(key, (N,), 0, V)
-        ref = jax.jit(lambda s, t, l: kd_loss_ref(s, t, l))
+        ref = jax.jit(lambda s, t, lab: kd_loss_ref(s, t, lab))
         us = _time(ref, s, t, lab)
         out = kd_loss(s, t, lab, block_n=128, block_v=2048, interpret=True)
         err = float(jnp.max(jnp.abs(out - ref(s, t, lab))))

@@ -21,7 +21,7 @@ from __future__ import annotations
 import json
 from pathlib import Path
 
-from repro.configs import ARCH_IDS, get_config
+from repro.configs import get_config
 from repro.launch.steps import resolve_config
 from repro.models.config import INPUT_SHAPES
 

@@ -8,6 +8,7 @@ output is both human-skimmable and machine-parsable.
   kernels         — Pallas kernel validation + reference timings
   traffic         — MDD vs FL communication cost (continuum model)
   continuum_scale — event-driven runtime: 10k parties, sublinear discovery
+  exchange_scale  — incentive-gated model-exchange economy, hetero cohorts
   roofline        — three-term roofline from dry-run artifacts (if present)
 
 Usage: python -m benchmarks.run [sections...]
@@ -76,6 +77,13 @@ def run_continuum_scale():
     cmain([])
 
 
+def run_exchange_scale():
+    """Incentive-gated exchange cycles over heterogeneous 10k-party cohorts."""
+    from benchmarks.exchange_scale import main as emain
+
+    emain([])
+
+
 def run_kernels():
     from benchmarks.kernels_bench import main as kmain
 
@@ -93,7 +101,8 @@ def run_roofline():
 
 def main():
     which = set(sys.argv[1:]) or {"fig3", "figs456", "kernels", "traffic",
-                                  "continuum_scale", "roofline"}
+                                  "continuum_scale", "exchange_scale",
+                                  "roofline"}
     print("name,us_per_call,derived")
     if "fig3" in which:
         section("Fig.3 heterogeneity impact")
@@ -101,6 +110,9 @@ def main():
     if "continuum_scale" in which:
         section("Continuum scale (event-driven runtime)")
         run_continuum_scale()
+    if "exchange_scale" in which:
+        section("Exchange economy (incentive-gated, heterogeneous cohorts)")
+        run_exchange_scale()
     if "figs456" in which:
         section("Figs.4-6 IND vs FL vs MDD")
         run_figs456()

@@ -51,7 +51,8 @@ def maybe_scan(body, init, xs, length=None):
     for s in slices:
         carry, y = body(carry, s)
         ys.append(y)
-    if ys and any(l is not None for l in jax.tree_util.tree_leaves(ys[0])):
+    if ys and any(leaf is not None
+                  for leaf in jax.tree_util.tree_leaves(ys[0])):
         stacked = jax.tree_util.tree_map(
             lambda *a: jax.numpy.stack(a, axis=0), *ys
         )

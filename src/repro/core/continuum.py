@@ -28,6 +28,7 @@ import hashlib
 from typing import Callable, Dict, List, Optional
 
 from repro.core.discovery import DiscoveryService
+from repro.core.incentives import IncentiveLedger
 from repro.core.vault import ModelVault
 from repro.runtime.clock import SimClock
 from repro.runtime.loop import EventLoop
@@ -77,10 +78,19 @@ class Continuum:
 
     All state shares one simulated clock; pass ``loop`` (or ``clock``) to
     embed the continuum in a larger simulation, or let it create its own.
+
+    Pass ``ledger`` to make the exchange an economy (paper §IV incentive
+    mechanisms): publishes mint rewards proportional to the card's measured
+    accuracy, and fetches are credit-gated — a requester that cannot pay is
+    refused before any blob moves, and each paid fetch transfers credits
+    requester -> publisher (+ service fee -> the cloud operator account).
+    Without a ledger (or when callers omit ``requester``) behaviour is the
+    classic ungated exchange.
     """
 
     def __init__(self, clock: Optional[SimClock] = None,
-                 loop: Optional[EventLoop] = None):
+                 loop: Optional[EventLoop] = None,
+                 ledger: Optional[IncentiveLedger] = None):
         if loop is not None and clock is not None and loop.clock is not clock:
             raise ValueError("pass either clock or loop (or a loop built on "
                              "that clock); a loop brings its own clock")
@@ -90,6 +100,8 @@ class Continuum:
         self._edge_order: List[str] = []  # sorted edge ids, kept incrementally
         self.discovery = DiscoveryService(clock=self.clock)
         self.traffic = TrafficLog()
+        self.ledger = ledger
+        self.denied_fetches = 0
 
     def add_edge_server(self, server_id: str,
                         link_up: Optional[Link] = None) -> EdgeServer:
@@ -129,6 +141,10 @@ class Continuum:
 
         def card_arrived(now: float):
             self.discovery.register(final, edge.server_id)
+            if self.ledger is not None:
+                self.ledger.on_publish(
+                    party_id, float(final.metrics.get("accuracy", 0.0))
+                )
             if on_done is not None:
                 on_done(final, now)
 
@@ -141,20 +157,40 @@ class Continuum:
         return final
 
     def discover_and_fetch_async(self, query, on_done: Callable,
-                                 top_k: int = 3):
+                                 top_k: int = 3,
+                                 requester: Optional[str] = None,
+                                 on_denied: Optional[Callable] = None):
         """Query cloud (cards only) then fetch the winning blob, as events.
 
         ``on_done(hit, sim_time)`` receives ``(params, card, result)`` when
-        the download completes, or ``None`` if no card matched.
+        the download completes, or ``None`` if no card matched.  With a
+        ledger and a ``requester``, the fetch is credit-gated: an account
+        that cannot cover the fetch cost is refused before the query even
+        runs — ``on_denied(sim_time)`` fires if given, else
+        ``on_done(None, sim_time)`` — and a successful fetch pays the
+        publisher through the ledger.
         """
 
         def do_query(now: float):
+            gated = self.ledger is not None and requester is not None
+            if gated and not self.ledger.can_fetch(requester):
+                self.ledger.on_denied(requester)
+                self.denied_fetches += 1
+                if on_denied is not None:
+                    on_denied(now)
+                else:
+                    on_done(None, now)
+                return
             results = self.discovery.query(query, top_k=top_k)
             if not results:
                 on_done(None, now)
                 return
             best = results[0]
+            # fetch first, pay after: an integrity failure in the vault
+            # must not leave the requester charged for an undelivered model
             params, card = self.discovery.fetch(best)
+            if gated:
+                self.ledger.on_fetch(requester, best.card.owner)
             nbytes = self.edges[best.vault_id].vault.blob_size(card.model_id)
             dl_t = DEVICE_TO_EDGE.transfer_time(nbytes)
             self.traffic.downloads_bytes += nbytes
@@ -175,14 +211,16 @@ class Continuum:
         self.loop.run_to_quiescence()
         return final
 
-    def discover_and_fetch(self, query, top_k: int = 3):
+    def discover_and_fetch(self, query, top_k: int = 3,
+                           requester: Optional[str] = None):
         """Schedule discover+fetch and run the event loop to quiescence."""
         box = {}
 
         def done(hit, now):
             box["hit"] = hit
 
-        self.discover_and_fetch_async(query, done, top_k=top_k)
+        self.discover_and_fetch_async(query, done, top_k=top_k,
+                                      requester=requester)
         self.loop.run_to_quiescence()
         return box.get("hit")
 

@@ -42,6 +42,10 @@ class ModelQuery:
     arch: Optional[str] = None  # constrain architecture family if set
     max_params: Optional[int] = None
     exclude_owners: Tuple[str, ...] = ()
+    # cross-architecture distillation only needs the logit spaces to match
+    # (paper §IV); cards advertising a different logit_dim are filtered out.
+    # Cards that do not advertise one are assumed compatible.
+    logit_dim: Optional[int] = None
 
 
 @dataclasses.dataclass
@@ -104,6 +108,10 @@ class DiscoveryService:
                 return False
         if q.max_params is not None and card.num_params > q.max_params:
             return False
+        if q.logit_dim is not None:
+            card_dim = m.get("logit_dim")
+            if card_dim is not None and int(card_dim) != q.logit_dim:
+                return False
         return True
 
     def _score(self, card: ModelCard, q: ModelQuery) -> float:

@@ -7,7 +7,7 @@ space must match), and ensembles of several discovered teachers.
 """
 from __future__ import annotations
 
-from typing import Callable, Optional, Sequence
+from typing import Callable, Sequence
 
 import jax
 import jax.numpy as jnp

@@ -3,50 +3,124 @@ incentive mechanisms (e.g., based on monetary income or mutual interest) to
 enable sharing of high-quality models in the network").
 
 Credit-based ledger: publishing earns credits proportional to model quality;
-every download pays the publisher; fetching costs the requester.  Parties
-with no credits can still bootstrap via a small stipend (cold-start).
+every download pays the publisher, minus a service fee that goes to the
+cloud operator's account; fetching costs the requester.  Parties with no
+credits can still bootstrap via a small stipend (cold-start).
+
+Conservation: credits enter the economy only by *minting* (cold-start
+stipends and publish rewards) and every fetch is a zero-sum transfer
+(requester -> publisher + operator), so at any instant
+
+    sum(balances) == total_minted
+
+``assert_conserved`` checks this invariant; the runtime exchange loop and
+the scale benchmark call it every cycle.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Dict
 
+# the cloud operator's account: collects the service fee on every fetch
+OPERATOR = "cloud"
+
 
 @dataclasses.dataclass
 class LedgerEntry:
-    balance: float = 5.0  # cold-start stipend
+    balance: float = 0.0
     published: int = 0
     downloads_served: int = 0
     fetches: int = 0
+    denied: int = 0  # fetch attempts refused for insufficient credit
 
 
 class IncentiveLedger:
+    """Credit accounts for every party plus the cloud operator.
+
+    ``service_fee`` is the fraction of each fetch payment retained by the
+    operator (paper: the discovery/distillation service is a cloud service
+    someone has to run); the remainder goes to the model's publisher.
+    """
+
     def __init__(self, publish_reward: float = 1.0, fetch_cost: float = 2.0,
-                 quality_bonus: float = 5.0):
+                 quality_bonus: float = 5.0, stipend: float = 5.0,
+                 service_fee: float = 0.2, operator: str = OPERATOR):
         self.accounts: Dict[str, LedgerEntry] = {}
         self.publish_reward = publish_reward
         self.fetch_cost = fetch_cost
         self.quality_bonus = quality_bonus
+        self.stipend = stipend
+        self.service_fee = service_fee
+        self.operator = operator
+        self.minted = 0.0  # all credits ever created (stipends + rewards)
+        self._acct(operator)  # operator starts at zero, no stipend
 
     def _acct(self, party: str) -> LedgerEntry:
-        return self.accounts.setdefault(party, LedgerEntry())
+        acct = self.accounts.get(party)
+        if acct is None:
+            grant = 0.0 if party == self.operator else self.stipend
+            acct = self.accounts[party] = LedgerEntry(balance=grant)
+            self.minted += grant
+        return acct
 
     def on_publish(self, party: str, accuracy: float):
+        """Mint the publish reward + accuracy-proportional quality bonus."""
         acct = self._acct(party)
-        acct.balance += self.publish_reward + self.quality_bonus * max(accuracy, 0.0)
+        reward = self.publish_reward + self.quality_bonus * max(accuracy, 0.0)
+        acct.balance += reward
+        self.minted += reward
         acct.published += 1
 
     def can_fetch(self, party: str) -> bool:
         return self._acct(party).balance >= self.fetch_cost
 
+    def on_denied(self, party: str):
+        self._acct(party).denied += 1
+
     def on_fetch(self, requester: str, publisher: str):
+        """Zero-sum transfer: requester -> publisher, fee -> operator."""
         if not self.can_fetch(requester):
+            self._acct(requester).denied += 1
             raise PermissionError(f"{requester} has insufficient credits")
-        self._acct(requester).balance -= self.fetch_cost
-        self._acct(requester).fetches += 1
+        fee = self.fetch_cost * self.service_fee
+        req = self._acct(requester)
+        req.balance -= self.fetch_cost
+        req.fetches += 1
         pub = self._acct(publisher)
-        pub.balance += self.fetch_cost * 0.8  # 20% service fee to the cloud
+        pub.balance += self.fetch_cost - fee
         pub.downloads_served += 1
+        self._acct(self.operator).balance += fee
 
     def balance(self, party: str) -> float:
         return self._acct(party).balance
+
+    # -- conservation + reporting -------------------------------------------
+    def total_credits(self) -> float:
+        return sum(a.balance for a in self.accounts.values())
+
+    def assert_conserved(self, tol: float = 1e-6):
+        """Invariant: every credit in circulation was minted, none vanished."""
+        total = self.total_credits()
+        if abs(total - self.minted) > tol:
+            raise AssertionError(
+                f"credit conservation violated: sum(balances)={total!r} != "
+                f"minted={self.minted!r}"
+            )
+
+    def distribution(self) -> Dict[str, float]:
+        """Summary of party balances (operator excluded) for reports."""
+        bals = sorted(a.balance for p, a in self.accounts.items()
+                      if p != self.operator)
+        if not bals:
+            return {"parties": 0, "operator": self.balance(self.operator)}
+        n = len(bals)
+        return {
+            "parties": n,
+            "min": bals[0],
+            "median": bals[n // 2],
+            "max": bals[-1],
+            "mean": sum(bals) / n,
+            "operator": self.balance(self.operator),
+            "minted": self.minted,
+            "denied": sum(a.denied for a in self.accounts.values()),
+        }

@@ -138,7 +138,9 @@ class LearningParty:
         from discovery, and the teacher architecture need not match.
         """
         assert self.continuum is not None
-        hit = self.continuum.discover_and_fetch(query or self._default_query())
+        hit = self.continuum.discover_and_fetch(
+            query or self._default_query(), requester=self.party_id
+        )
         if hit is None:
             return False, []
         teacher_params, _, _ = hit
@@ -150,11 +152,14 @@ class LearningParty:
         epochs: int = 5,
         teacher_apply=None,
         on_done=None,
+        on_denied=None,
     ):
         """Event-scheduled improve: the distill runs when the fetch lands.
 
         ``on_done(found: bool, sim_time)`` fires after distillation (or a
-        discovery miss).
+        discovery miss).  When the continuum is incentive-gated and this
+        party cannot pay the fetch cost, ``on_denied(sim_time)`` fires
+        first (if given), then ``on_done(False, sim_time)``.
         """
         assert self.continuum is not None
 
@@ -168,6 +173,12 @@ class LearningParty:
             if on_done is not None:
                 on_done(True, now)
 
+        def denied(now):
+            if on_denied is not None:
+                on_denied(now)
+            fetched(None, now)
+
         self.continuum.discover_and_fetch_async(
-            query or self._default_query(), fetched
+            query or self._default_query(), fetched,
+            requester=self.party_id, on_denied=denied,
         )

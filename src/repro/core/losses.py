@@ -6,8 +6,11 @@ materializing full softmaxes over large vocabularies.
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def cross_entropy_loss(logits, labels, *, mask=None):
@@ -107,6 +110,60 @@ def distillation_loss_chunked(
     kl = (s_tt - s_ts) / l_t - (m_t + jnp.log(l_t)) + (m_s + jnp.log(l_s))
     ce_m, kl_m = jnp.mean(ce), jnp.mean(kl) * (t * t)
     return alpha * ce_m + (1.0 - alpha) * kl_m, {"ce": ce_m, "kd": kl_m}
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def fused_distillation_loss(student_logits, teacher_logits, labels,
+                            alpha=0.5, temperature=2.0):
+    """Mean distillation loss through the fused per-row kernel path.
+
+    Forward dispatches via :func:`repro.kernels.ops.kd_loss` — the Pallas
+    kernel on TPU, the XLA-fused jnp reference on CPU — so neither softmax
+    is materialized in HBM on the accelerated path.  Backward is the
+    analytic gradient w.r.t. the student logits
+
+        d/ds = [alpha (p1 - onehot) + (1-alpha) T (p_T - q_T)] / N
+
+    (one softmax each, no autodiff through the online accumulators).  The
+    teacher is treated as a constant, standard KD semantics: its cotangent
+    is zero, so do not differentiate this loss w.r.t. teacher params.
+
+    Numerically identical to :func:`distillation_loss` (same decomposition,
+    see tests), but usable inside vmapped/jitted population-scale steps.
+    ``alpha``/``temperature`` are static (nondiff) arguments — pass them
+    positionally.
+    """
+    from repro.kernels import ops
+
+    rows = ops.kd_loss(student_logits, teacher_logits, labels,
+                       alpha=alpha, temperature=temperature)
+    return jnp.mean(rows)
+
+
+def _fused_fwd(student_logits, teacher_logits, labels, alpha, temperature):
+    out = fused_distillation_loss(student_logits, teacher_logits, labels,
+                                  alpha, temperature)
+    return out, (student_logits, teacher_logits, labels)
+
+
+def _fused_bwd(alpha, temperature, residuals, g):
+    student_logits, teacher_logits, labels = residuals
+    sl = student_logits.astype(jnp.float32)
+    tl = teacher_logits.astype(jnp.float32)
+    n = sl.shape[0]
+    p1 = jax.nn.softmax(sl, axis=-1)
+    onehot = jax.nn.one_hot(labels, sl.shape[-1], dtype=jnp.float32)
+    p_t = jax.nn.softmax(sl / temperature, axis=-1)
+    q_t = jax.nn.softmax(tl / temperature, axis=-1)
+    ds = (alpha * (p1 - onehot)
+          + (1.0 - alpha) * temperature * (p_t - q_t)) * (g / n)
+    # labels are integers: their cotangent space is float0
+    labels_ct = np.zeros(labels.shape, jax.dtypes.float0)
+    return (ds.astype(student_logits.dtype), jnp.zeros_like(teacher_logits),
+            labels_ct)
+
+
+fused_distillation_loss.defvjp(_fused_fwd, _fused_bwd)
 
 
 def distillation_loss(

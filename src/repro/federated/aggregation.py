@@ -1,7 +1,7 @@
 """Model aggregation rules."""
 from __future__ import annotations
 
-from typing import List, Sequence
+from typing import Sequence
 
 import jax
 import numpy as np

@@ -8,7 +8,7 @@ and the survivors' models are FedAvg-aggregated.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Optional
+from typing import Callable, Optional
 
 import numpy as np
 
@@ -19,7 +19,6 @@ from repro.federated.client import LocalTrainer
 from repro.federated.selection import random_selection
 from repro.heterogeneity.profiles import (
     HETEROGENEITY_PROFILES,
-    HeterogeneityProfile,
     sample_client_systems,
 )
 

@@ -12,7 +12,7 @@ from typing import Dict
 
 import numpy as np
 
-from repro.heterogeneity.availability import AvailabilityTrace, markov_trace
+from repro.heterogeneity.availability import markov_trace
 
 
 @dataclasses.dataclass

@@ -67,8 +67,8 @@ def _flash_kernel(
 
     @pl.when(ki == kv_steps - 1)
     def _finish():
-        l = l_scr[...]
-        safe = jnp.where(l > 0, l, 1.0)
+        lsum = l_scr[...]
+        safe = jnp.where(lsum > 0, lsum, 1.0)
         o_ref[0, 0] = (acc_scr[...] / safe[:, None]).astype(o_ref.dtype)
 
 

@@ -123,7 +123,9 @@ def kd_loss(
         v_steps=v_steps,
         vocab=V,
     )
-    scr = lambda shape: pltpu.VMEM(shape, jnp.float32)
+    def scr(shape):
+        return pltpu.VMEM(shape, jnp.float32)
+
     return pl.pallas_call(
         kernel,
         grid=grid,

@@ -44,8 +44,8 @@ def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_out_ref,
     seg = cum[:, None] - cum[None, :]
     ii = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
     jj = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
-    l = jnp.where(ii >= jj, jnp.exp(seg), 0.0)
-    m = g * l * dt[None, :]                       # (Q,Q)
+    tri = jnp.where(ii >= jj, jnp.exp(seg), 0.0)
+    m = g * tri * dt[None, :]                     # (Q,Q)
     y = jnp.dot(m, x, preferred_element_type=jnp.float32)    # (Q,P)
 
     # inter-chunk contribution from the carried state

@@ -31,7 +31,8 @@ from pathlib import Path
 import jax
 
 from repro.configs import ARCH_IDS, get_config
-from repro.launch.hlo_analysis import cost_summary, parse_collectives
+from repro.launch.hlo_analysis import (cost_analysis_dict, cost_summary,
+                                       parse_collectives)
 from repro.launch.mesh import make_production_mesh
 from repro.launch.steps import input_specs, resolve_config
 from repro.models.config import INPUT_SHAPES
@@ -122,7 +123,7 @@ def run_pair(arch: str, shape_name: str, mesh_kind: str, *, probe: bool, verbose
         print(f"--- {arch} × {shape_name} × {mesh_kind} "
               f"(compile {rec['compile_s']}s) ---")
         print("memory_analysis:", compiled.memory_analysis())
-        ca = compiled.cost_analysis()
+        ca = cost_analysis_dict(compiled)
         print("cost_analysis: flops=%.3e bytes=%.3e" % (
             ca.get("flops", 0.0), ca.get("bytes accessed", 0.0)))
         print("collectives (scanned body):",

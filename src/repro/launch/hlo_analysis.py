@@ -15,7 +15,7 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Dict, Mapping, Optional
+from typing import Dict, Optional
 
 _DTYPE_BYTES = {
     "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
@@ -123,8 +123,17 @@ def parse_collectives(hlo_text: str) -> CollectiveStats:
     return CollectiveStats(bytes_by, count_by)
 
 
+def cost_analysis_dict(compiled) -> Dict[str, float]:
+    """Normalize ``Compiled.cost_analysis()``: newer jax returns a dict,
+    jax 0.4.x wraps the per-device dict in a single-element list."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca or {})
+
+
 def cost_summary(compiled) -> Dict[str, float]:
-    ca = compiled.cost_analysis() or {}
+    ca = cost_analysis_dict(compiled)
     ma = compiled.memory_analysis()
     out = {
         "hlo_flops": float(ca.get("flops", 0.0)),

@@ -9,7 +9,8 @@ device memory.
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, Optional, Tuple
+import os as _os
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -33,8 +34,6 @@ LONG_CONTEXT_WINDOW = 8192  # sliding window used ONLY for long_500k (DESIGN §6
 
 # §Perf-optimized defaults (EXPERIMENTS.md): baseline keeps the paper-faithful
 # settings; REPRO_OPTIMIZED=1 applies the hillclimb winners per shape kind.
-import os as _os
-
 OPTIMIZED = _os.environ.get("REPRO_OPTIMIZED", "0") == "1"
 
 
@@ -233,7 +232,9 @@ def abstract_opt_state(model, cfg: ModelConfig, mesh: Mesh):
     def moment(s: ParamSpec, ps: P):
         return _sds(s.shape, mdt, mesh, opt_state_pspec(ps, s.shape, mesh))
 
-    is_spec = lambda x: isinstance(x, ParamSpec)
+    def is_spec(x):
+        return isinstance(x, ParamSpec)
+
     mu = jax.tree_util.tree_map(moment, specs, pspecs, is_leaf=is_spec)
     nu = jax.tree_util.tree_map(moment, specs, pspecs, is_leaf=is_spec)
     step = _sds((), jnp.int32, mesh, P())

@@ -119,7 +119,7 @@ def _attend_chunked(q, k, v, positions, *, causal, window, chunk, out_dtype,
     i = positions[:, None, None, :, None]  # query positions (B,1,1,S,1)
 
     def body(carry, inp):
-        m, l, acc = carry
+        m, lsum, acc = carry
         k_i, v_i, pos_i = inp
         s = jnp.einsum("bskgd,bckd->bkgsc", qg, k_i.astype(jnp.float32)) * scale
         j = pos_i[:, None, None, None, :]
@@ -133,19 +133,19 @@ def _attend_chunked(q, k, v, positions, *, causal, window, chunk, out_dtype,
         alive = m_new > NEG_INF / 2
         p = jnp.where(alive[..., None], jnp.exp(s - m_new[..., None]), 0.0)
         corr = jnp.where(alive, jnp.exp(m - m_new), 1.0)
-        l = l * corr + jnp.sum(p, axis=-1)
+        lsum = lsum * corr + jnp.sum(p, axis=-1)
         acc = acc * corr[..., None] + jnp.einsum(
             "bkgsc,bckd->bkgsd", p, v_i.astype(jnp.float32)
         )
-        return (m_new, l, acc), None
+        return (m_new, lsum, acc), None
 
     init = (
         jnp.full((B, KV, G, S), NEG_INF, jnp.float32),
         jnp.zeros((B, KV, G, S), jnp.float32),
         jnp.zeros((B, KV, G, S, hd), jnp.float32),
     )
-    (m, l, acc), _ = maybe_scan(body, init, (kc, vc, pc))
-    safe = jnp.where(l > 0, l, 1.0)
+    (m, lsum, acc), _ = maybe_scan(body, init, (kc, vc, pc))
+    safe = jnp.where(lsum > 0, lsum, 1.0)
     out = (acc / safe[..., None]).astype(out_dtype)  # (B,KV,G,S,hd)
     return jnp.moveaxis(out, 3, 1).reshape(B, S, KV * G * hd)
 

@@ -1,6 +1,8 @@
 """Small models for the paper-figure experiments (Figs. 4-6):
 
   LR   — logistic regression on feature vectors (LR-Synthetic, Fig. 4)
+  MLP  — one-hidden-layer classifier on the same feature space as LR
+         (the cross-architecture exchange partner in the runtime tests)
   CNN  — 2×conv + fc classifier on 28×28 images (CNN-Femnist, Fig. 5)
   RNN  — LSTM language model on token sequences (RNN-Reddit, Fig. 6)
 
@@ -44,6 +46,30 @@ def make_lr(num_features: int = 60, num_classes: int = 10) -> SmallModel:
         return jnp.einsum("bf,fc->bc", x, params["w"]) + params["b"]
 
     return SmallModel("lr", specs, apply, num_classes)
+
+
+# ---------------------------------------------------------------------------
+# MLP — the cheap heterogeneous partner to LR: same feature/logit spaces,
+# different parameterization, so LR<->MLP exchange exercises the paper's
+# cross-architecture distillation ("only the logit space must match").
+# ---------------------------------------------------------------------------
+
+
+def make_mlp(num_features: int = 60, num_classes: int = 10,
+             hidden: int = 32) -> SmallModel:
+    def specs():
+        return {
+            "w1": ParamSpec((num_features, hidden), (None, None)),
+            "b1": ParamSpec((hidden,), (None,), init="zeros"),
+            "w2": ParamSpec((hidden, num_classes), (None, None)),
+            "b2": ParamSpec((num_classes,), (None,), init="zeros"),
+        }
+
+    def apply(params, x):
+        h = jax.nn.relu(jnp.einsum("bf,fh->bh", x, params["w1"]) + params["b1"])
+        return jnp.einsum("bh,hc->bc", h, params["w2"]) + params["b2"]
+
+    return SmallModel("mlp", specs, apply, num_classes)
 
 
 # ---------------------------------------------------------------------------
@@ -133,4 +159,5 @@ def make_rnn(vocab: int = 256, d_model: int = 64) -> SmallModel:
     return SmallModel("rnn", specs, apply, vocab)
 
 
-SMALL_MODELS = {"lr": make_lr, "cnn": make_cnn, "rnn": make_rnn}
+SMALL_MODELS = {"lr": make_lr, "mlp": make_mlp, "cnn": make_cnn,
+                "rnn": make_rnn}

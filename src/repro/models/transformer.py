@@ -22,7 +22,6 @@ import jax.numpy as jnp
 from repro.common.scan import maybe_scan
 from repro.common.types import (
     init_params,
-    init_stacked,
     stack_specs,
 )
 from repro.models import attention as attn

@@ -63,7 +63,9 @@ def adamw(
     lr_fn = lr if callable(lr) else (lambda _: lr)
 
     def init(params):
-        zeros = lambda p: jnp.zeros(p.shape, moment_dtype)
+        def zeros(p):
+            return jnp.zeros(p.shape, moment_dtype)
+
         return {
             "step": jnp.zeros((), jnp.int32),
             "mu": jax.tree_util.tree_map(zeros, params),

@@ -14,7 +14,9 @@ from repro.runtime.loop import Actor, EventLoop, EventRecord
 __all__ = [
     "SimClock", "EventLoop", "EventRecord", "Actor",
     "MDDPartyActor", "FLServerActor", "CycleRecord",
-    "PartyPopulation",
+    "PartyPopulation", "stack_teachers",
+    "CohortExchangeActor", "ExchangeConfig", "ExchangeReport", "CycleStats",
+    "run_exchange",
 ]
 
 _LAZY = {
@@ -22,6 +24,12 @@ _LAZY = {
     "FLServerActor": "repro.runtime.actors",
     "CycleRecord": "repro.runtime.actors",
     "PartyPopulation": "repro.runtime.population",
+    "stack_teachers": "repro.runtime.population",
+    "CohortExchangeActor": "repro.runtime.exchange",
+    "ExchangeConfig": "repro.runtime.exchange",
+    "ExchangeReport": "repro.runtime.exchange",
+    "CycleStats": "repro.runtime.exchange",
+    "run_exchange": "repro.runtime.exchange",
 }
 
 

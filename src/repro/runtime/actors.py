@@ -75,6 +75,7 @@ class MDDPartyActor:
         self._phase = "train"
         self._t_cycle_start = 0.0
         self.offline_waits = 0
+        self.fetch_denials = 0  # credit-gated fetches refused by the ledger
 
     # -- scheduling glue -----------------------------------------------------
     def start(self, loop: EventLoop, at: float = 0.0):
@@ -111,7 +112,8 @@ class MDDPartyActor:
         if self._phase == "improve":
             self._phase = "train"
             self.party.improve_async(epochs=self.distill_epochs,
-                                     on_done=self._improved)
+                                     on_done=self._improved,
+                                     on_denied=self._denied)
             return None  # parked until fetch + distill complete
         raise AssertionError(f"unknown phase {self._phase}")
 
@@ -122,6 +124,9 @@ class MDDPartyActor:
 
     def _published(self, card, now: float):
         self._sleep(0.0)
+
+    def _denied(self, now: float):
+        self.fetch_denials += 1
 
     def _improved(self, found: bool, now: float):
         self.records.append(CycleRecord(

@@ -8,22 +8,40 @@ step through one ``jax.vmap``-ed update built from the same step function
 :class:`~repro.federated.client.LocalTrainer` uses, so a simulated epoch
 over the whole population is one jitted call per minibatch step.
 
+Distillation is batched the same way: ``distill_step`` is one vmapped
+update whose loss goes through the fused KD path
+(:func:`repro.core.losses.fused_distillation_loss` — the Pallas ``kd_loss``
+kernel on TPU, the XLA-fused reference on CPU), and ``distill_batch``
+drives a *subset* of parties, each with its own fetched teacher, through
+whole KD epochs in a handful of XLA calls.  Teachers may come from a
+different architecture (paper §IV: only the logit space must match) — pass
+the teacher cohort's ``apply`` fn; each distinct teacher architecture gets
+its own cached jitted step.
+
 Discovery, publishing, and transfer accounting stay per-party (they are
 cheap, event-scheduled Python); only the math is batched.
 """
 from __future__ import annotations
 
-from typing import List, Optional
+from typing import List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.common.tree import count_params
-from repro.core.losses import distillation_loss
+from repro.core.losses import fused_distillation_loss
 from repro.core.vault import ModelCard
 from repro.federated.client import LocalTrainer
 from repro.optim import apply_updates
+
+
+def stack_teachers(teacher_params: Sequence):
+    """Stack per-party teacher pytrees into one pytree with a party axis."""
+    return jax.tree_util.tree_map(
+        lambda *leaves: jnp.stack([jnp.asarray(leaf) for leaf in leaves]),
+        *teacher_params,
+    )
 
 
 class PartyPopulation:
@@ -66,38 +84,77 @@ class PartyPopulation:
         self._opt = trainer.opt
         self._vstep = jax.jit(jax.vmap(trainer._step))
         self._vinit = jax.jit(jax.vmap(self._opt.init))
+        self._vapply = jax.jit(jax.vmap(model.apply, in_axes=(0, None)))
+        # (teacher_apply, teacher_axis) -> jitted vmapped distill step; one
+        # entry per teacher architecture seen (cross-arch teachers get their
+        # own trace/compile, same student update)
+        self._vdistill_cache = {}
 
-        def distill_step(params, opt_state, bx, by, t_params, alpha, temp):
-            teacher_logits = model.apply(t_params, bx)
+    # -- the vmapped distillation step ---------------------------------------
+    def _vdistill(self, teacher_apply=None, teacher_axis: Optional[int] = 0,
+                  alpha: float = 0.5, temperature: float = 2.0):
+        """Jitted vmapped distill step for one teacher architecture.
+
+        ``teacher_axis=0`` maps per-party stacked teachers; ``None``
+        broadcasts one shared teacher to every party.  ``alpha`` and
+        ``temperature`` are static (they parameterize the fused loss's
+        custom VJP), so each distinct combination compiles once.
+        """
+        t_apply = teacher_apply if teacher_apply is not None else self.model.apply
+        key = (t_apply, teacher_axis, float(alpha), float(temperature))
+        cached = self._vdistill_cache.get(key)
+        if cached is not None:
+            return cached
+
+        def distill_step(params, opt_state, bx, by, t_params):
+            teacher_logits = jax.lax.stop_gradient(t_apply(t_params, bx))
 
             def loss_fn(p):
-                s_logits = model.apply(p, bx)
-                loss, _ = distillation_loss(
-                    s_logits, teacher_logits, by, alpha=alpha, temperature=temp
+                s_logits = self.model.apply(p, bx)
+                return fused_distillation_loss(
+                    s_logits, teacher_logits, by, float(alpha),
+                    float(temperature)
                 )
-                return loss
 
             loss, grads = jax.value_and_grad(loss_fn)(params)
             updates, opt_state = self._opt.update(grads, opt_state, params)
             return apply_updates(params, updates), opt_state, loss
 
-        # teacher params + distill hyperparams broadcast across parties
-        self._vdistill = jax.jit(jax.vmap(
-            distill_step, in_axes=(0, 0, 0, 0, None, None, None)
+        vstep = jax.jit(jax.vmap(
+            distill_step, in_axes=(0, 0, 0, 0, teacher_axis)
         ))
-        self._vapply = jax.jit(jax.vmap(model.apply, in_axes=(0, None)))
+        self._vdistill_cache[key] = vstep
+        return vstep
+
+    def distill_step(self, params, opt_state, bx, by, teacher_params, *,
+                     teacher_apply=None, teacher_axis: Optional[int] = 0,
+                     alpha: float = 0.5, temperature: float = 2.0):
+        """One vmapped KD update for a stack of parties.
+
+        ``params``/``opt_state``/``bx``/``by`` carry a leading party axis;
+        ``teacher_params`` does too unless ``teacher_axis=None`` (shared
+        teacher).  Returns ``(params, opt_state, per_party_loss)``; the loss
+        values match the per-party :func:`repro.core.distill.distill`
+        reference (same objective, fused evaluation).
+        """
+        vstep = self._vdistill(teacher_apply, teacher_axis, alpha, temperature)
+        return vstep(params, opt_state, bx, by, teacher_params)
 
     # -- batching ------------------------------------------------------------
-    def _epoch_batches(self):
-        """Per-party shuffled minibatch index blocks for one epoch."""
+    def _epoch_batches(self, idx: Optional[np.ndarray] = None):
+        """Per-party shuffled minibatch index blocks for one epoch.
+
+        With ``idx``, batches cover only those parties (leading axis = k).
+        """
+        rows = np.arange(self.num_parties) if idx is None else np.asarray(idx)
+        k = len(rows)
         n = self.y.shape[1]
         perm = self._rng.permuted(
-            np.broadcast_to(np.arange(n), (self.num_parties, n)), axis=1
+            np.broadcast_to(np.arange(n), (k, n)), axis=1
         )
         for start in range(0, n - self.batch_size + 1, self.batch_size):
-            idx = perm[:, start:start + self.batch_size]  # (N, B)
-            rows = np.arange(self.num_parties)[:, None]
-            yield self.x[rows, idx], self.y[rows, idx]
+            cols = perm[:, start:start + self.batch_size]  # (k, B)
+            yield self.x[rows[:, None], cols], self.y[rows[:, None], cols]
 
     # -- bulk operations -----------------------------------------------------
     def train_epochs(self, epochs: int = 1) -> float:
@@ -111,17 +168,48 @@ class PartyPopulation:
                 )
         return float(jnp.mean(loss))
 
-    def distill_from(self, teacher_params, *, epochs: int = 1,
-                     alpha: float = 0.5, temperature: float = 2.0) -> float:
-        """Distill one (same-arch) teacher into every party at once."""
+    def distill_from(self, teacher_params, *, teacher_apply=None,
+                     epochs: int = 1, alpha: float = 0.5,
+                     temperature: float = 2.0) -> float:
+        """Distill one shared teacher into every party at once."""
+        vstep = self._vdistill(teacher_apply, None, alpha, temperature)
         opt_state = self._vinit(self.params)
         loss = jnp.zeros((self.num_parties,))
         for _ in range(epochs):
             for bx, by in self._epoch_batches():
-                self.params, opt_state, loss = self._vdistill(
-                    self.params, opt_state, bx, by, teacher_params,
-                    alpha, temperature,
+                self.params, opt_state, loss = vstep(
+                    self.params, opt_state, bx, by, teacher_params
                 )
+        return float(jnp.mean(loss))
+
+    def distill_batch(self, indices, teacher_params, *, teacher_apply=None,
+                      epochs: int = 1, alpha: float = 0.5,
+                      temperature: float = 2.0) -> float:
+        """KD epochs for a *subset* of parties, each with its own teacher.
+
+        ``indices`` selects the students; ``teacher_params`` is a pytree
+        stacked along a matching leading axis (see :func:`stack_teachers`).
+        The whole cohort's KD epoch is a handful of XLA calls: gather the
+        students out of the population stack, run the vmapped fused-KD
+        update chain, scatter the updated params back.  Returns the mean
+        final-step loss.
+        """
+        idx = np.asarray(indices, dtype=np.int64)
+        if idx.size == 0:
+            return 0.0
+        vstep = self._vdistill(teacher_apply, 0, alpha, temperature)
+        jidx = jnp.asarray(idx)
+        sub = jax.tree_util.tree_map(lambda a: a[jidx], self.params)
+        opt_state = self._vinit(sub)
+        loss = jnp.zeros((idx.size,))
+        for _ in range(epochs):
+            for bx, by in self._epoch_batches(idx):
+                sub, opt_state, loss = vstep(
+                    sub, opt_state, bx, by, teacher_params
+                )
+        self.params = jax.tree_util.tree_map(
+            lambda a, s: a.at[jidx].set(s), self.params, sub
+        )
         return float(jnp.mean(loss))
 
     def evaluate(self, x_eval, y_eval) -> np.ndarray:
@@ -142,5 +230,6 @@ class PartyPopulation:
             owner=self.party_ids[i],
             num_params=self._params_per_party,
             metrics={"accuracy": float(accuracy), "per_class": {},
-                     "n": int(self.y.shape[1])},
+                     "n": int(self.y.shape[1]),
+                     "logit_dim": int(self.model.num_classes)},
         )

@@ -16,7 +16,7 @@ few-KV-head GQA configs (kv=2,4,8 over model=16).
 """
 from __future__ import annotations
 
-from typing import Any, Mapping, Optional, Tuple
+from typing import Mapping, Optional, Tuple
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P

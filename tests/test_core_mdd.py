@@ -12,7 +12,7 @@ from repro.core.continuum import Continuum, Link
 from repro.core.discovery import DiscoveryService, ModelQuery
 from repro.core.distill import distill, distill_ensemble
 from repro.core.evaluator import evaluate_classifier
-from repro.core.learner import LearnerConfig, LearningParty
+from repro.core.learner import LearningParty
 from repro.core.vault import IntegrityError, ModelCard, ModelVault
 from repro.data.federated_datasets import make_lr_synthetic
 from repro.models.small import make_lr

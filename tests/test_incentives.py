@@ -1,0 +1,190 @@
+"""Incentive ledger: cold-start stipend, credit gating, fee accounting
+conservation, and the ledger driving the runtime exchange loop."""
+import numpy as np
+import pytest
+
+from repro.core.continuum import Continuum
+from repro.core.discovery import ModelQuery
+from repro.core.incentives import OPERATOR, IncentiveLedger
+from repro.core.vault import ModelCard
+from repro.models.small import make_lr, make_mlp
+from repro.runtime.exchange import ExchangeConfig, run_exchange
+from repro.runtime.population import PartyPopulation
+
+
+def _card(mid, owner, acc, task="t", arch="lr"):
+    return ModelCard(
+        model_id=mid, task=task, arch=arch, owner=owner, num_params=100,
+        metrics={"accuracy": acc, "per_class": {}},
+    )
+
+
+# -- cold start ---------------------------------------------------------------
+
+
+def test_cold_start_stipend():
+    led = IncentiveLedger()
+    assert led.balance("newcomer") == 5.0
+    assert led.can_fetch("newcomer")  # stipend covers the first fetches
+    # the stipend was minted, so conservation holds from the first account
+    led.assert_conserved()
+    assert led.minted == 5.0
+
+
+def test_operator_account_gets_no_stipend():
+    led = IncentiveLedger()
+    assert led.balance(OPERATOR) == 0.0
+    assert led.minted == 0.0
+
+
+# -- denial -------------------------------------------------------------------
+
+
+def test_insufficient_credit_denied():
+    led = IncentiveLedger(stipend=1.0, fetch_cost=2.0)
+    assert not led.can_fetch("poor")
+    with pytest.raises(PermissionError):
+        led.on_fetch("poor", "rich")
+    assert led.accounts["poor"].denied == 1
+    # nothing moved (the 1.0 stipend applies to every party)
+    assert led.balance("poor") == 1.0
+    assert led.balance("rich") == 1.0
+    led.assert_conserved()
+
+
+# -- fee accounting conservation ---------------------------------------------
+
+
+def test_fetch_routes_fee_to_operator_and_conserves():
+    led = IncentiveLedger(fetch_cost=2.0, service_fee=0.2)
+    led.on_publish("alice", accuracy=0.8)  # mints 1 + 5*0.8 = 5.0
+    assert led.balance("bob") == 5.0  # opens bob's account (stipend minted)
+    before = led.total_credits()
+    led.on_fetch("bob", "alice")
+    # requester paid the full cost, publisher got 80%, operator got 20%
+    assert led.balance("bob") == pytest.approx(5.0 - 2.0)
+    assert led.balance("alice") == pytest.approx(5.0 + 5.0 + 1.6)
+    assert led.balance(OPERATOR) == pytest.approx(0.4)
+    # zero-sum transfer: the total did not change
+    assert led.total_credits() == pytest.approx(before)
+    led.assert_conserved()
+
+
+def test_conservation_violation_detected():
+    led = IncentiveLedger()
+    led.on_publish("alice", 0.5)
+    led.accounts["alice"].balance += 1.0  # credits from thin air
+    with pytest.raises(AssertionError):
+        led.assert_conserved()
+
+
+def test_publish_reward_scales_with_accuracy():
+    led = IncentiveLedger()
+    led.on_publish("weak", 0.1)
+    led.on_publish("strong", 0.9)
+    assert led.balance("strong") > led.balance("weak")
+    assert led.balance("strong") == pytest.approx(5.0 + 1.0 + 4.5)
+
+
+# -- ledger on the continuum --------------------------------------------------
+
+
+def _gated_continuum(**ledger_kw):
+    cont = Continuum(ledger=IncentiveLedger(**ledger_kw))
+    cont.add_edge_server("edge0")
+    model = make_lr(num_features=8, num_classes=4)
+    import jax
+
+    params = model.init(jax.random.PRNGKey(0))
+    return cont, model, params
+
+
+def test_continuum_publish_mints_and_fetch_pays():
+    cont, model, params = _gated_continuum()
+    cont.publish("alice", params, _card("alice/lr", "alice", acc=0.8))
+    led = cont.ledger
+    assert led.accounts["alice"].published == 1
+    assert led.balance("alice") == pytest.approx(5.0 + 1.0 + 4.0)
+
+    hit = cont.discover_and_fetch(ModelQuery(task="t"), requester="bob")
+    assert hit is not None
+    assert led.accounts["bob"].fetches == 1
+    assert led.balance("bob") == pytest.approx(3.0)
+    assert led.balance(OPERATOR) == pytest.approx(0.4)
+    led.assert_conserved()
+
+
+def test_continuum_denies_broke_requester():
+    cont, model, params = _gated_continuum(stipend=0.5, fetch_cost=2.0)
+    cont.publish("alice", params, _card("alice/lr", "alice", acc=0.8))
+    hit = cont.discover_and_fetch(ModelQuery(task="t"), requester="broke")
+    assert hit is None
+    assert cont.denied_fetches == 1
+    assert cont.ledger.accounts["broke"].denied == 1
+    # discovery itself was never consulted for the denied request
+    assert cont.discovery.stats["fetches"] == 0
+    cont.ledger.assert_conserved()
+
+
+def test_ungated_requester_still_works():
+    cont, model, params = _gated_continuum()
+    cont.publish("alice", params, _card("alice/lr", "alice", acc=0.8))
+    hit = cont.discover_and_fetch(ModelQuery(task="t"))  # no requester
+    assert hit is not None
+    cont.ledger.assert_conserved()
+
+
+# -- ledger under the runtime exchange loop -----------------------------------
+
+
+def _exchange_world(n_lr=6, n_mlp=3, seed=0, **ledger_kw):
+    rng = np.random.default_rng(seed)
+    f, c, n = 10, 5, 48
+    w = rng.normal(size=(f, c)).astype(np.float32)
+
+    def data(k):
+        x = rng.normal(size=(k, n, f)).astype(np.float32)
+        y = (x @ w).argmax(-1).astype(np.int32)
+        return x, y
+
+    xa, ya = data(n_lr)
+    xb, yb = data(n_mlp)
+    ex = rng.normal(size=(96, f)).astype(np.float32)
+    ey = (ex @ w).argmax(-1).astype(np.int32)
+    pops = [
+        PartyPopulation(make_lr(f, c), xa, ya, task="x", lr=0.2, seed=0,
+                        party_ids=[f"lr{i}" for i in range(n_lr)]),
+        PartyPopulation(make_mlp(f, c), xb, yb, task="x", lr=0.2, seed=1,
+                        party_ids=[f"mlp{i}" for i in range(n_mlp)]),
+    ]
+    return pops, ex, ey, IncentiveLedger(**ledger_kw)
+
+
+def test_exchange_loop_conserves_and_pays():
+    pops, ex, ey, ledger = _exchange_world()
+    report = run_exchange(pops, ex, ey, cfg=ExchangeConfig(cycles=2),
+                          ledger=ledger, edges=2)
+    ledger.assert_conserved()
+    assert report.total_fetches > 0
+    # every online party published each cycle and earned a minted reward
+    assert all(a.published >= 1 for p, a in ledger.accounts.items()
+               if p != ledger.operator)
+    # fetch payments flowed: the operator collected its fee
+    assert ledger.balance(ledger.operator) == pytest.approx(
+        report.total_fetches * ledger.fetch_cost * ledger.service_fee
+    )
+
+
+def test_exchange_loop_denies_when_economy_is_tight():
+    # no stipend and fetches cost more than any publish can mint: after
+    # the first cycle drains balances, requests get denied
+    pops, ex, ey, ledger = _exchange_world(
+        stipend=0.0, fetch_cost=100.0, publish_reward=0.1, quality_bonus=0.1,
+    )
+    report = run_exchange(pops, ex, ey, cfg=ExchangeConfig(cycles=2),
+                          ledger=ledger, edges=2)
+    assert report.total_fetches == 0
+    assert sum(s.denied for s in report.cycles) == sum(
+        s.online for s in report.cycles
+    )
+    ledger.assert_conserved()
