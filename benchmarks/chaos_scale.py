@@ -1,0 +1,212 @@
+"""Chaos-continuum scale benchmark: 10k parties trading models under faults.
+
+Runs the heterogeneous exchange economy (``benchmarks/exchange_scale``'s
+world) under a seeded :class:`~repro.runtime.faults.FaultPlan` — the
+degraded-network scenario the paper's edge populations actually live in:
+
+  30% churn   parties follow Markov availability traces; offline parties
+              neither publish nor fetch
+  10% loss    publishes and paid fetches drop in flight (fetches refund)
+  delays      a fraction of transfers are slowed up to 4x
+  stragglers  5% of parties compute/transfer 8x slower
+  1% byzantine publishers inflate card accuracy; verify-on-fetch
+              re-evaluates every delivered model, refunds the requester,
+              deregisters the card, and slashes the publisher
+
+Verifies, at full scale: ledger conservation (``sum(balances) == minted``
+with refunds and slashing in the mix) and byzantine containment (caught
+publishers end at or below the honest median balance).  ``--json`` merges
+headline numbers into a JSON file (used by the CI ``chaos-smoke`` job).
+
+  PYTHONPATH=src python benchmarks/chaos_scale.py [--parties 10000]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+try:
+    from benchmarks.bench_json import merge_json_section
+    from benchmarks.exchange_scale import _make_party_data
+except ImportError:  # run as a script: benchmarks/ itself is on sys.path
+    from bench_json import merge_json_section
+    from exchange_scale import _make_party_data
+
+from repro.core.incentives import IncentiveLedger
+from repro.models.small import make_lr, make_mlp
+from repro.runtime.exchange import (ExchangeConfig, run_exchange,
+                                    split_cohorts)
+from repro.runtime.faults import FaultPlan
+from repro.runtime.population import PartyPopulation
+
+
+def bench_chaos(n_parties=10000, cycles=3, edges=32, seed=0, mlp_frac=0.2,
+                churn=0.3, drop=0.1, delay=0.1, corrupt=0.02,
+                stragglers=0.05, byzantine=0.01):
+    n_per_party, n_feat, n_classes = 64, 16, 8
+    x, y, ex, ey = _make_party_data(n_parties, n_per_party, n_feat,
+                                    n_classes, seed)
+    n_lr, n_mlp = split_cohorts(n_parties, mlp_frac)
+
+    cohorts = []
+    if n_lr:
+        cohorts.append(PartyPopulation(
+            make_lr(num_features=n_feat, num_classes=n_classes),
+            x[:n_lr], y[:n_lr], task="chaos_bench", lr=0.1, batch_size=32,
+            seed=seed, party_ids=[f"lr{i}" for i in range(n_lr)],
+        ))
+    if n_mlp:
+        cohorts.append(PartyPopulation(
+            make_mlp(num_features=n_feat, num_classes=n_classes, hidden=32),
+            x[n_lr:], y[n_lr:], task="chaos_bench", lr=0.1, batch_size=32,
+            seed=seed + 1, party_ids=[f"mlp{i}" for i in range(n_mlp)],
+        ))
+
+    plan = FaultPlan(
+        seed=seed, churn=churn, drop_prob=drop, delay_prob=delay,
+        corrupt_prob=corrupt, straggler_frac=stragglers,
+        byzantine_frac=byzantine,
+    )
+
+    ledger = IncentiveLedger()
+    wall0 = time.perf_counter()
+    report = run_exchange(
+        cohorts, ex, ey,
+        cfg=ExchangeConfig(cycles=cycles, distill_epochs=1),
+        ledger=ledger, edges=edges, faults=plan,
+    )
+    wall = time.perf_counter() - wall0
+
+    # conservation already asserted by run_exchange; make it an explicit
+    # headline number so the CI threshold can gate on it
+    try:
+        ledger.assert_conserved()
+        conserved = True
+    except AssertionError:
+        conserved = False
+
+    # byzantine containment: caught-and-slashed publishers must not out-earn
+    # honest parties.  Read balances without ledger.balance(): that would
+    # open (and mint stipends for) accounts of parties that never
+    # transacted, mutating the ledger after the conservation check.  A
+    # party with no account would hold exactly the stipend on first touch.
+    def held(pid):
+        acct = ledger.accounts.get(pid)
+        return acct.balance if acct is not None else ledger.stipend
+
+    all_ids = [pid for pop in cohorts for pid in pop.party_ids]
+    byz_ids = [pid for pid in all_ids if plan.is_byzantine(pid)]
+    honest_bal = [held(pid) for pid in all_ids
+                  if not plan.is_byzantine(pid)]
+    byz_bal = [held(pid) for pid in byz_ids]
+    honest_median = float(np.median(honest_bal)) if honest_bal else 0.0
+    byz_median = float(np.median(byz_bal)) if byz_bal else 0.0
+    byz_max = float(np.max(byz_bal)) if byz_bal else 0.0
+    byz_contained = (not byz_bal) or byz_median <= honest_median
+
+    return {
+        "wall_s": wall,
+        "parties": n_parties,
+        "cycles": cycles,
+        "plan": plan.to_dict(),
+        "events": report.events,
+        "events_per_s": report.events / wall,
+        "sim_time_s": report.sim_time_s,
+        "fetches": report.total_fetches,
+        "failed_fetches": report.total_failed,
+        "denied": sum(s.denied for s in report.cycles),
+        "misses": sum(s.misses for s in report.cycles),
+        "cross_arch": report.total_cross_arch,
+        "fault_stats": report.faults,
+        "ledger": report.ledger,
+        "conserved": conserved,
+        "byzantine_parties": len(byz_ids),
+        "byzantine_median": byz_median,
+        "byzantine_max": byz_max,
+        "honest_median": honest_median,
+        "byz_leq_honest_median": byz_contained,
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--parties", type=int, default=10000)
+    ap.add_argument("--cycles", type=int, default=3)
+    ap.add_argument("--edges", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--mlp-frac", type=float, default=0.2)
+    ap.add_argument("--churn", type=float, default=0.3)
+    ap.add_argument("--drop", type=float, default=0.1)
+    ap.add_argument("--delay", type=float, default=0.1)
+    ap.add_argument("--corrupt", type=float, default=0.02)
+    ap.add_argument("--stragglers", type=float, default=0.05)
+    ap.add_argument("--byzantine", type=float, default=0.01)
+    ap.add_argument("--json", type=str, default=None,
+                    help="merge headline numbers into this JSON file")
+    args = ap.parse_args(argv)
+    if args.parties < 1 or args.cycles < 1 or args.edges < 1:
+        ap.error("--parties, --cycles, and --edges must all be >= 1")
+
+    res = bench_chaos(args.parties, args.cycles, args.edges, args.seed,
+                      args.mlp_frac, args.churn, args.drop, args.delay,
+                      args.corrupt, args.stragglers, args.byzantine)
+    fs = res["fault_stats"]
+    led = res["ledger"]
+    print(f"chaos_scale/run,{res['wall_s']*1e6:.0f},"
+          f"parties={res['parties']};cycles={res['cycles']};"
+          f"events={res['events']};events_per_s={res['events_per_s']:.0f};"
+          f"fetches={res['fetches']};failed={res['failed_fetches']};"
+          f"denied={res['denied']};sim_time_s={res['sim_time_s']:.0f}",
+          flush=True)
+    print(f"chaos_scale/faults,0,"
+          f"dropped_pub={fs['dropped_publishes']};"
+          f"dropped_fetch={fs['dropped_fetches']};"
+          f"corrupted={fs['corrupted_fetches']};"
+          f"delayed={fs['delayed_transfers']};"
+          f"frauds={fs['frauds_detected']};refunds={fs['refunds']}")
+    print(f"chaos_scale/economy,0,"
+          f"minted={led.get('minted', 0):.1f};"
+          f"operator={led.get('operator', 0):.1f};"
+          f"median={led.get('median', 0):.1f};"
+          f"flagged={led.get('flagged', 0)};"
+          f"byz_median={res['byzantine_median']:.1f};"
+          f"honest_median={res['honest_median']:.1f}")
+
+    print(f"# conservation: "
+          f"{'holds' if res['conserved'] else 'VIOLATED'} under "
+          f"{fs['refunds']} refunds + {led.get('flagged', 0)} slashings")
+    print(f"# byzantine containment: {res['byzantine_parties']} byzantine, "
+          f"median {res['byzantine_median']:.1f} vs honest median "
+          f"{res['honest_median']:.1f} "
+          f"({'verified <=' if res['byz_leq_honest_median'] else 'FAILED'})")
+    if res["wall_s"] < 120:
+        print(f"# {res['parties']} parties x {res['cycles']} faulted cycles "
+              f"in {res['wall_s']:.1f}s (<120s target)")
+    else:
+        print(f"# WARNING: wall time {res['wall_s']:.1f}s exceeds 120s target")
+
+    if args.json:
+        merge_json_section(args.json, "chaos_scale", {
+            "wall_s": res["wall_s"],
+            "parties": res["parties"],
+            "cycles": res["cycles"],
+            "events": res["events"],
+            "fetches": res["fetches"],
+            "failed_fetches": res["failed_fetches"],
+            "denied": res["denied"],
+            "dropped_publishes": fs["dropped_publishes"],
+            "dropped_fetches": fs["dropped_fetches"],
+            "corrupted_fetches": fs["corrupted_fetches"],
+            "frauds_detected": fs["frauds_detected"],
+            "refunds": fs["refunds"],
+            "conserved": int(res["conserved"]),
+            "byz_leq_honest_median": int(res["byz_leq_honest_median"]),
+            "byzantine_median": res["byzantine_median"],
+            "honest_median": res["honest_median"],
+        })
+
+
+if __name__ == "__main__":
+    main()

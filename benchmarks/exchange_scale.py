@@ -29,7 +29,7 @@ except ImportError:  # run as a script: benchmarks/ itself is on sys.path
 from repro.core.incentives import IncentiveLedger
 from repro.heterogeneity.availability import markov_trace
 from repro.models.small import make_lr, make_mlp
-from repro.runtime.exchange import ExchangeConfig, run_exchange
+from repro.runtime.exchange import ExchangeConfig, run_exchange, split_cohorts
 from repro.runtime.population import PartyPopulation
 
 
@@ -52,17 +52,7 @@ def bench_exchange(n_parties=10000, cycles=3, edges=32, seed=0,
     n_per_party, n_feat, n_classes = 64, 16, 8
     x, y, ex, ey = _make_party_data(n_parties, n_per_party, n_feat,
                                     n_classes, seed)
-    if not 0.0 <= mlp_frac <= 1.0:
-        raise ValueError(f"mlp_frac must be in [0, 1], got {mlp_frac}")
-    # mlp_frac 0/1 are honoured (homogeneous runs); otherwise at least one
-    # MLP party so the heterogeneous path is exercised at any --parties
-    if mlp_frac <= 0.0 or n_parties < 2:
-        n_mlp = 0
-    elif mlp_frac >= 1.0:
-        n_mlp = n_parties
-    else:
-        n_mlp = min(max(int(n_parties * mlp_frac), 1), n_parties - 1)
-    n_lr = n_parties - n_mlp
+    n_lr, n_mlp = split_cohorts(n_parties, mlp_frac)
 
     cohorts = []
     if n_lr:

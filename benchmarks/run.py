@@ -9,6 +9,7 @@ output is both human-skimmable and machine-parsable.
   traffic         — MDD vs FL communication cost (continuum model)
   continuum_scale — event-driven runtime: 10k parties, sublinear discovery
   exchange_scale  — incentive-gated model-exchange economy, hetero cohorts
+  chaos_scale     — exchange economy under churn/link-loss/byzantine faults
   roofline        — three-term roofline from dry-run artifacts (if present)
 
 Usage: python -m benchmarks.run [sections...]
@@ -84,6 +85,13 @@ def run_exchange_scale():
     emain([])
 
 
+def run_chaos_scale():
+    """The exchange economy under the seeded chaos fault plan."""
+    from benchmarks.chaos_scale import main as cmain
+
+    cmain([])
+
+
 def run_kernels():
     from benchmarks.kernels_bench import main as kmain
 
@@ -102,7 +110,7 @@ def run_roofline():
 def main():
     which = set(sys.argv[1:]) or {"fig3", "figs456", "kernels", "traffic",
                                   "continuum_scale", "exchange_scale",
-                                  "roofline"}
+                                  "chaos_scale", "roofline"}
     print("name,us_per_call,derived")
     if "fig3" in which:
         section("Fig.3 heterogeneity impact")
@@ -113,6 +121,9 @@ def main():
     if "exchange_scale" in which:
         section("Exchange economy (incentive-gated, heterogeneous cohorts)")
         run_exchange_scale()
+    if "chaos_scale" in which:
+        section("Chaos continuum (churn, link faults, byzantine publishers)")
+        run_chaos_scale()
     if "figs456" in which:
         section("Figs.4-6 IND vs FL vs MDD")
         run_figs456()

@@ -19,19 +19,35 @@ The completion times come from the :class:`Link` cost model.  The classic
 synchronous methods (``publish``, ``discover_and_fetch``) remain as thin
 wrappers that schedule the events and run the loop to quiescence, so
 single-threaded callers observe exactly the old behaviour.
+
+Chaos runtime: pass ``faults`` (a :class:`~repro.runtime.faults.FaultPlan`)
+and every transfer is subject to seeded drop/delay/corruption, stragglers
+transfer slower, and byzantine publishers' cards are inflated before they
+reach the vault.  Pass ``verifier`` (``(params, card) -> measured accuracy
+or None``) to enable verify-on-fetch: the device re-evaluates every
+delivered model, and a card whose claimed accuracy exceeds the measurement
+by more than the plan's tolerance is treated as fraud — the requester is
+refunded, the card is deregistered from discovery, and the publisher's
+minted rewards are slashed (see ``IncentiveLedger.on_fraud``).  All fault
+outcomes are deterministic functions of the plan seed, so faulted runs
+stay replayable.
 """
 from __future__ import annotations
 
 import bisect
 import dataclasses
 import hashlib
-from typing import Callable, Dict, List, Optional
+from typing import TYPE_CHECKING, Callable, Dict, List, Optional
 
+from repro.checkpoint.serde import params_to_bytes
 from repro.core.discovery import DiscoveryService
 from repro.core.incentives import IncentiveLedger
 from repro.core.vault import ModelVault
 from repro.runtime.clock import SimClock
 from repro.runtime.loop import EventLoop
+
+if TYPE_CHECKING:  # import cycle: runtime.faults imports core.vault
+    from repro.runtime.faults import FaultPlan
 
 
 @dataclasses.dataclass
@@ -67,6 +83,21 @@ class TrafficLog:
         return dataclasses.asdict(self)
 
 
+@dataclasses.dataclass
+class FaultStats:
+    """What the fault plan actually did to this continuum's transfers."""
+
+    dropped_publishes: int = 0  # blob or card transfer lost in flight
+    dropped_fetches: int = 0  # paid download lost in flight (refunded)
+    corrupted_fetches: int = 0  # delivered blob failed integrity (refunded)
+    delayed_transfers: int = 0
+    frauds_detected: int = 0  # verify-on-fetch caught an inflated card
+    refunds: int = 0
+
+    def as_dict(self):
+        return dataclasses.asdict(self)
+
+
 def _stable_bucket(party_id: str, n: int) -> int:
     """PYTHONHASHSEED-independent assignment (builtin hash() is salted)."""
     digest = hashlib.sha256(party_id.encode("utf-8")).digest()
@@ -86,11 +117,17 @@ class Continuum:
     requester -> publisher (+ service fee -> the cloud operator account).
     Without a ledger (or when callers omit ``requester``) behaviour is the
     classic ungated exchange.
+
+    Pass ``faults``/``verifier`` to run under the chaos fault model (see
+    module docstring).  ``verifier`` re-measures a delivered model's
+    accuracy; returning ``None`` skips the check (e.g. unknown arch).
     """
 
     def __init__(self, clock: Optional[SimClock] = None,
                  loop: Optional[EventLoop] = None,
-                 ledger: Optional[IncentiveLedger] = None):
+                 ledger: Optional[IncentiveLedger] = None,
+                 faults: Optional["FaultPlan"] = None,
+                 verifier: Optional[Callable] = None):
         if loop is not None and clock is not None and loop.clock is not clock:
             raise ValueError("pass either clock or loop (or a loop built on "
                              "that clock); a loop brings its own clock")
@@ -102,6 +139,12 @@ class Continuum:
         self.traffic = TrafficLog()
         self.ledger = ledger
         self.denied_fetches = 0
+        self.faults = faults
+        self.verifier = verifier
+        self.fault_stats = FaultStats()
+        # cards already slashed, by (model_id, version): concurrent in-flight
+        # fetches of one fraudulent card must not slash the publisher twice
+        self._frauded: set = set()
 
     def add_edge_server(self, server_id: str,
                         link_up: Optional[Link] = None) -> EdgeServer:
@@ -121,20 +164,63 @@ class Continuum:
 
     # -- scheduled operations ------------------------------------------------
     def publish_async(self, party_id: str, params, card,
-                      on_done: Optional[Callable] = None):
+                      on_done: Optional[Callable] = None,
+                      on_fail: Optional[Callable] = None):
         """Device -> edge vault upload; card -> cloud index.
 
         The blob is stored (hashed, signed, versioned) at initiation; the
         card becomes *discoverable* only when the simulated device->edge and
         edge->cloud transfers complete.  Returns the final card immediately;
         ``on_done(final_card, sim_time)`` fires at registration time.
+
+        Under a fault plan the transfer can be dropped (``on_fail(sim_time)``
+        fires at the time the loss is noticed; nothing reaches the edge —
+        the vault keeps its previous entry and the returned card is the
+        *unstored* one) or delayed, stragglers upload slower, and a
+        byzantine publisher's card is inflated before it is stored.
         """
         edge = self.nearest_edge(party_id)
+        faults = self.faults
+        if faults is not None and faults.is_byzantine(party_id):
+            card = faults.inflate_card(card)
+        now0 = self.clock.now()
+        fault = (faults.link_fault("publish", party_id, card.model_id, now0)
+                 if faults is not None else None)
+        if fault is not None and fault.drop:
+            # the upload is lost in flight: the vault must keep its previous
+            # entry (if any) — this version never reached the edge.  The
+            # device still wastes the upload time before noticing the loss.
+            nbytes = len(params_to_bytes(params))
+            blob_t = (DEVICE_TO_EDGE.transfer_time(nbytes)
+                      * faults.slowdown(party_id))
+            self.fault_stats.dropped_publishes += 1
+            self.traffic.uploads_bytes += nbytes
+            self.traffic.total_time_s += blob_t
+
+            def publish_dropped(now: float):
+                if on_fail is not None:
+                    on_fail(now)
+
+            self.loop.call_after(
+                blob_t, publish_dropped,
+                label=f"publish-drop {card.model_id}",
+                payload={"op": "publish_drop", "party": party_id,
+                         "model": card.model_id},
+            )
+            return card
         final = edge.vault.store(params, card)
         nbytes = edge.vault.blob_size(final.model_id)
         blob_t = DEVICE_TO_EDGE.transfer_time(nbytes)
         card_bytes = len(final.to_json().encode())
         card_t = edge.link_up.transfer_time(card_bytes)
+        if faults is not None:
+            slow = faults.slowdown(party_id)
+            blob_t *= slow
+            card_t *= slow
+            if fault.delay_factor != 1.0:
+                self.fault_stats.delayed_transfers += 1
+                blob_t *= fault.delay_factor
+                card_t *= fault.delay_factor
         self.traffic.uploads_bytes += nbytes
         self.traffic.card_bytes += card_bytes
         self.traffic.total_time_s += blob_t + card_t
@@ -149,17 +235,27 @@ class Continuum:
                 on_done(final, now)
 
         def blob_arrived(now: float):
-            self.loop.call_after(card_t, card_arrived,
-                                 label=f"card->cloud {final.model_id}")
+            self.loop.call_after(
+                card_t, card_arrived,
+                label=f"card->cloud {final.model_id}",
+                payload={"op": "card", "model": final.model_id,
+                         "nbytes": card_bytes},
+            )
 
-        self.loop.call_after(blob_t, blob_arrived,
-                             label=f"publish {final.model_id} -> {edge.server_id}")
+        self.loop.call_after(
+            blob_t, blob_arrived,
+            label=f"publish {final.model_id} -> {edge.server_id}",
+            payload={"op": "publish", "party": party_id,
+                     "model": final.model_id, "nbytes": nbytes,
+                     "edge": edge.server_id},
+        )
         return final
 
     def discover_and_fetch_async(self, query, on_done: Callable,
                                  top_k: int = 3,
                                  requester: Optional[str] = None,
-                                 on_denied: Optional[Callable] = None):
+                                 on_denied: Optional[Callable] = None,
+                                 on_fail: Optional[Callable] = None):
         """Query cloud (cards only) then fetch the winning blob, as events.
 
         ``on_done(hit, sim_time)`` receives ``(params, card, result)`` when
@@ -169,7 +265,24 @@ class Continuum:
         runs — ``on_denied(sim_time)`` fires if given, else
         ``on_done(None, sim_time)`` — and a successful fetch pays the
         publisher through the ledger.
+
+        Under a fault plan, a *paid* download can still fail: dropped or
+        corrupted in flight, or delivered but caught by verify-on-fetch
+        with inflated claimed accuracy (fraud).  In every failure case the
+        requester is refunded; ``on_fail(reason, sim_time)`` fires if
+        given (reason in {"drop", "corrupt", "fraud"}), else
+        ``on_done(None, sim_time)``.
         """
+
+        def failed(reason: str, now: float, publisher: str):
+            gated = self.ledger is not None and requester is not None
+            if gated:
+                self.ledger.on_refund(requester, publisher)
+                self.fault_stats.refunds += 1
+            if on_fail is not None:
+                on_fail(reason, now)
+            else:
+                on_done(None, now)
 
         def do_query(now: float):
             gated = self.ledger is not None and requester is not None
@@ -193,16 +306,95 @@ class Continuum:
                 self.ledger.on_fetch(requester, best.card.owner)
             nbytes = self.edges[best.vault_id].vault.blob_size(card.model_id)
             dl_t = DEVICE_TO_EDGE.transfer_time(nbytes)
+            fault = None
+            if self.faults is not None:
+                if requester is not None:
+                    dl_t *= self.faults.slowdown(requester)
+                fault = self.faults.link_fault(
+                    "fetch", requester or "anon", card.model_id,
+                    card.version, now,
+                )
+                if fault.delay_factor != 1.0:
+                    self.fault_stats.delayed_transfers += 1
+                    dl_t *= fault.delay_factor
             self.traffic.downloads_bytes += nbytes
             self.traffic.total_time_s += dl_t
 
+            if fault is not None and fault.drop:
+                self.fault_stats.dropped_fetches += 1
+                self.loop.call_after(
+                    dl_t, lambda now2: failed("drop", now2, card.owner),
+                    label=f"fetch-drop {card.model_id}",
+                    payload={"op": "fetch_drop", "requester": requester,
+                             "model": card.model_id},
+                )
+                return
+            if fault is not None and fault.corrupt:
+                # in-flight corruption: the device-side integrity check
+                # rejects the delivered blob (content hash mismatch)
+                self.fault_stats.corrupted_fetches += 1
+                self.loop.call_after(
+                    dl_t, lambda now2: failed("corrupt", now2, card.owner),
+                    label=f"fetch-corrupt {card.model_id}",
+                    payload={"op": "fetch_corrupt", "requester": requester,
+                             "model": card.model_id},
+                )
+                return
+
             def delivered(now2: float):
+                fraud, claimed, measured = self._check_fraud(params, card)
+                if fraud:
+                    self.loop.call_after(
+                        0.0,
+                        lambda now3: (self._punish_fraud(card),
+                                      failed("fraud", now3, card.owner)),
+                        label=f"fraud {card.model_id}",
+                        payload={"op": "fraud", "publisher": card.owner,
+                                 "model": card.model_id,
+                                 "claimed": claimed, "measured": measured},
+                    )
+                    return
                 on_done((params, card, best), now2)
 
-            self.loop.call_after(dl_t, delivered,
-                                 label=f"fetch {card.model_id} <- {best.vault_id}")
+            self.loop.call_after(
+                dl_t, delivered,
+                label=f"fetch {card.model_id} <- {best.vault_id}",
+                payload={"op": "fetch", "requester": requester,
+                         "model": card.model_id, "nbytes": nbytes,
+                         "edge": best.vault_id},
+            )
 
-        self.loop.call_after(0.0, do_query, label=f"query task={query.task}")
+        self.loop.call_after(0.0, do_query, label=f"query task={query.task}",
+                             payload={"op": "query", "task": query.task,
+                                      "requester": requester})
+
+    # -- verify-on-fetch -----------------------------------------------------
+    def _check_fraud(self, params, card):
+        """Re-evaluate a delivered model against its card's claim.
+
+        Returns ``(fraud, claimed, measured)``; ``measured`` is ``None``
+        when no verifier is wired or it cannot evaluate the architecture.
+        """
+        claimed = float(card.metrics.get("accuracy", 0.0))
+        if self.verifier is None:
+            return False, claimed, None
+        measured = self.verifier(params, card)
+        if measured is None:
+            return False, claimed, None
+        tol = (self.faults.verify_tolerance if self.faults is not None
+               else 0.05)
+        return claimed - float(measured) > tol, claimed, float(measured)
+
+    def _punish_fraud(self, card):
+        """Deregister the inflated card; slash its publisher once."""
+        self.fault_stats.frauds_detected += 1
+        self.discovery.deregister(card.model_id)
+        key = (card.model_id, card.version)
+        if key in self._frauded:
+            return
+        self._frauded.add(key)
+        if self.ledger is not None:
+            self.ledger.on_fraud(card.owner)
 
     # -- synchronous wrappers (classic API) ----------------------------------
     def publish(self, party_id: str, params, card):

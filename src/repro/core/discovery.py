@@ -91,6 +91,19 @@ class DiscoveryService:
         self._cards[card.model_id] = (card, vault_id)
         bisect.insort(self._by_task.setdefault(card.task, []), self._acc_key(card))
 
+    def deregister(self, model_id: str) -> bool:
+        """Drop a card from the registry (e.g. caught advertising inflated
+        metrics by verify-on-fetch).  Returns False if it was not listed."""
+        prev = self._cards.pop(model_id, None)
+        if prev is None:
+            return False
+        bucket = self._by_task[prev[0].task]
+        key = self._acc_key(prev[0])
+        i = bisect.bisect_left(bucket, key)
+        if i < len(bucket) and bucket[i] == key:
+            bucket.pop(i)
+        return True
+
     # -- matching -----------------------------------------------------------
     def _satisfies(self, card: ModelCard, q: ModelQuery) -> bool:
         if card.task != q.task:

@@ -8,18 +8,27 @@ cloud operator's account; fetching costs the requester.  Parties with no
 credits can still bootstrap via a small stipend (cold-start).
 
 Conservation: credits enter the economy only by *minting* (cold-start
-stipends and publish rewards) and every fetch is a zero-sum transfer
-(requester -> publisher + operator), so at any instant
+stipends and publish rewards), every fetch is a zero-sum transfer
+(requester -> publisher + operator), every refund reverses one, and fraud
+slashing burns balance and minted together — so at any instant
 
     sum(balances) == total_minted
 
 ``assert_conserved`` checks this invariant; the runtime exchange loop and
-the scale benchmark call it every cycle.
+the scale benchmarks call it every cycle.
+
+Fault tolerance (chaos runtime): ``on_refund`` reverses a paid fetch whose
+download was dropped or corrupted in flight, and ``on_fraud`` handles a
+publisher caught advertising an inflated card by the verify-on-fetch
+re-evaluation — all of the publisher's minted publish rewards are slashed
+(burned, keeping conservation exact) and the account is flagged so future
+publishes mint nothing.  A byzantine publisher therefore ends at most with
+its stipend, below any honest party's publish income.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict
+from typing import Dict, Set
 
 # the cloud operator's account: collects the service fee on every fetch
 OPERATOR = "cloud"
@@ -32,6 +41,9 @@ class LedgerEntry:
     downloads_served: int = 0
     fetches: int = 0
     denied: int = 0  # fetch attempts refused for insufficient credit
+    refunds: int = 0  # failed fetches reversed (drop/corruption/fraud)
+    frauds: int = 0  # times this account was caught publishing inflated cards
+    mint_earned: float = 0.0  # cumulative publish rewards (slashed on fraud)
 
 
 class IncentiveLedger:
@@ -53,6 +65,7 @@ class IncentiveLedger:
         self.service_fee = service_fee
         self.operator = operator
         self.minted = 0.0  # all credits ever created (stipends + rewards)
+        self.flagged: Set[str] = set()  # caught byzantine publishers
         self._acct(operator)  # operator starts at zero, no stipend
 
     def _acct(self, party: str) -> LedgerEntry:
@@ -64,12 +77,20 @@ class IncentiveLedger:
         return acct
 
     def on_publish(self, party: str, accuracy: float):
-        """Mint the publish reward + accuracy-proportional quality bonus."""
+        """Mint the publish reward + accuracy-proportional quality bonus.
+
+        Flagged accounts (caught publishing inflated cards) mint nothing:
+        reputation death is what keeps a repeat byzantine publisher from
+        re-earning slashed rewards cycle after cycle.
+        """
         acct = self._acct(party)
+        acct.published += 1
+        if party in self.flagged:
+            return
         reward = self.publish_reward + self.quality_bonus * max(accuracy, 0.0)
         acct.balance += reward
+        acct.mint_earned += reward
         self.minted += reward
-        acct.published += 1
 
     def can_fetch(self, party: str) -> bool:
         return self._acct(party).balance >= self.fetch_cost
@@ -90,6 +111,37 @@ class IncentiveLedger:
         pub.balance += self.fetch_cost - fee
         pub.downloads_served += 1
         self._acct(self.operator).balance += fee
+
+    def on_refund(self, requester: str, publisher: str):
+        """Reverse one paid fetch (dropped/corrupted/fraudulent delivery).
+
+        Exact inverse of :meth:`on_fetch` — requester is made whole, the
+        publisher and operator return their cut — so the transfer nets to
+        zero and conservation is untouched.
+        """
+        fee = self.fetch_cost * self.service_fee
+        req = self._acct(requester)
+        req.balance += self.fetch_cost
+        req.refunds += 1
+        self._acct(publisher).balance -= self.fetch_cost - fee
+        self._acct(self.operator).balance -= fee
+
+    def on_fraud(self, publisher: str) -> float:
+        """Slash a publisher caught advertising an inflated card.
+
+        Burns every publish reward the account ever minted (balance and
+        ``minted`` drop together, so conservation holds exactly) and flags
+        the account so future publishes mint nothing.  Returns the slashed
+        amount.  Idempotent for already-flagged accounts with no new mints.
+        """
+        acct = self._acct(publisher)
+        slashed = acct.mint_earned
+        acct.balance -= slashed
+        acct.mint_earned = 0.0
+        self.minted -= slashed
+        acct.frauds += 1
+        self.flagged.add(publisher)
+        return slashed
 
     def balance(self, party: str) -> float:
         return self._acct(party).balance
@@ -123,4 +175,7 @@ class IncentiveLedger:
             "operator": self.balance(self.operator),
             "minted": self.minted,
             "denied": sum(a.denied for a in self.accounts.values()),
+            "refunds": sum(a.refunds for a in self.accounts.values()),
+            "frauds": sum(a.frauds for a in self.accounts.values()),
+            "flagged": len(self.flagged),
         }

@@ -95,12 +95,17 @@ class LearningParty:
         card = self.make_card(eval_x, eval_y)
         return self.continuum.publish(self.party_id, self.params, card)
 
-    def publish_async(self, eval_x, eval_y, on_done=None) -> ModelCard:
-        """Event-scheduled publish; card discoverable at transfer completion."""
+    def publish_async(self, eval_x, eval_y, on_done=None,
+                      on_fail=None) -> ModelCard:
+        """Event-scheduled publish; card discoverable at transfer completion.
+
+        ``on_fail(sim_time)`` fires instead of ``on_done`` when a fault
+        plan drops the upload in flight.
+        """
         assert self.continuum is not None
         card = self.make_card(eval_x, eval_y)
         return self.continuum.publish_async(
-            self.party_id, self.params, card, on_done=on_done
+            self.party_id, self.params, card, on_done=on_done, on_fail=on_fail
         )
 
     def _default_query(self) -> ModelQuery:

@@ -34,12 +34,26 @@ def markov_trace(
     horizon: int = 500,
     seed: int = 0,
     always_on: bool = False,
+    avail_mean: float | None = None,
 ) -> AvailabilityTrace:
+    """Two-state Markov availability traces, one row per client.
+
+    ``avail_mean`` (if given) targets a mean stationary availability while
+    keeping per-client heterogeneity: pi ~ Beta centred on ``avail_mean``.
+    The fault-injection runtime uses this to dial a churn level (e.g. 30%
+    of parties offline on average) into an otherwise FLASH-like trace.
+    """
     rng = np.random.default_rng(seed)
     if always_on:
         return AvailabilityTrace(np.ones((num_clients, horizon), bool))
-    # stationary availability pi ~ Beta(2, 2.5); expected dwell ~ Geometric
-    pi = rng.beta(2.0, 2.5, num_clients)
+    if avail_mean is not None:
+        if not 0.0 < avail_mean < 1.0:
+            raise ValueError(f"avail_mean must be in (0, 1), got {avail_mean}")
+        # concentration 6 keeps the heavy-tailed per-client spread
+        pi = rng.beta(6.0 * avail_mean, 6.0 * (1.0 - avail_mean), num_clients)
+    else:
+        # stationary availability pi ~ Beta(2, 2.5); dwell ~ Geometric
+        pi = rng.beta(2.0, 2.5, num_clients)
     dwell = rng.integers(3, 30, num_clients)  # mean rounds per state visit
     p_stay_on = 1 - 1 / dwell
     # choose p_off->on to match stationary pi: pi = p_on / (p_on + p_off_rate)

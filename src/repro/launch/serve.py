@@ -51,7 +51,9 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
-    prefill_fn, model = make_prefill_step(cfg)
+    # cache sized for the full generation so no decode write ever clamps
+    prefill_fn, model = make_prefill_step(cfg,
+                                          cache_len=args.bucket + args.max_new)
     serve_fn, _ = make_serve_step(cfg)
     prefill_fn = jax.jit(prefill_fn)
     serve_fn = jax.jit(serve_fn, donate_argnums=(1,))

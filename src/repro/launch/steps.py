@@ -115,12 +115,16 @@ def make_train_step(cfg: ModelConfig, shape: ShapeConfig, *, accum_dtype=None):
     return train_step, model, opt
 
 
-def make_prefill_step(cfg: ModelConfig):
-    """(params, batch) -> (last-token logits, cache)."""
+def make_prefill_step(cfg: ModelConfig, cache_len=None):
+    """(params, batch) -> (last-token logits, cache).
+
+    ``cache_len`` sizes the decode KV cache; pass prompt length + decode
+    budget so generation never outgrows the cache (default: 2x prompt).
+    """
     model = build_model(cfg)
 
     def prefill_step(params, batch):
-        logits, _aux, cache = model.prefill(params, batch)
+        logits, _aux, cache = model.prefill(params, batch, cache_len=cache_len)
         return logits, cache
 
     return prefill_step, model
@@ -317,7 +321,10 @@ def input_specs(arch_cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
         batch = abstract_batch(cfg, shape, mesh, labels=True)
         return step, (params, opt_state, batch)
     if shape.kind == "prefill":
-        step, model = make_prefill_step(cfg)
+        # cache_len=S+1: the minimum legal decode headroom, so the analyzed
+        # KV-cache footprint stays comparable to the exact-S baseline
+        # instead of inheriting the serving default of 2*S
+        step, model = make_prefill_step(cfg, cache_len=shape.seq_len + 1)
         params = abstract_sharded_params(model, cfg, mesh)
         batch = abstract_batch(cfg, shape, mesh, labels=False)
         # Pin output shardings: the returned KV cache must land in the same

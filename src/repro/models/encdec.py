@@ -145,14 +145,21 @@ def encdec_cache(cfg: ModelConfig, batch: int, seq_len: int, dtype, *, abstract=
     return {"blocks": blocks, "pos": jnp.zeros((), jnp.int32)}
 
 
-def encdec_prefill(params, cfg: ModelConfig, batch):
+def encdec_prefill(params, cfg: ModelConfig, batch, cache_len=None):
     B, S = batch["tokens"].shape
+    # cache_len > S so decode writes never clamp onto the last prompt slot
+    cache_len = 2 * S if cache_len is None else int(cache_len)
+    if cache_len <= S:
+        raise ValueError(f"cache_len {cache_len} leaves no room to decode "
+                         f"past the {S}-token prompt")
     logits, aux, (entries, positions) = encdec_forward(
         params, cfg, batch, collect_cache=True, last_logit_only=True
     )
 
     def fill(one_k, one_v):
-        return attn.fill_cache_from_prefill(cfg, (one_k, one_v), positions, S)
+        return attn.fill_cache_from_prefill(
+            cfg, (one_k, one_v), positions, cache_len
+        )
 
     k, v = entries["kv"]
     xk, xv = entries["xkv"]
@@ -196,7 +203,9 @@ def build_encdec_model(cfg: ModelConfig) -> Model:
         param_specs=specs,
         init=init,
         forward=lambda params, batch: encdec_forward(params, cfg, batch),
-        prefill=lambda params, batch: encdec_prefill(params, cfg, batch),
+        prefill=lambda params, batch, cache_len=None: encdec_prefill(
+            params, cfg, batch, cache_len
+        ),
         decode=lambda params, cache, batch: encdec_decode(params, cfg, cache, batch),
         init_cache=lambda batch, seq_len, dtype=None: encdec_cache(
             cfg, batch, seq_len, dtype or jnp.dtype(cfg.dtype)

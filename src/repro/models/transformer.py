@@ -293,9 +293,19 @@ def decoder_cache(cfg: ModelConfig, batch: int, seq_len: int, dtype, *, abstract
     return {"blocks": blocks, "pos": jnp.zeros((), jnp.int32)}
 
 
-def decoder_prefill(params, cfg: ModelConfig, batch):
-    """Run the full sequence and return (last-token logits, aux, decode cache)."""
+def decoder_prefill(params, cfg: ModelConfig, batch, cache_len=None):
+    """Run the full sequence and return (last-token logits, aux, decode cache).
+
+    ``cache_len`` sizes the decode KV cache (default ``2 * S``).  It must
+    exceed the prompt length: a cache sized exactly ``S`` has no slot for
+    generated tokens, and ``dynamic_update_slice`` would silently clamp the
+    first decode write onto the last prompt token's K/V.
+    """
     B, S = batch["tokens"].shape
+    cache_len = 2 * S if cache_len is None else int(cache_len)
+    if cache_len <= S:
+        raise ValueError(f"cache_len {cache_len} leaves no room to decode "
+                         f"past the {S}-token prompt")
     logits, aux, (kvs, positions) = decoder_forward(
         params, cfg, batch, collect_cache=True, last_logit_only=True
     )
@@ -306,7 +316,9 @@ def decoder_prefill(params, cfg: ModelConfig, batch):
             k, v = entry["kv"]
 
             def fill(one_k, one_v):
-                return attn.fill_cache_from_prefill(cfg, (one_k, one_v), positions, S)
+                return attn.fill_cache_from_prefill(
+                    cfg, (one_k, one_v), positions, cache_len
+                )
 
             out["kv"] = jax.vmap(fill)(k, v)
         return out
@@ -392,7 +404,9 @@ def build_decoder_model(cfg: ModelConfig) -> Model:
         param_specs=specs,
         init=init,
         forward=lambda params, batch: decoder_forward(params, cfg, batch),
-        prefill=lambda params, batch: decoder_prefill(params, cfg, batch),
+        prefill=lambda params, batch, cache_len=None: decoder_prefill(
+            params, cfg, batch, cache_len
+        ),
         decode=lambda params, cache, batch: decoder_decode(params, cfg, cache, batch),
         init_cache=lambda batch, seq_len, dtype=None: decoder_cache(
             cfg, batch, seq_len, dtype or jnp.dtype(cfg.dtype)

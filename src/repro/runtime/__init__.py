@@ -16,7 +16,10 @@ __all__ = [
     "MDDPartyActor", "FLServerActor", "CycleRecord",
     "PartyPopulation", "stack_teachers",
     "CohortExchangeActor", "ExchangeConfig", "ExchangeReport", "CycleStats",
-    "run_exchange",
+    "run_exchange", "make_verifier", "split_cohorts",
+    "FaultPlan", "LinkFault",
+    "TraceRecording", "serialize_trace", "trace_digest",
+    "record", "replay", "assert_replay", "run_scenario",
 ]
 
 _LAZY = {
@@ -30,6 +33,17 @@ _LAZY = {
     "ExchangeReport": "repro.runtime.exchange",
     "CycleStats": "repro.runtime.exchange",
     "run_exchange": "repro.runtime.exchange",
+    "make_verifier": "repro.runtime.exchange",
+    "split_cohorts": "repro.runtime.exchange",
+    "FaultPlan": "repro.runtime.faults",
+    "LinkFault": "repro.runtime.faults",
+    "TraceRecording": "repro.runtime.trace",
+    "serialize_trace": "repro.runtime.trace",
+    "trace_digest": "repro.runtime.trace",
+    "record": "repro.runtime.trace",
+    "replay": "repro.runtime.trace",
+    "assert_replay": "repro.runtime.trace",
+    "run_scenario": "repro.runtime.trace",
 }
 
 

@@ -16,6 +16,7 @@ from typing import Callable, List, Optional
 import numpy as np
 
 from repro.core.learner import LearningParty
+from repro.runtime.faults import FaultPlan
 from repro.runtime.loop import EventLoop
 
 # reference device: simulated seconds of on-device compute per local step
@@ -57,6 +58,7 @@ class MDDPartyActor:
         slot_len_s: float = 60.0,
         start_jitter_s: float = 0.0,
         on_cycle: Optional[Callable[[CycleRecord], None]] = None,
+        faults: Optional[FaultPlan] = None,
     ):
         self.party = party
         self.eval_x, self.eval_y = eval_x, eval_y
@@ -68,6 +70,12 @@ class MDDPartyActor:
         self.slot_len_s = slot_len_s
         self.start_jitter_s = start_jitter_s
         self.on_cycle = on_cycle
+        # fault plan: churn gates this actor's slots (on top of any explicit
+        # availability trace), stragglers compute slower; link faults are
+        # applied by the continuum itself
+        self.faults = faults
+        if faults is not None:
+            self.compute_speed /= faults.slowdown(party.party_id)
         self.name = f"party:{party.party_id}"
         self.records: List[CycleRecord] = []
         self._loop: Optional[EventLoop] = None
@@ -76,6 +84,7 @@ class MDDPartyActor:
         self._t_cycle_start = 0.0
         self.offline_waits = 0
         self.fetch_denials = 0  # credit-gated fetches refused by the ledger
+        self.publish_drops = 0  # uploads lost in flight under the fault plan
 
     # -- scheduling glue -----------------------------------------------------
     def start(self, loop: EventLoop, at: float = 0.0):
@@ -86,6 +95,9 @@ class MDDPartyActor:
         self._loop.call_after(delay, self._wake, label=self.name)
 
     def _available(self, now: float) -> bool:
+        if (self.faults is not None
+                and not self.faults.party_online(self.party.party_id, now)):
+            return False
         if self.availability is None:
             return True
         slot = int(now // self.slot_len_s) % len(self.availability)
@@ -107,7 +119,8 @@ class MDDPartyActor:
         if self._phase == "publish":
             self._phase = "improve"
             self.party.publish_async(self.eval_x, self.eval_y,
-                                     on_done=self._published)
+                                     on_done=self._published,
+                                     on_fail=self._publish_failed)
             return None  # parked until the card lands in the cloud index
         if self._phase == "improve":
             self._phase = "train"
@@ -123,6 +136,12 @@ class MDDPartyActor:
             self._sleep(delay)
 
     def _published(self, card, now: float):
+        self._sleep(0.0)
+
+    def _publish_failed(self, now: float):
+        # upload dropped in flight: the cycle continues — this cycle's card
+        # simply never became discoverable (re-published next cycle)
+        self.publish_drops += 1
         self._sleep(0.0)
 
     def _denied(self, now: float):

@@ -38,6 +38,7 @@ import numpy as np
 from repro.core.continuum import Continuum
 from repro.core.discovery import ModelQuery
 from repro.core.incentives import IncentiveLedger
+from repro.runtime.faults import FaultPlan
 from repro.runtime.loop import EventLoop
 from repro.runtime.population import PartyPopulation, stack_teachers
 
@@ -70,6 +71,8 @@ class CycleStats:
     best_acc: float
     distill_loss: float
     teacher_fetches: Dict[str, int]  # teacher arch -> count
+    # paid fetches that failed in flight (drop/corruption/fraud; refunded)
+    failed: int = 0
 
 
 class CohortExchangeActor:
@@ -153,7 +156,7 @@ class CohortExchangeActor:
         # credit-gated queries in the second half: each party asks for a
         # strictly better model in its own logit space
         teachers = self._inbox  # party index -> (params, card)
-        counters = {"denied": 0, "misses": 0}
+        counters = {"denied": 0, "misses": 0, "failed": 0}
 
         def make_query(i):
             return ModelQuery(
@@ -175,9 +178,13 @@ class CohortExchangeActor:
                 def denied(_now2):
                     counters["denied"] += 1
 
+                def fetch_failed(_reason, _now2):
+                    counters["failed"] += 1
+
                 cont.discover_and_fetch_async(
                     make_query(i), done, top_k=cfg.top_k,
                     requester=pop.party_ids[i], on_denied=denied,
+                    on_fail=fetch_failed,
                 )
 
             self._loop.call_after(
@@ -265,6 +272,7 @@ class CohortExchangeActor:
             best_acc=float(accs.max()) if len(accs) else 0.0,
             distill_loss=mean_loss,
             teacher_fetches={a: len(ix) for a, ix in sorted(by_arch.items())},
+            failed=int(counters["failed"]),
         ))
         if self.on_cycle is not None:
             self.on_cycle(self.stats[-1])
@@ -282,6 +290,7 @@ class ExchangeReport:
     events: int
     cards: int
     traffic: Dict
+    faults: Dict = dataclasses.field(default_factory=dict)
 
     @property
     def total_fetches(self) -> int:
@@ -290,6 +299,72 @@ class ExchangeReport:
     @property
     def total_cross_arch(self) -> int:
         return sum(c.cross_arch for c in self.cycles)
+
+    @property
+    def total_failed(self) -> int:
+        return sum(c.failed for c in self.cycles)
+
+
+def split_cohorts(n_parties: int, mlp_frac: float):
+    """(n_lr, n_mlp) split shared by every heterogeneous-cohort builder
+    (the exchange/chaos benchmarks and the trace replay scenarios).
+
+    mlp_frac 0/1 are honoured (homogeneous runs); otherwise at least one
+    MLP party so the heterogeneous path is exercised at any party count.
+    """
+    if not 0.0 <= mlp_frac <= 1.0:
+        raise ValueError(f"mlp_frac must be in [0, 1], got {mlp_frac}")
+    if mlp_frac <= 0.0 or n_parties < 2:
+        n_mlp = 0
+    elif mlp_frac >= 1.0:
+        n_mlp = n_parties
+    else:
+        n_mlp = min(max(int(n_parties * mlp_frac), 1), n_parties - 1)
+    return n_parties - n_mlp, n_mlp
+
+
+def make_verifier(applies: Dict[str, Callable], eval_x, eval_y):
+    """Verify-on-fetch hook: re-measure a delivered model's accuracy.
+
+    ``applies`` maps architecture name -> apply fn (the same table the
+    exchange uses to integrate cross-architecture teachers).  Each arch's
+    eval is jitted once; unknown architectures return ``None`` (cannot
+    verify).  This is the device-side defence the byzantine fault model
+    is caught by: the card's *claimed* accuracy is checked against an
+    actual evaluation on the public split before the model is trusted.
+
+    Verdicts are memoized by ``(model_id, version)``: a vault blob is
+    content-hashed and immutable per version, and discovery's top-k
+    ranking concentrates fetches on a few popular teachers, so without
+    the cache every delivery of the same model would re-run the eval.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    jx = jnp.asarray(eval_x)
+    jy = np.asarray(eval_y)
+    jitted: Dict[str, Callable] = {}
+    verdicts: Dict[tuple, Optional[float]] = {}
+
+    def verify(params, card):
+        key = (card.model_id, card.version)
+        if key in verdicts:
+            return verdicts[key]
+        apply = applies.get(card.arch)
+        if apply is None:
+            verdicts[key] = None
+            return None
+        fn = jitted.get(card.arch)
+        if fn is None:
+            fn = jitted[card.arch] = jax.jit(
+                lambda p, x, a=apply: jnp.argmax(a(p, x), axis=-1)
+            )
+        preds = np.asarray(fn(params, jx))
+        measured = float((preds == jy).mean())
+        verdicts[key] = measured
+        return measured
+
+    return verify
 
 
 def run_exchange(
@@ -303,6 +378,7 @@ def run_exchange(
     edges: int = 8,
     availabilities: Optional[Sequence] = None,  # one trace per cohort
     on_cycle: Optional[Callable[[CycleStats], None]] = None,
+    faults: Optional[FaultPlan] = None,
 ) -> ExchangeReport:
     """Run heterogeneous cohorts through incentive-gated exchange cycles.
 
@@ -311,17 +387,40 @@ def run_exchange(
     cross-architecture fetches can be integrated, runs the event loop to
     quiescence, and returns the aggregate report.  Raises if the ledger
     ends non-conserved.
+
+    With ``faults``, the continuum is built under the fault plan: transfers
+    drop/delay/corrupt, stragglers slow down, byzantine publishers inflate
+    their cards, and — when the plan has byzantines — a verify-on-fetch
+    hook over the cohorts' own apply fns re-measures every delivered model
+    so inflated cards are caught, refunded, and slashed.  If the plan has
+    churn and no explicit ``availabilities`` are given, per-cohort traces
+    are derived from the plan.
     """
     cfg = cfg or ExchangeConfig()
+    applies = {pop.model.name: pop.model.apply for pop in cohorts}
     if continuum is None:
         ledger = ledger if ledger is not None else IncentiveLedger()
-        continuum = Continuum(ledger=ledger)
+        continuum = Continuum(ledger=ledger, faults=faults)
         for e in range(edges):
             continuum.add_edge_server(f"edge{e:03d}")
     elif ledger is not None and continuum.ledger is not ledger:
         raise ValueError("pass ledger or a continuum that already has one")
+    elif faults is not None and continuum.faults is not faults:
+        raise ValueError("pass faults or a continuum built with that plan")
+    if faults is None:
+        # a faults-built continuum passed without repeating faults= must
+        # still drive churn: the continuum's plan is the plan
+        faults = continuum.faults
+    if (faults is not None and faults.byzantine_frac > 0
+            and continuum.verifier is None):
+        # byzantine containment is the feature's headline guarantee: a
+        # caller-supplied faulted continuum gets the same verify-on-fetch
+        # defence the self-built path wires (unless it brought its own)
+        continuum.verifier = make_verifier(applies, eval_x, eval_y)
+    if availabilities is None and faults is not None and faults.churn > 0:
+        availabilities = [faults.cohort_availability(pop.num_parties, k)
+                          for k, pop in enumerate(cohorts)]
 
-    applies = {pop.model.name: pop.model.apply for pop in cohorts}
     actors = []
     for k, pop in enumerate(cohorts):
         avail = availabilities[k] if availabilities is not None else None
@@ -349,4 +448,5 @@ def run_exchange(
         events=continuum.loop.events_processed,
         cards=len(continuum.discovery),
         traffic=continuum.traffic.as_dict(),
+        faults=continuum.fault_stats.as_dict(),
     )

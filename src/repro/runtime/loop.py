@@ -11,7 +11,7 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
-from typing import Any, Callable, List, Optional, Protocol, runtime_checkable
+from typing import Any, Callable, Dict, List, Optional, Protocol, runtime_checkable
 
 from repro.runtime.clock import SimClock
 
@@ -30,11 +30,18 @@ class Actor(Protocol):
 
 @dataclasses.dataclass(frozen=True)
 class EventRecord:
-    """One fired event, kept in the loop's log for timelines/debugging."""
+    """One fired event, kept in the loop's log for timelines/debugging.
+
+    ``payload`` is an optional dict of JSON-able structured data attached at
+    schedule time (operation kind, party/model ids, byte counts, fault
+    outcomes); :mod:`repro.runtime.trace` serializes it canonically so a
+    whole run can be recorded, replayed, and byte-compared.
+    """
 
     time: float
     seq: int
     label: str
+    payload: Optional[Dict] = None
 
     def __str__(self) -> str:
         return f"[t={self.time:10.3f}s #{self.seq:06d}] {self.label}"
@@ -45,24 +52,25 @@ class EventLoop:
 
     def __init__(self, clock: Optional[SimClock] = None, keep_log: bool = True):
         self.clock = clock or SimClock()
-        self._heap: List = []  # (time, seq, label, callback)
+        self._heap: List = []  # (time, seq, label, callback, payload)
         self._seq = 0
         self.keep_log = keep_log
         self.log: List[EventRecord] = []
         self.events_processed = 0
 
     # -- scheduling ----------------------------------------------------------
-    def call_at(self, t: float, fn: Callable[[float], Any], label: str = "") -> None:
+    def call_at(self, t: float, fn: Callable[[float], Any], label: str = "",
+                payload: Optional[Dict] = None) -> None:
         if t < self.clock.now():
             raise ValueError(
                 f"cannot schedule in the past: {t} < {self.clock.now()}"
             )
-        heapq.heappush(self._heap, (t, self._seq, label, fn))
+        heapq.heappush(self._heap, (t, self._seq, label, fn, payload))
         self._seq += 1
 
     def call_after(self, delay: float, fn: Callable[[float], Any],
-                   label: str = "") -> None:
-        self.call_at(self.clock.now() + max(delay, 0.0), fn, label)
+                   label: str = "", payload: Optional[Dict] = None) -> None:
+        self.call_at(self.clock.now() + max(delay, 0.0), fn, label, payload)
 
     def add_actor(self, actor: Actor, start_at: float = 0.0,
                   label: str = "") -> None:
@@ -81,10 +89,10 @@ class EventLoop:
         """Fire the single next event. Returns False when the queue is empty."""
         if not self._heap:
             return False
-        t, seq, label, fn = heapq.heappop(self._heap)
+        t, seq, label, fn, payload = heapq.heappop(self._heap)
         self.clock.advance_to(t)
         if self.keep_log:
-            self.log.append(EventRecord(t, seq, label))
+            self.log.append(EventRecord(t, seq, label, payload))
         self.events_processed += 1
         fn(t)
         return True

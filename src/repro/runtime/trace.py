@@ -1,0 +1,315 @@
+"""Canonical event traces, golden fixtures, and deterministic replay.
+
+The event loop is a pure function of its inputs; this module turns that
+property into a regression harness.  A run's fired-event log (with the
+structured payloads attached by the continuum and fault layer) serializes
+to a *canonical* byte string — one compact, key-sorted JSON object per
+event — so two runs can be compared byte-for-byte.  A
+:class:`TraceRecording` captures everything needed to re-run a scenario
+(scenario name, args, and the :class:`~repro.runtime.faults.FaultPlan`),
+and :func:`replay` re-executes it and returns the fresh trace;
+:func:`assert_replay` fails loudly on the first diverging event.
+
+Golden-trace fixtures (checked-in recordings of small faulted runs) turn
+the whole simulation — churn, link faults, byzantine detection, refunds,
+the ledger — into a deterministic regression test: any change to event
+ordering, fault draws, transfer costing, or economy bookkeeping shows up
+as a byte diff against the fixture.
+
+Scenarios are registered by name so a recording stays runnable from its
+serialized form:
+
+  ``chaos_microworld``  numpy-only publish/fetch chaos over one continuum
+                        (platform-independent floats; used for the golden
+                        fixture)
+  ``chaos_exchange``    the full jax exchange economy under a fault plan
+                        (used for in-process record/replay tests and the
+                        chaos benchmark)
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+from typing import Callable, Dict, Sequence
+
+import numpy as np
+
+from repro.runtime.faults import FaultPlan
+from repro.runtime.loop import EventLoop, EventRecord
+
+
+# -- canonical serialization --------------------------------------------------
+
+def _native(obj):
+    """JSON fallback for numpy scalars (canonical native equivalents)."""
+    if isinstance(obj, np.integer):
+        return int(obj)
+    if isinstance(obj, np.floating):
+        return float(obj)
+    if isinstance(obj, np.bool_):
+        return bool(obj)
+    raise TypeError(f"payload value {obj!r} is not canonically serializable")
+
+
+def serialize_trace(log: Sequence[EventRecord]) -> bytes:
+    """One key-sorted compact JSON object per event, newline-separated.
+
+    Floats use CPython's shortest-roundtrip repr, so equal values always
+    produce equal bytes; key sorting removes dict-order dependence.
+    """
+    lines = [
+        json.dumps(
+            {"t": e.time, "n": e.seq, "l": e.label, "p": e.payload},
+            sort_keys=True, separators=(",", ":"), default=_native,
+        )
+        for e in log
+    ]
+    return ("\n".join(lines) + "\n").encode("utf-8") if lines else b""
+
+
+def trace_digest(blob: bytes) -> str:
+    return hashlib.sha256(blob).hexdigest()
+
+
+# -- scenario registry --------------------------------------------------------
+
+SCENARIOS: Dict[str, Callable] = {}
+
+
+def scenario(name: str):
+    """Register a scenario: ``fn(plan, **args) -> EventLoop`` (already run)."""
+
+    def wrap(fn):
+        SCENARIOS[name] = fn
+        return fn
+
+    return wrap
+
+
+def run_scenario(name: str, plan: FaultPlan, **args) -> bytes:
+    """Run a registered scenario and return its canonical trace."""
+    if name not in SCENARIOS:
+        raise KeyError(f"unknown scenario {name!r}; known: {sorted(SCENARIOS)}")
+    loop = SCENARIOS[name](plan, **args)
+    return serialize_trace(loop.log)
+
+
+# -- recordings ---------------------------------------------------------------
+
+@dataclasses.dataclass
+class TraceRecording:
+    """A replayable run: scenario + args + fault plan + the trace it made."""
+
+    scenario: str
+    args: Dict
+    plan: Dict  # FaultPlan.to_dict()
+    digest: str
+    n_events: int
+    trace: str  # canonical trace text (inspectable in diffs)
+
+    def to_json(self) -> str:
+        return json.dumps(dataclasses.asdict(self), sort_keys=True, indent=1)
+
+    @staticmethod
+    def from_json(s: str) -> "TraceRecording":
+        return TraceRecording(**json.loads(s))
+
+    def save(self, path):
+        with open(path, "w") as f:
+            f.write(self.to_json())
+
+    @staticmethod
+    def load(path) -> "TraceRecording":
+        with open(path) as f:
+            return TraceRecording.from_json(f.read())
+
+
+def record(name: str, plan: FaultPlan, **args) -> TraceRecording:
+    """Run a scenario once and capture it as a replayable recording."""
+    blob = run_scenario(name, plan, **args)
+    return TraceRecording(
+        scenario=name, args=dict(args), plan=plan.to_dict(),
+        digest=trace_digest(blob), n_events=blob.count(b"\n"),
+        trace=blob.decode("utf-8"),
+    )
+
+
+def replay(recording: TraceRecording) -> bytes:
+    """Re-run a recording's (scenario, args, plan); return the fresh trace."""
+    plan = FaultPlan.from_dict(dict(recording.plan))
+    return run_scenario(recording.scenario, plan, **recording.args)
+
+
+def assert_replay(recording: TraceRecording) -> None:
+    """Replay and require a byte-identical trace; diff the first divergence."""
+    fresh = replay(recording)
+    want = recording.trace.encode("utf-8")
+    if fresh == want:
+        return
+    got_lines = fresh.decode("utf-8").splitlines()
+    want_lines = recording.trace.splitlines()
+    for i, (g, w) in enumerate(zip(got_lines, want_lines)):
+        if g != w:
+            raise AssertionError(
+                f"trace diverged at event {i}:\n  recorded: {w}\n  replayed: {g}"
+            )
+    raise AssertionError(
+        f"trace length changed: recorded {len(want_lines)} events, "
+        f"replayed {len(got_lines)}"
+    )
+
+
+# -- scenarios ----------------------------------------------------------------
+
+@scenario("chaos_microworld")
+def chaos_microworld(plan: FaultPlan, parties: int = 16, cycles: int = 2,
+                     edges: int = 2, cycle_len_s: float = 120.0) -> EventLoop:
+    """Numpy-only chaos over one continuum: publish/fetch under the plan.
+
+    Every quantity is a pure-Python/numpy deterministic value (no jax, no
+    wall clock), so the trace is byte-stable across platforms — this is
+    the scenario the golden fixture records.  "True" accuracies are
+    scripted per (party, cycle); the verifier reports them back, so
+    byzantine inflation (which only alters the *card*) is caught exactly
+    like a real re-evaluation would.
+    """
+    from repro.core.continuum import Continuum
+    from repro.core.discovery import ModelQuery
+    from repro.core.incentives import IncentiveLedger
+    from repro.core.vault import ModelCard
+
+    # (model_id, version) -> scripted true accuracy, recorded when the card
+    # actually registers (a dropped upload must NOT overwrite the verdict
+    # for the version still listed in discovery) — the verifier abstains
+    # (None) on versions it never saw land, like a real re-evaluation of a
+    # model that never arrived
+    true_accs: Dict[tuple, float] = {}
+
+    def verifier(params, card):
+        return true_accs.get((card.model_id, card.version))
+
+    cont = Continuum(ledger=IncentiveLedger(), faults=plan, verifier=verifier)
+    for e in range(edges):
+        cont.add_edge_server(f"edge{e:02d}")
+    loop = cont.loop
+
+    ids = [f"p{i:03d}" for i in range(parties)]
+    params_of = {
+        pid: {"w": np.full((4 + i % 3, 3), float(i), np.float32),
+              "b": np.arange(3, dtype=np.float32) * float(i)}
+        for i, pid in enumerate(ids)
+    }
+
+    def true_acc(i: int, cycle: int) -> float:
+        return ((i * 37 + cycle * 11) % 90) / 100.0 + 0.05
+
+    counters = {"hits": 0, "misses": 0, "denied": 0, "failed": 0}
+
+    for cycle in range(cycles):
+        window = cycle * cycle_len_s
+        for i, pid in enumerate(ids):
+            t_pub = window + 1.0 + 1.7 * i
+            if not plan.party_online(pid, t_pub):
+                continue
+            acc = true_acc(i, cycle)
+
+            def do_publish(now, pid=pid, acc=acc):
+                card = ModelCard(
+                    model_id=f"{pid}/toy", task="chaos", arch="toy",
+                    owner=pid, num_params=15,
+                    metrics={"accuracy": acc, "per_class": {}},
+                )
+
+                def registered(final, _now, acc=acc):
+                    true_accs[(final.model_id, final.version)] = acc
+
+                cont.publish_async(pid, params_of[pid], card,
+                                   on_done=registered)
+
+            loop.call_at(t_pub, do_publish, label=f"{pid} publish c{cycle}")
+
+        for i, pid in enumerate(ids):
+            t_query = window + cycle_len_s * 0.5 + 1.3 * i
+            if not plan.party_online(pid, t_query):
+                continue
+            acc = true_acc(i, cycle)
+
+            def do_query(now, pid=pid, acc=acc):
+                def done(hit, _now):
+                    counters["hits" if hit is not None else "misses"] += 1
+
+                cont.discover_and_fetch_async(
+                    ModelQuery(task="chaos", min_accuracy=acc + 0.02,
+                               exclude_owners=(pid,)),
+                    done, requester=pid,
+                    on_denied=lambda _now: counters.__setitem__(
+                        "denied", counters["denied"] + 1),
+                    on_fail=lambda _r, _now: counters.__setitem__(
+                        "failed", counters["failed"] + 1),
+                )
+
+            loop.call_at(t_query, do_query, label=f"{pid} query c{cycle}")
+
+    loop.run_to_quiescence()
+    cont.ledger.assert_conserved()
+    # callback counters must agree with the continuum's own bookkeeping:
+    # every gated failure refunded, every denial counted on both sides
+    assert counters["failed"] == cont.fault_stats.refunds
+    assert counters["denied"] == cont.denied_fetches
+    return loop
+
+
+@scenario("chaos_exchange")
+def chaos_exchange(plan: FaultPlan, parties: int = 64, cycles: int = 2,
+                   edges: int = 4, mlp_frac: float = 0.25,
+                   data_seed: int = 0) -> EventLoop:
+    """The full jax exchange economy (vmapped cohorts, gated fetches,
+    batched KD, verify-on-fetch) under a fault plan.
+
+    Deterministic within a process/platform; used by in-process
+    record/replay tests and as the engine of ``benchmarks/chaos_scale``.
+    """
+    from repro.core.continuum import Continuum
+    from repro.core.incentives import IncentiveLedger
+    from repro.models.small import make_lr, make_mlp
+    from repro.runtime.exchange import (ExchangeConfig, run_exchange,
+                                        split_cohorts)
+    from repro.runtime.population import PartyPopulation
+
+    n_per_party, n_feat, n_classes = 48, 12, 6
+    rng = np.random.default_rng(data_seed)
+    w_true = rng.normal(size=(n_feat, n_classes)).astype(np.float32)
+    x = rng.normal(size=(parties, n_per_party, n_feat)).astype(np.float32)
+    y_clean = (x @ w_true).argmax(-1)
+    noise = rng.uniform(0.0, 0.6, size=parties)
+    flip = rng.random((parties, n_per_party)) < noise[:, None]
+    y = np.where(flip, rng.integers(0, n_classes, y_clean.shape),
+                 y_clean).astype(np.int32)
+    ex = rng.normal(size=(128, n_feat)).astype(np.float32)
+    ey = (ex @ w_true).argmax(-1).astype(np.int32)
+
+    n_lr, n_mlp = split_cohorts(parties, mlp_frac)
+    cohorts = []
+    if n_lr:
+        cohorts.append(PartyPopulation(
+            make_lr(num_features=n_feat, num_classes=n_classes),
+            x[:n_lr], y[:n_lr], task="chaos_x", lr=0.1, batch_size=24,
+            seed=data_seed, party_ids=[f"lr{i}" for i in range(n_lr)],
+        ))
+    if n_mlp:
+        cohorts.append(PartyPopulation(
+            make_mlp(num_features=n_feat, num_classes=n_classes, hidden=16),
+            x[n_lr:], y[n_lr:], task="chaos_x", lr=0.1, batch_size=24,
+            seed=data_seed + 1, party_ids=[f"mlp{i}" for i in range(n_mlp)],
+        ))
+
+    # run_exchange wires verify-on-fetch onto the faulted continuum itself
+    cont = Continuum(ledger=IncentiveLedger(), faults=plan)
+    for e in range(edges):
+        cont.add_edge_server(f"edge{e:03d}")
+    run_exchange(
+        cohorts, ex, ey, cfg=ExchangeConfig(cycles=cycles, distill_epochs=1),
+        continuum=cont, faults=plan,
+    )
+    return cont.loop

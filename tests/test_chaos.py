@@ -1,0 +1,444 @@
+"""Chaos continuum: deterministic fault injection (churn, link faults,
+stragglers, byzantine publishers), verify-on-fetch containment, refund
+accounting, and golden-trace record/replay."""
+import json
+import pathlib
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.continuum import Continuum
+from repro.core.discovery import ModelQuery
+from repro.core.incentives import OPERATOR, IncentiveLedger
+from repro.core.vault import ModelCard
+from repro.models.small import make_lr
+from repro.runtime.faults import FaultPlan
+from repro.runtime.loop import EventLoop
+from repro.runtime.trace import (TraceRecording, assert_replay, record,
+                                 replay, serialize_trace, trace_digest)
+
+GOLDEN_DIR = pathlib.Path(__file__).parent / "golden"
+
+
+def _card(mid="m1", task="t", acc=0.8, owner="alice"):
+    return ModelCard(
+        model_id=mid, task=task, arch="lr", owner=owner, num_params=36,
+        metrics={"accuracy": acc, "per_class": {}},
+    )
+
+
+def _params(seed=0):
+    model = make_lr(num_features=8, num_classes=4)
+    return model, model.init(jax.random.PRNGKey(seed))
+
+
+# -- fault plan determinism ----------------------------------------------------
+
+
+def test_plan_decisions_deterministic_and_seed_sensitive():
+    plan_a = FaultPlan(seed=1, byzantine_frac=0.3, straggler_frac=0.3,
+                       drop_prob=0.3)
+    plan_a2 = FaultPlan(seed=1, byzantine_frac=0.3, straggler_frac=0.3,
+                        drop_prob=0.3)
+    plan_b = FaultPlan(seed=2, byzantine_frac=0.3, straggler_frac=0.3,
+                       drop_prob=0.3)
+    ids = [f"p{i}" for i in range(200)]
+    byz_a = [plan_a.is_byzantine(p) for p in ids]
+    assert byz_a == [plan_a2.is_byzantine(p) for p in ids]
+    assert byz_a != [plan_b.is_byzantine(p) for p in ids]
+    # frequencies track the configured fraction
+    assert 0.15 < np.mean(byz_a) < 0.45
+    faults = [plan_a.link_fault("fetch", p, 0.0) for p in ids]
+    assert faults == [plan_a2.link_fault("fetch", p, 0.0) for p in ids]
+    assert 0.15 < np.mean([f.drop for f in faults]) < 0.45
+
+
+def test_plan_validation():
+    with pytest.raises(ValueError):
+        FaultPlan(drop_prob=1.5)
+    with pytest.raises(ValueError):
+        FaultPlan(churn=-0.1)
+    with pytest.raises(ValueError):
+        FaultPlan(max_delay_factor=0.5)
+
+
+def test_plan_round_trips_through_dict():
+    plan = FaultPlan(seed=5, churn=0.4, drop_prob=0.2, byzantine_frac=0.1)
+    assert FaultPlan.from_dict(plan.to_dict()) == plan
+
+
+def test_party_online_churn():
+    always = FaultPlan(seed=0)
+    assert all(always.party_online(f"p{i}", t)
+               for i in range(8) for t in (0.0, 1e4))
+    churny = FaultPlan(seed=0, churn=0.5)
+    states = [churny.party_online(f"p{i}", t * 60.0)
+              for i in range(50) for t in range(20)]
+    assert any(states) and not all(states)
+    # deterministic per (party, slot)
+    assert churny.party_online("p3", 120.0) == churny.party_online("p3", 120.0)
+
+
+def test_link_fault_corruption_only_hits_fetches():
+    plan = FaultPlan(seed=0, corrupt_prob=1.0)
+    assert not plan.link_fault("publish", "p", 0.0).corrupt
+    assert plan.link_fault("fetch", "p", 0.0).corrupt
+    delayed = FaultPlan(seed=0, delay_prob=1.0, max_delay_factor=3.0)
+    f = delayed.link_fault("fetch", "p", 0.0)
+    assert 1.0 <= f.delay_factor <= 3.0
+
+
+def test_slowdown_only_for_stragglers():
+    plan = FaultPlan(seed=0, straggler_frac=0.5, straggler_slowdown=8.0)
+    slows = {plan.slowdown(f"p{i}") for i in range(50)}
+    assert slows == {1.0, 8.0}
+    assert FaultPlan(seed=0).slowdown("p0") == 1.0
+
+
+# -- continuum under link faults -----------------------------------------------
+
+
+def _world(faults=None, verifier=None, **ledger_kw):
+    cont = Continuum(ledger=IncentiveLedger(**ledger_kw), faults=faults,
+                     verifier=verifier)
+    cont.add_edge_server("edge0")
+    model, params = _params()
+    return cont, model, params
+
+
+def test_dropped_publish_never_discoverable():
+    cont, model, params = _world(faults=FaultPlan(seed=0, drop_prob=1.0))
+    failed = []
+    cont.publish_async("alice", params, _card("alice/lr"),
+                       on_fail=lambda now: failed.append(now))
+    cont.loop.run_to_quiescence()
+    assert len(cont.discovery) == 0
+    assert failed and failed[0] > 0.0  # upload time elapsed before the loss
+    assert cont.fault_stats.dropped_publishes == 1
+    # no card arrived, so no account was ever opened and nothing minted
+    assert "alice" not in cont.ledger.accounts
+    cont.ledger.assert_conserved()
+
+
+def test_dropped_fetch_refunds_requester():
+    cont, model, params = _world()
+    cont.publish("alice", params, _card("alice/lr", acc=0.8))
+    cont.faults = FaultPlan(seed=0, drop_prob=1.0)  # faults start post-publish
+    hit = cont.discover_and_fetch(ModelQuery(task="t"), requester="bob")
+    assert hit is None
+    led = cont.ledger
+    assert led.balance("bob") == pytest.approx(5.0)  # made whole
+    assert led.accounts["bob"].refunds == 1
+    assert led.balance(OPERATOR) == pytest.approx(0.0)  # fee returned
+    assert cont.fault_stats.dropped_fetches == 1
+    assert cont.fault_stats.refunds == 1
+    led.assert_conserved()
+
+
+def test_corrupted_fetch_refunds_requester():
+    cont, model, params = _world(faults=FaultPlan(seed=0, corrupt_prob=1.0))
+    cont.publish("alice", params, _card("alice/lr", acc=0.8))
+    reasons = []
+    cont.discover_and_fetch_async(
+        ModelQuery(task="t"), lambda hit, now: None, requester="bob",
+        on_fail=lambda reason, now: reasons.append(reason),
+    )
+    cont.loop.run_to_quiescence()
+    assert reasons == ["corrupt"]
+    assert cont.fault_stats.corrupted_fetches == 1
+    assert cont.ledger.balance("bob") == pytest.approx(5.0)
+    cont.ledger.assert_conserved()
+
+
+def test_delayed_and_straggler_transfers_take_longer():
+    def publish_time(faults):
+        cont, model, params = _world(faults=faults)
+        cont.publish("alice", params, _card("alice/lr"))
+        return cont.clock.now()
+
+    t_clean = publish_time(None)
+    t_delay = publish_time(FaultPlan(seed=0, delay_prob=1.0,
+                                     max_delay_factor=4.0))
+    t_slow = publish_time(FaultPlan(seed=0, straggler_frac=1.0,
+                                    straggler_slowdown=8.0))
+    assert t_delay > t_clean
+    assert t_slow == pytest.approx(8.0 * t_clean)
+
+
+# -- byzantine publishers + verify-on-fetch ------------------------------------
+
+
+def test_byzantine_card_caught_refunded_and_slashed():
+    plan = FaultPlan(seed=0, byzantine_frac=1.0, byzantine_inflation=0.5,
+                     verify_tolerance=0.1)
+    cont, model, params = _world(faults=plan, verifier=lambda p, c: 0.4)
+    cont.publish("alice", params, _card("alice/lr", acc=0.4))
+    # the stored card advertises the inflated accuracy
+    assert len(cont.discovery) == 1
+    stored = cont.discovery._cards["alice/lr"][0]
+    assert stored.metrics["accuracy"] == pytest.approx(0.9)
+    # alice minted a reward off the inflated claim
+    assert cont.ledger.balance("alice") > 5.0
+
+    hit = cont.discover_and_fetch(ModelQuery(task="t"), requester="bob")
+    assert hit is None  # fraud: the model is rejected, not integrated
+    led = cont.ledger
+    assert cont.fault_stats.frauds_detected == 1
+    assert len(cont.discovery) == 0  # card deregistered
+    assert led.balance("bob") == pytest.approx(5.0)  # refunded
+    assert led.balance("alice") == pytest.approx(5.0)  # slashed to stipend
+    assert "alice" in led.flagged
+    led.assert_conserved()
+
+    # re-publishing mints nothing for a flagged account
+    minted_before = led.minted
+    cont.publish("alice", params, _card("alice/lr", acc=0.4))
+    assert led.minted == minted_before
+    assert led.balance("alice") == pytest.approx(5.0)
+    led.assert_conserved()
+
+
+def test_honest_card_passes_verification():
+    plan = FaultPlan(seed=0, byzantine_frac=0.0, verify_tolerance=0.1)
+    cont, model, params = _world(faults=plan, verifier=lambda p, c: 0.8)
+    cont.publish("alice", params, _card("alice/lr", acc=0.8))
+    hit = cont.discover_and_fetch(ModelQuery(task="t"), requester="bob")
+    assert hit is not None
+    assert cont.fault_stats.frauds_detected == 0
+    cont.ledger.assert_conserved()
+
+
+def test_unverifiable_arch_is_not_punished():
+    plan = FaultPlan(seed=0, byzantine_frac=1.0, byzantine_inflation=0.5)
+    cont, model, params = _world(faults=plan, verifier=lambda p, c: None)
+    cont.publish("alice", params, _card("alice/lr", acc=0.4))
+    hit = cont.discover_and_fetch(ModelQuery(task="t"), requester="bob")
+    assert hit is not None  # verifier abstained; delivery stands
+    assert cont.fault_stats.frauds_detected == 0
+
+
+# -- ledger refund/fraud unit behaviour ----------------------------------------
+
+
+def test_ledger_refund_is_exact_inverse_of_fetch():
+    led = IncentiveLedger(fetch_cost=2.0, service_fee=0.2)
+    led.on_publish("alice", 0.8)
+    before = {p: led.balance(p) for p in ("alice", "bob", OPERATOR)}
+    led.on_fetch("bob", "alice")
+    led.on_refund("bob", "alice")
+    for p, bal in before.items():
+        assert led.balance(p) == pytest.approx(bal)
+    assert led.accounts["bob"].refunds == 1
+    led.assert_conserved()
+
+
+def test_ledger_fraud_slashes_all_minted_rewards_and_flags():
+    led = IncentiveLedger()
+    led.on_publish("eve", 0.9)
+    led.on_publish("eve", 0.95)
+    minted = led.accounts["eve"].mint_earned
+    assert minted > 0
+    slashed = led.on_fraud("eve")
+    assert slashed == pytest.approx(minted)
+    assert led.balance("eve") == pytest.approx(5.0)  # stipend remains
+    assert "eve" in led.flagged
+    led.assert_conserved()
+    # second detection with no new mints slashes nothing further
+    assert led.on_fraud("eve") == 0.0
+    led.assert_conserved()
+
+
+# -- actors under faults -------------------------------------------------------
+
+
+def _actor_world(faults=None, cycles=1):
+    from repro.core.learner import LearningParty
+    from repro.data.federated_datasets import make_lr_synthetic
+    from repro.runtime.actors import MDDPartyActor
+
+    ds = make_lr_synthetic(num_clients=2, seed=0)
+    model = make_lr(num_features=ds.num_features, num_classes=ds.num_classes)
+    cont = Continuum(faults=faults)
+    cont.add_edge_server("edge0")
+    ex, ey = ds.merged_test(max_per_client=10)
+    party = LearningParty("p0", model, ds.clients[ds.client_ids()[0]], "lr",
+                          cont, seed=0)
+    actor = MDDPartyActor(party, ex, ey, cycles=cycles, local_epochs=1,
+                          distill_epochs=1, faults=faults)
+    actor.start(cont.loop)
+    cont.loop.run_to_quiescence()
+    return cont, actor
+
+
+def test_actor_survives_dropped_publishes():
+    cont, actor = _actor_world(faults=FaultPlan(seed=0, drop_prob=1.0),
+                               cycles=2)
+    assert len(actor.records) == 2  # no deadlock: every cycle completed
+    assert actor.publish_drops == 2
+    assert len(cont.discovery) == 0
+    assert not any(r.found_teacher for r in actor.records)
+
+
+def test_actor_straggler_cycles_run_slower():
+    _, fast = _actor_world()
+    _, slow = _actor_world(faults=FaultPlan(seed=0, straggler_frac=1.0,
+                                            straggler_slowdown=8.0))
+    assert slow.records[0].t_end > fast.records[0].t_end
+
+
+# -- exchange loop under a fault plan ------------------------------------------
+
+
+def _chaos_exchange_world(plan, n_lr=8, n_mlp=4, cycles=2):
+    from repro.models.small import make_mlp
+    from repro.runtime.exchange import ExchangeConfig, run_exchange
+    from repro.runtime.population import PartyPopulation
+
+    rng = np.random.default_rng(0)
+    f, c, n = 10, 5, 48
+    w = rng.normal(size=(f, c)).astype(np.float32)
+
+    def data(k):
+        x = rng.normal(size=(k, n, f)).astype(np.float32)
+        y = (x @ w).argmax(-1).astype(np.int32)
+        return x, y
+
+    xa, ya = data(n_lr)
+    xb, yb = data(n_mlp)
+    ex = rng.normal(size=(96, f)).astype(np.float32)
+    ey = (ex @ w).argmax(-1).astype(np.int32)
+    pops = [
+        PartyPopulation(make_lr(f, c), xa, ya, task="cx", lr=0.2, seed=0,
+                        party_ids=[f"lr{i}" for i in range(n_lr)]),
+        PartyPopulation(make_mlp(f, c), xb, yb, task="cx", lr=0.2, seed=1,
+                        party_ids=[f"mlp{i}" for i in range(n_mlp)]),
+    ]
+    ledger = IncentiveLedger()
+    report = run_exchange(pops, ex, ey, cfg=ExchangeConfig(cycles=cycles),
+                          ledger=ledger, edges=2, faults=plan)
+    return report, ledger, pops
+
+
+def test_run_exchange_under_faults_conserves_and_accounts():
+    plan = FaultPlan(seed=1, churn=0.3, drop_prob=0.3, delay_prob=0.2,
+                     corrupt_prob=0.1, byzantine_frac=0.25,
+                     byzantine_inflation=0.5)
+    report, ledger, pops = _chaos_exchange_world(plan)
+    ledger.assert_conserved()
+    fs = report.faults
+    # the plan actually bit: something dropped or got corrupted or slashed
+    assert (fs["dropped_publishes"] + fs["dropped_fetches"]
+            + fs["corrupted_fetches"] + fs["frauds_detected"]) > 0
+    # every failed (refunded) paid fetch is visible in both views
+    assert fs["refunds"] == sum(a.refunds for a in ledger.accounts.values())
+    assert report.total_failed == fs["refunds"]
+    # operator keeps fees only for non-refunded paid fetches
+    paid = sum(a.fetches for a in ledger.accounts.values())
+    fee = ledger.fetch_cost * ledger.service_fee
+    assert ledger.balance(ledger.operator) == pytest.approx(
+        (paid - fs["refunds"]) * fee
+    )
+
+
+def test_run_exchange_uses_continuum_held_fault_plan_for_churn():
+    """Passing a faults-built continuum without repeating faults= must not
+    silently lose churn gating: the continuum's plan is the plan."""
+    from repro.runtime.exchange import ExchangeConfig, run_exchange
+    from repro.runtime.population import PartyPopulation
+
+    rng = np.random.default_rng(0)
+    f, c = 8, 4
+    x = rng.normal(size=(6, 32, f)).astype(np.float32)
+    w = rng.normal(size=(f, c)).astype(np.float32)
+    y = (x @ w).argmax(-1).astype(np.int32)
+    ex = rng.normal(size=(64, f)).astype(np.float32)
+    ey = (ex @ w).argmax(-1).astype(np.int32)
+    pop = PartyPopulation(make_lr(f, c), x, y, task="t", seed=0)
+    cont = Continuum(ledger=IncentiveLedger(),
+                     faults=FaultPlan(seed=0, churn=0.6))
+    cont.add_edge_server("e0")
+    report = run_exchange([pop], ex, ey, cfg=ExchangeConfig(cycles=3),
+                          continuum=cont)
+    assert any(s.online < pop.num_parties for s in report.cycles)
+
+
+def test_run_exchange_byzantines_contained_below_honest_median():
+    plan = FaultPlan(seed=3, byzantine_frac=0.25, byzantine_inflation=0.5)
+    report, ledger, pops = _chaos_exchange_world(plan, cycles=3)
+    ids = [pid for pop in pops for pid in pop.party_ids]
+    byz = [pid for pid in ids if plan.is_byzantine(pid)]
+    honest = [pid for pid in ids if not plan.is_byzantine(pid)]
+    assert byz and honest
+    assert report.faults["frauds_detected"] > 0
+    byz_median = float(np.median([ledger.balance(p) for p in byz]))
+    honest_median = float(np.median([ledger.balance(p) for p in honest]))
+    assert byz_median <= honest_median
+    ledger.assert_conserved()
+
+
+# -- traces, recording, replay -------------------------------------------------
+
+
+def test_serialize_trace_is_canonical_and_handles_numpy():
+    loop = EventLoop()
+    loop.call_at(1.0, lambda t: None, label="a",
+                 payload={"z": np.int64(3), "a": np.float32(0.5),
+                          "ok": np.bool_(True)})
+    loop.call_at(2.0, lambda t: None, label="b")
+    loop.run_to_quiescence()
+    blob = serialize_trace(loop.log)
+    lines = blob.decode().splitlines()
+    assert len(lines) == 2
+    first = json.loads(lines[0])
+    assert first == {"t": 1.0, "n": 0, "l": "a",
+                     "p": {"z": 3, "a": 0.5, "ok": True}}
+    # key order is sorted => byte-stable
+    assert lines[0].index('"l"') < lines[0].index('"n"') < lines[0].index('"p"')
+    assert trace_digest(blob) == trace_digest(serialize_trace(loop.log))
+
+
+def test_record_replay_microworld_byte_identical():
+    plan = FaultPlan(seed=4, churn=0.3, drop_prob=0.15, delay_prob=0.2,
+                     corrupt_prob=0.1, straggler_frac=0.2,
+                     byzantine_frac=0.2, byzantine_inflation=0.4)
+    rec = record("chaos_microworld", plan, parties=12, cycles=2)
+    assert rec.n_events > 0
+    assert replay(rec) == rec.trace.encode()
+    assert_replay(rec)  # must not raise
+
+
+def test_replay_detects_a_changed_plan():
+    plan = FaultPlan(seed=4, drop_prob=0.3)
+    rec = record("chaos_microworld", plan, parties=10, cycles=1)
+    tampered = TraceRecording.from_json(rec.to_json())
+    tampered.plan["drop_prob"] = 0.0
+    with pytest.raises(AssertionError):
+        assert_replay(tampered)
+
+
+def test_golden_trace_fixture_replays_byte_identical():
+    """The checked-in golden trace pins the full chaos pipeline: event
+    ordering, fault draws, transfer costing, refunds, and slashing.  Any
+    behavioural change to those layers shows up here as a byte diff."""
+    rec = TraceRecording.load(GOLDEN_DIR / "chaos_microworld.json")
+    assert rec.digest == trace_digest(rec.trace.encode())
+    # the fixture exercises every fault path
+    ops = {json.loads(line)["p"]["op"]
+           for line in rec.trace.splitlines()
+           if json.loads(line)["p"] is not None}
+    assert {"publish", "publish_drop", "fetch", "fetch_drop",
+            "fetch_corrupt", "fraud", "query", "card"} <= ops
+    assert_replay(rec)
+
+
+@pytest.mark.slow
+def test_record_replay_1k_party_faulted_exchange():
+    """Acceptance: a 1k-party faulted exchange run records and replays to a
+    byte-identical serialized trace."""
+    plan = FaultPlan(seed=7, churn=0.3, drop_prob=0.1, delay_prob=0.1,
+                     corrupt_prob=0.02, straggler_frac=0.05,
+                     byzantine_frac=0.01)
+    rec = record("chaos_exchange", plan, parties=1000, cycles=2)
+    assert rec.n_events > 1000
+    assert_replay(rec)

@@ -1,0 +1,193 @@
+"""Exchange-loop edge paths: carry-over inbox integration at run end,
+denial counter agreement across continuum/ledger/stats, and on_denied
+callbacks under credit exhaustion."""
+import jax
+import numpy as np
+
+from repro.core.continuum import Continuum
+from repro.core.incentives import IncentiveLedger
+from repro.models.small import make_lr, make_mlp
+from repro.runtime.exchange import CohortExchangeActor, ExchangeConfig
+from repro.runtime.faults import FaultPlan
+from repro.runtime.population import PartyPopulation
+
+
+def _cohort_data(n_parties, f=8, c=4, n=32, seed=0):
+    rng = np.random.default_rng(seed)
+    w = rng.normal(size=(f, c)).astype(np.float32)
+    x = rng.normal(size=(n_parties, n, f)).astype(np.float32)
+    y = (x @ w).argmax(-1).astype(np.int32)
+    ex = rng.normal(size=(64, f)).astype(np.float32)
+    ey = (ex @ w).argmax(-1).astype(np.int32)
+    return x, y, ex, ey
+
+
+def _continuum(ledger=None, faults=None, edges=2):
+    cont = Continuum(ledger=ledger, faults=faults)
+    for e in range(edges):
+        cont.add_edge_server(f"edge{e}")
+    return cont
+
+
+# -- carry-over inbox: downloads landing after the final distill event ---------
+
+
+def test_straggler_download_lands_in_inbox_and_is_integrated_at_run_end():
+    """A paid download that completes after the last cycle's distill event
+    must not be dropped: it waits in the inbox and integrate_stragglers()
+    folds it into the final cycle's stats."""
+    # per-party straggler decisions are hashed from ids: pick publisher ids
+    # that stay fast and student ids that are heavily slowed, so cards land
+    # in time for queries but the students' downloads overrun the cycle
+    plan = FaultPlan(seed=0, straggler_frac=0.5, straggler_slowdown=60.0)
+    fast_ids = [f"f{i}" for i in range(400)
+                if not plan.is_straggler(f"f{i}")][:4]
+    slow_ids = [f"s{i}" for i in range(400) if plan.is_straggler(f"s{i}")][:3]
+    assert len(fast_ids) == 4 and len(slow_ids) == 3
+
+    f, c = 8, 4
+    xa, ya, ex, ey = _cohort_data(4, f, c, seed=0)
+    xb, yb, _, _ = _cohort_data(3, f, c, seed=1)
+    pub = PartyPopulation(make_lr(f, c), xa, ya, task="edge", lr=0.2, seed=0,
+                          party_ids=fast_ids)
+    stu = PartyPopulation(make_mlp(f, c), xb, yb, task="edge", lr=0.2, seed=1,
+                          party_ids=slow_ids)
+    applies = {pub.model.name: pub.model.apply, stu.model.name: stu.model.apply}
+
+    cont = _continuum(ledger=IncentiveLedger(), faults=plan)
+    cfg = ExchangeConfig(cycles=1, cycle_len_s=0.4, min_gain=-1.0)
+    a_pub = CohortExchangeActor(pub, cont, ex, ey, cfg=cfg,
+                                teacher_applies=applies)
+    a_stu = CohortExchangeActor(stu, cont, ex, ey, cfg=cfg,
+                                teacher_applies=applies)
+    a_pub.start(cont.loop)
+    a_stu.start(cont.loop)
+    cont.loop.run_to_quiescence()
+
+    # the slow students' downloads (60x slower) overran the 0.4s cycle: the
+    # teachers are waiting in the inbox, paid for but not yet integrated
+    assert a_stu._inbox
+    n_late = len(a_stu._inbox)
+    late_idx = sorted(a_stu._inbox)
+    fetched_before = a_stu.stats[-1].fetched
+    params_before = jax.tree_util.tree_map(np.asarray, stu.params)
+
+    a_stu.integrate_stragglers()
+
+    assert a_stu._inbox == {}
+    last = a_stu.stats[-1]
+    assert last.fetched == fetched_before + n_late
+    assert sum(last.teacher_fetches.values()) >= n_late
+    # the late teachers were actually distilled into the students
+    changed = [
+        i for i in late_idx
+        if any(not np.allclose(lb[i], np.asarray(la[i]))
+               for lb, la in zip(jax.tree_util.tree_leaves(params_before),
+                                 jax.tree_util.tree_leaves(stu.params)))
+    ]
+    assert changed == late_idx
+    cont.ledger.assert_conserved()
+
+
+def test_integrate_stragglers_is_a_noop_without_inbox_or_stats():
+    f, c = 8, 4
+    x, y, ex, ey = _cohort_data(2, f, c)
+    pop = PartyPopulation(make_lr(f, c), x, y, task="edge", lr=0.2, seed=0)
+    cont = _continuum()
+    actor = CohortExchangeActor(pop, cont, ex, ey,
+                                cfg=ExchangeConfig(cycles=1))
+    # no run yet: nothing to fold, nothing to crash on
+    actor.integrate_stragglers()
+    assert actor.stats == []
+
+
+# -- denial counters under credit exhaustion -----------------------------------
+
+
+def test_denial_counters_agree_across_all_views():
+    """When the economy is too tight to fetch, every layer must report the
+    same denials: CycleStats, the continuum, and the ledger accounts."""
+    f, c = 8, 4
+    x, y, ex, ey = _cohort_data(5, f, c)
+    pop = PartyPopulation(make_lr(f, c), x, y, task="edge", lr=0.2, seed=0)
+    ledger = IncentiveLedger(stipend=0.0, fetch_cost=100.0,
+                             publish_reward=0.1, quality_bonus=0.1)
+    cont = _continuum(ledger=ledger)
+    actor = CohortExchangeActor(pop, cont, ex, ey,
+                                cfg=ExchangeConfig(cycles=2))
+    actor.start(cont.loop)
+    cont.loop.run_to_quiescence()
+    actor.integrate_stragglers()
+
+    stats_denied = sum(s.denied for s in actor.stats)
+    assert stats_denied == sum(s.online for s in actor.stats) > 0
+    assert cont.denied_fetches == stats_denied
+    assert sum(a.denied for a in ledger.accounts.values()) == stats_denied
+    # denials are pre-payment: no fetch was paid, nothing to refund
+    assert sum(s.fetched for s in actor.stats) == 0
+    assert sum(s.failed for s in actor.stats) == 0
+    assert cont.discovery.stats["fetches"] == 0
+    ledger.assert_conserved()
+
+
+def test_on_denied_callback_fires_per_denied_query():
+    """The continuum's on_denied callback is the actor-facing signal for
+    credit exhaustion; it must fire once per refused query and on_done
+    must not fire for that query."""
+    from repro.core.discovery import ModelQuery
+
+    ledger = IncentiveLedger(stipend=0.5, fetch_cost=2.0)
+    cont = _continuum(ledger=ledger)
+    model = make_lr(num_features=8, num_classes=4)
+    params = model.init(jax.random.PRNGKey(0))
+    from repro.core.vault import ModelCard
+
+    cont.publish("rich", params, ModelCard(
+        model_id="rich/lr", task="t", arch="lr", owner="rich", num_params=36,
+        metrics={"accuracy": 0.9, "per_class": {}},
+    ))
+    denials, dones = [], []
+    for _ in range(3):
+        cont.discover_and_fetch_async(
+            ModelQuery(task="t"), lambda hit, now: dones.append(hit),
+            requester="broke", on_denied=lambda now: denials.append(now),
+        )
+    cont.loop.run_to_quiescence()
+    assert len(denials) == 3
+    assert dones == []  # on_denied replaces on_done entirely
+    assert ledger.accounts["broke"].denied == 3
+    assert cont.denied_fetches == 3
+    ledger.assert_conserved()
+
+
+def test_mdd_actor_counts_denials_and_completes_cycles():
+    """MDDPartyActor under credit exhaustion: every improve attempt is
+    denied, the fetch_denials counter tracks it, and cycles still finish
+    (denial must not park the actor forever)."""
+    from repro.core.learner import LearningParty
+    from repro.data.federated_datasets import make_lr_synthetic
+    from repro.runtime.actors import MDDPartyActor
+
+    ds = make_lr_synthetic(num_clients=3, seed=0)
+    model = make_lr(num_features=ds.num_features, num_classes=ds.num_classes)
+    ledger = IncentiveLedger(stipend=0.0, fetch_cost=1e6,
+                             publish_reward=0.1, quality_bonus=0.1)
+    cont = _continuum(ledger=ledger)
+    ex, ey = ds.merged_test(max_per_client=10)
+    ids = ds.client_ids()
+    actors = []
+    for i in range(2):
+        p = LearningParty(f"p{i}", model, ds.clients[ids[i]], "lr", cont,
+                          seed=i)
+        actor = MDDPartyActor(p, ex, ey, cycles=2, local_epochs=1,
+                              distill_epochs=1)
+        actor.start(cont.loop)
+        actors.append(actor)
+    cont.loop.run_to_quiescence()
+
+    for a in actors:
+        assert len(a.records) == 2  # cycles completed despite denials
+        assert a.fetch_denials == 2  # one denial per improve phase
+        assert not any(r.found_teacher for r in a.records)
+    assert cont.denied_fetches == 4
+    ledger.assert_conserved()

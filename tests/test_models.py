@@ -65,8 +65,14 @@ def test_unrolled_forward_matches_scanned(arch):
 
 
 def test_decode_matches_prefill_continuation():
-    """Decoding token S+1 equals forward over S+1 tokens (dense arch)."""
-    cfg = get_smoke_config("qwen2_1_5b")
+    """Decoding token S+1 equals forward over S+1 tokens (dense arch).
+
+    The invariant under test is *path equivalence* (KV-cached decode ==
+    full forward), not bf16 rounding; computing both paths in f32 removes
+    the accumulated bf16 reassociation drift that made any logit-scale
+    tolerance arbitrary, so a tight bound is principled here.
+    """
+    cfg = get_smoke_config("qwen2_1_5b").replace(dtype="float32")
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     toks = jax.random.randint(jax.random.PRNGKey(1), (1, 17), 0, cfg.vocab_size)
@@ -75,12 +81,8 @@ def test_decode_matches_prefill_continuation():
     dec, _ = model.decode(params, cache, {"token": toks[:, 16:17]})
     a = np.asarray(dec[:, 0], np.float32)
     b = np.asarray(full[:, 16], np.float32)
-    # bf16 through 28 layers: a handful of logits drift by ~0.1; require the
-    # distributions to agree closely overall and on the argmax.
-    assert np.mean(np.abs(a - b)) < 6e-2, np.mean(np.abs(a - b))
-    assert np.max(np.abs(a - b)) < 0.3, np.max(np.abs(a - b))
-    corr = np.corrcoef(a.ravel(), b.ravel())[0, 1]
-    assert corr > 0.99, corr  # same function up to bf16 path divergence
+    np.testing.assert_allclose(a, b, rtol=2e-4, atol=2e-4)
+    assert np.argmax(a) == np.argmax(b)
 
 
 def test_sliding_window_restricts_context():

@@ -169,6 +169,91 @@ def test_expert_ranks_property(seed, n, e):
         np.testing.assert_array_equal(rr, np.arange(len(rr)))
 
 
+# -- ledger: conservation under arbitrary valid op sequences -------------------
+
+_ledger_parties = st.sampled_from(["a", "b", "c", "d", "e"])
+_ledger_ops = st.lists(
+    st.one_of(
+        st.tuples(st.just("publish"), _ledger_parties, st.floats(0, 1)),
+        st.tuples(st.just("fetch"), _ledger_parties, _ledger_parties),
+        st.tuples(st.just("fraud"), _ledger_parties, st.just(None)),
+        st.tuples(st.just("touch"), _ledger_parties, st.just(None)),
+    ),
+    min_size=1,
+    max_size=40,
+)
+
+
+@given(ops=_ledger_ops, refund_mask=st.lists(st.booleans(), min_size=40,
+                                             max_size=40))
+@settings(**SETTINGS)
+def test_ledger_conservation_under_random_ops_with_refunds(ops, refund_mask):
+    """sum(balances) == minted through any interleaving of publishes,
+    gated fetches, refunds, fraud slashings, and account creation."""
+    from repro.core.incentives import IncentiveLedger
+
+    led = IncentiveLedger()
+    outstanding = []  # (requester, publisher) pairs eligible for refund
+    for i, (op, x, y) in enumerate(ops):
+        if op == "publish":
+            led.on_publish(x, y)
+        elif op == "fetch" and x != y:
+            if led.can_fetch(x):
+                led.on_fetch(x, y)
+                if refund_mask[i % len(refund_mask)]:
+                    outstanding.append((x, y))
+            else:
+                led.on_denied(x)
+        elif op == "fraud":
+            led.on_fraud(x)
+        elif op == "touch":
+            led.balance(x)  # opens the account, minting the stipend
+        led.assert_conserved()
+    # refunds reverse a strict subset of the paid fetches
+    for requester, publisher in outstanding:
+        led.on_refund(requester, publisher)
+        led.assert_conserved()
+
+
+_plans = st.builds(
+    dict,
+    seed=st.integers(0, 2**16),
+    churn=st.floats(0.0, 0.8),
+    drop_prob=st.floats(0.0, 0.5),
+    delay_prob=st.floats(0.0, 0.5),
+    corrupt_prob=st.floats(0.0, 0.5),
+    straggler_frac=st.floats(0.0, 1.0),
+    byzantine_frac=st.floats(0.0, 0.6),
+)
+
+
+@given(plan_kw=_plans)
+@settings(max_examples=10, deadline=None)
+def test_chaos_scenario_conserves_ledger_under_random_fault_plans(plan_kw):
+    """The microworld runs every fault path (drops, corruption, refunds,
+    fraud slashing); its ledger must conserve for any plan.  The scenario
+    itself asserts conservation before returning."""
+    from repro.runtime.faults import FaultPlan
+    from repro.runtime.trace import run_scenario
+
+    plan = FaultPlan(**plan_kw)
+    blob = run_scenario("chaos_microworld", plan, parties=8, cycles=1)
+    assert blob  # events actually fired
+
+
+@given(plan_kw=_plans)
+@settings(max_examples=10, deadline=None)
+def test_event_loop_deterministic_under_random_fault_plans(plan_kw):
+    """Same seed + same plan => byte-identical serialized event trace."""
+    from repro.runtime.faults import FaultPlan
+    from repro.runtime.trace import run_scenario
+
+    plan = FaultPlan(**plan_kw)
+    a = run_scenario("chaos_microworld", plan, parties=8, cycles=1)
+    b = run_scenario("chaos_microworld", plan, parties=8, cycles=1)
+    assert a == b
+
+
 # -- optimizer: adamw decreases a convex quadratic -----------------------------
 
 
