@@ -1,0 +1,218 @@
+"""Hierarchy scale benchmark: 100k parties across regional tiers.
+
+Runs an identical publish/fetch workload twice — once on the flat
+single-cloud continuum and once on the hierarchical edge→region→cloud
+topology (``repro.runtime.topology``) — and reports what the region tier
+buys at population scale:
+
+* **cache hit rate** — fraction of fetch resolutions served by the
+  requester's own region shard (local edge vaults + the region cache)
+  instead of escalating to the cloud index;
+* **cloud-egress reduction** — bytes crossing the region↔cloud backbone,
+  hierarchical vs. flat (where every fetched blob is cloud-mediated).
+
+The workload is pure Python/numpy (scripted accuracies, tiny param blobs)
+so the measurement isolates the runtime + discovery + topology layers —
+no jax math in the way.  Parties spread over ``--tasks`` learning tasks
+(default 32): a 100k-party population all training one identical task is
+the unrealistic corner, and per-task sharding is exactly how the
+discovery index scales (single-bucket sublinearity is measured separately
+by ``continuum_scale``).  Ledger conservation (now spanning per-region
+operator accounts earning cache-hit fee shares) is asserted on both runs.
+``--json`` merges headline numbers into a JSON file (used by the CI
+``hierarchy-smoke`` step).
+
+  PYTHONPATH=src python benchmarks/hierarchy_scale.py [--parties 100000]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+try:
+    from benchmarks.bench_json import merge_json_section
+except ImportError:  # run as a script: benchmarks/ itself is on sys.path
+    from bench_json import merge_json_section
+
+from repro.core.continuum import Continuum
+from repro.core.discovery import ModelQuery
+from repro.core.incentives import IncentiveLedger
+from repro.core.vault import ModelCard
+from repro.runtime.loop import EventLoop
+from repro.runtime.topology import build_hierarchical_continuum
+from repro.runtime.trace import scripted_accuracy as _true_acc
+
+
+def _run_workload(cont, ids, params_of, cycles: int, n_tasks: int,
+                  cycle_len_s: float = 600.0):
+    """Drive every party through publish + query/fetch events per cycle."""
+    loop = cont.loop
+    counters = {"hits": 0, "misses": 0, "denied": 0}
+    n = max(len(ids), 1)
+    for cycle in range(cycles):
+        window = cycle * cycle_len_s
+        for j, pid in enumerate(ids):
+            acc = _true_acc(j, cycle)
+            task = f"task{j % n_tasks:03d}"
+
+            def do_publish(now, pid=pid, acc=acc, task=task):
+                card = ModelCard(
+                    model_id=f"{pid}/m", task=task, arch="toy",
+                    owner=pid, num_params=9,
+                    metrics={"accuracy": acc, "per_class": {}},
+                )
+                cont.publish_async(pid, params_of[pid], card)
+
+            loop.call_at(window + 1.0 + 0.40 * cycle_len_s * j / n,
+                         do_publish, label="pub")
+
+            def do_query(now, pid=pid, acc=acc, task=task):
+                def done(hit, _now):
+                    counters["hits" if hit is not None else "misses"] += 1
+
+                cont.discover_and_fetch_async(
+                    ModelQuery(task=task, min_accuracy=acc + 0.02,
+                               exclude_owners=(pid,)),
+                    done, requester=pid,
+                    on_denied=lambda _now: counters.__setitem__(
+                        "denied", counters["denied"] + 1),
+                )
+
+            loop.call_at(window + 0.55 * cycle_len_s
+                         + 0.40 * cycle_len_s * j / n,
+                         do_query, label="query")
+        loop.run_to_quiescence()
+    return counters
+
+
+def bench_hierarchy(n_parties=100000, regions=32, edges_per_region=4,
+                    cycles=3, seed=0, n_tasks=32):
+    """Flat-vs-hierarchical comparison of one publish/fetch workload."""
+    ids = [f"p{i:06d}" for i in range(n_parties)]
+    rng = np.random.default_rng(seed)
+    # ~600B blobs: big enough that fetch bytes (not card json) dominate the
+    # backbone egress, small enough that two 100k-party vault tiers fit RAM
+    params_of = {
+        pid: {"w": rng.standard_normal(128).astype(np.float32) + (i % 7)}
+        for i, pid in enumerate(ids)
+    }
+
+    # -- flat baseline: one cloud index, every fetch is backbone egress ------
+    flat_ledger = IncentiveLedger()
+    flat = Continuum(loop=EventLoop(keep_log=False), ledger=flat_ledger)
+    for e in range(regions * edges_per_region):
+        flat.add_edge_server(f"edge{e:03d}")
+    wall0 = time.perf_counter()
+    flat_counters = _run_workload(flat, ids, params_of, cycles, n_tasks)
+    flat_wall = time.perf_counter() - wall0
+    flat_ledger.assert_conserved()
+
+    # -- hierarchical: region shards + caches + fee splits -------------------
+    hier_ledger = IncentiveLedger()
+    hier = build_hierarchical_continuum(
+        regions, edges_per_region, ledger=hier_ledger,
+        loop=EventLoop(keep_log=False),
+    )
+    wall0 = time.perf_counter()
+    hier_counters = _run_workload(hier, ids, params_of, cycles, n_tasks)
+    hier_wall = time.perf_counter() - wall0
+    hier_ledger.assert_conserved()
+
+    totals = hier.topology.totals()
+    flat_egress = flat.traffic.cloud_egress_bytes
+    hier_egress = hier.traffic.cloud_egress_bytes
+    reduction = 1.0 - hier_egress / flat_egress if flat_egress else 0.0
+    return {
+        "parties": n_parties,
+        "regions": regions,
+        "edges_per_region": edges_per_region,
+        "cycles": cycles,
+        "tasks": n_tasks,
+        "wall_s": hier_wall,
+        "flat_wall_s": flat_wall,
+        "events": hier.loop.events_processed,
+        "events_per_s": hier.loop.events_processed / hier_wall,
+        "hits": hier_counters["hits"],
+        "misses": hier_counters["misses"],
+        "flat_hits": flat_counters["hits"],
+        "denied": hier_counters["denied"],
+        "local_hits": totals.local_hits,
+        "escalations": totals.escalations,
+        "cache_inserts": totals.cache_inserts,
+        "cache_hit_rate": hier.topology.hit_rate(),
+        "cloud_egress_bytes": hier_egress,
+        "flat_cloud_egress_bytes": flat_egress,
+        "egress_reduction": reduction,
+        "intra_region_bytes": hier.traffic.intra_region_bytes,
+        "region_fee_total": hier_ledger.distribution().get(
+            "region_fee_total", 0.0),
+        "conserved": 1,  # assert_conserved above would have raised
+    }
+
+
+def main(argv=None):
+    """CLI entry point; prints CSV rows like the other benchmark sections."""
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--parties", type=int, default=100000)
+    ap.add_argument("--regions", type=int, default=32)
+    ap.add_argument("--edges-per-region", type=int, default=4)
+    ap.add_argument("--cycles", type=int, default=3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--tasks", type=int, default=32,
+                    help="learning tasks the population spreads over")
+    ap.add_argument("--json", type=str, default=None,
+                    help="merge headline numbers into this JSON file")
+    args = ap.parse_args(argv)
+    if args.parties < 1 or args.cycles < 1 or args.regions < 1 \
+            or args.edges_per_region < 1 or args.tasks < 1:
+        ap.error("--parties, --cycles, --regions, --edges-per-region, and "
+                 "--tasks must all be >= 1")
+
+    res = bench_hierarchy(args.parties, args.regions, args.edges_per_region,
+                          args.cycles, args.seed, args.tasks)
+    print(f"hierarchy_scale/run,{res['wall_s']*1e6:.0f},"
+          f"parties={res['parties']};regions={res['regions']};"
+          f"cycles={res['cycles']};events={res['events']};"
+          f"events_per_s={res['events_per_s']:.0f};"
+          f"hits={res['hits']};misses={res['misses']}", flush=True)
+    print(f"hierarchy_scale/locality,0,"
+          f"local={res['local_hits']};escalated={res['escalations']};"
+          f"cached={res['cache_inserts']};"
+          f"hit_rate={res['cache_hit_rate']:.3f}")
+    print(f"hierarchy_scale/egress,0,"
+          f"hier_bytes={res['cloud_egress_bytes']};"
+          f"flat_bytes={res['flat_cloud_egress_bytes']};"
+          f"reduction={res['egress_reduction']:.3f};"
+          f"intra_region_bytes={res['intra_region_bytes']}")
+    print(f"hierarchy_scale/economy,0,"
+          f"region_fee_total={res['region_fee_total']:.1f};conserved=1")
+    print(f"# cache hit rate {res['cache_hit_rate']:.1%} "
+          f"({'>=50% target met' if res['cache_hit_rate'] >= 0.5 else 'BELOW 50% target'}), "
+          f"cloud egress -{res['egress_reduction']:.1%} vs flat")
+    if res["wall_s"] < 180:
+        print(f"# {res['parties']} parties x {res['regions']} regions x "
+              f"{res['cycles']} cycles in {res['wall_s']:.1f}s "
+              f"(<180s target; flat baseline {res['flat_wall_s']:.1f}s)")
+    else:
+        print(f"# WARNING: wall time {res['wall_s']:.1f}s exceeds 180s target")
+
+    if args.json:
+        merge_json_section(args.json, "hierarchy_scale", {
+            "wall_s": res["wall_s"],
+            "parties": res["parties"],
+            "regions": res["regions"],
+            "cycles": res["cycles"],
+            "events": res["events"],
+            "hits": res["hits"],
+            "cache_hit_rate": res["cache_hit_rate"],
+            "egress_reduction": res["egress_reduction"],
+            "cloud_egress_bytes": res["cloud_egress_bytes"],
+            "flat_cloud_egress_bytes": res["flat_cloud_egress_bytes"],
+            "conserved": res["conserved"],
+        })
+
+
+if __name__ == "__main__":
+    main()

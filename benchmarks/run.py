@@ -10,6 +10,7 @@ output is both human-skimmable and machine-parsable.
   continuum_scale — event-driven runtime: 10k parties, sublinear discovery
   exchange_scale  — incentive-gated model-exchange economy, hetero cohorts
   chaos_scale     — exchange economy under churn/link-loss/byzantine faults
+  hierarchy_scale — edge→region→cloud tiering: cache hit-rate + egress
   roofline        — three-term roofline from dry-run artifacts (if present)
 
 Usage: python -m benchmarks.run [sections...]
@@ -92,6 +93,17 @@ def run_chaos_scale():
     cmain([])
 
 
+def run_hierarchy_scale():
+    """Flat vs hierarchical topology: cache hit-rate + cloud-egress cut.
+
+    The section runs at 20k parties to keep the orchestrator sweep short;
+    the standalone CLI defaults to the 100k × 32-region headline scale.
+    """
+    from benchmarks.hierarchy_scale import main as hmain
+
+    hmain(["--parties", "20000"])
+
+
 def run_kernels():
     from benchmarks.kernels_bench import main as kmain
 
@@ -110,7 +122,8 @@ def run_roofline():
 def main():
     which = set(sys.argv[1:]) or {"fig3", "figs456", "kernels", "traffic",
                                   "continuum_scale", "exchange_scale",
-                                  "chaos_scale", "roofline"}
+                                  "chaos_scale", "hierarchy_scale",
+                                  "roofline"}
     print("name,us_per_call,derived")
     if "fig3" in which:
         section("Fig.3 heterogeneity impact")
@@ -124,6 +137,9 @@ def main():
     if "chaos_scale" in which:
         section("Chaos continuum (churn, link faults, byzantine publishers)")
         run_chaos_scale()
+    if "hierarchy_scale" in which:
+        section("Hierarchical topology (regions, caches, egress)")
+        run_hierarchy_scale()
     if "figs456" in which:
         section("Figs.4-6 IND vs FL vs MDD")
         run_figs456()

@@ -1,0 +1,76 @@
+"""Hierarchy demo: regional publish, local-hit fetch, cloud escalation, fees.
+
+A minimal tour of the edge→region→cloud tier (docs/ARCHITECTURE.md §7):
+two parties in different regions publish; a neighbour fetches locally
+(region shard hit, fee split with the region operator); a remote party's
+query escalates to the cloud index, pays the backbone once, and seeds its
+region's cache so the *next* local requester hits in-region.
+
+  PYTHONPATH=src python examples/hierarchy_demo.py
+"""
+import numpy as np
+
+from repro.core.discovery import ModelQuery
+from repro.core.incentives import IncentiveLedger
+from repro.core.vault import ModelCard
+from repro.runtime.topology import build_hierarchical_continuum
+
+
+def card_for(pid: str, acc: float) -> ModelCard:
+    return ModelCard(model_id=f"{pid}/toy", task="demo", arch="toy",
+                     owner=pid, num_params=8,
+                     metrics={"accuracy": acc, "per_class": {}})
+
+
+def fetch(cont, pid: str, min_acc: float):
+    hit = cont.discover_and_fetch(
+        ModelQuery(task="demo", min_accuracy=min_acc, exclude_owners=(pid,)),
+        requester=pid)
+    assert hit is not None, "expected a teacher"
+    _, card, res = hit
+    path = "LOCAL (region shard)" if res.local else "ESCALATED (cloud index)"
+    print(f"  {pid} [{res.region_id}] got {card.model_id} "
+          f"(acc={card.metrics['accuracy']:.2f}) via {path}")
+    return res
+
+
+def main():
+    ledger = IncentiveLedger()  # 20% service fee, half shared on cache hits
+    cont = build_hierarchical_continuum(n_regions=2, edges_per_region=2,
+                                        ledger=ledger)
+    topo = cont.topology
+    params = {"w": np.arange(8, dtype=np.float32)}
+
+    # pick ids whose stable placement lands in both regions
+    by_region = {rid: [] for rid in topo.regions}
+    i = 0
+    while any(len(v) < 2 for v in by_region.values()):
+        pid = f"party{i:03d}"
+        by_region[topo.region_of(pid).region_id].append(pid)
+        i += 1
+    (a1, a2), (b1, b2) = (by_region[r][:2] for r in sorted(by_region))
+
+    print("== regional publish (card hops edge -> region -> cloud) ==")
+    cont.publish(a1, params, card_for(a1, acc=0.90))  # strong teacher in A
+    cont.publish(b1, params, card_for(b1, acc=0.60))  # weak model in B
+    print(f"  cloud index: {len(cont.discovery)} cards; "
+          f"shards: {[len(r.shard) for r in topo.regions.values()]}")
+
+    print("== local hit: same-region neighbour fetches over cheap links ==")
+    assert fetch(cont, a2, min_acc=0.8).local
+
+    print("== cloud miss: remote region escalates, then caches ==")
+    assert not fetch(cont, b2, min_acc=0.8).local  # backbone paid once
+    assert fetch(cont, b1, min_acc=0.8).local  # served by B's fresh cache
+
+    print("== the 20% service fee splits on cache hits ==")
+    ledger.assert_conserved()  # sum(balances) == minted, operators included
+    for op in sorted(ledger.operators):
+        print(f"  {op:<14} balance {ledger.balance(op):.2f}")
+    print(f"  egress {cont.traffic.cloud_egress_bytes}B vs intra-region "
+          f"{cont.traffic.intra_region_bytes}B "
+          f"(hit rate {topo.hit_rate():.0%})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,87 @@
+"""Docs gate (CI ``docs-check``): keep the documentation layer honest.
+
+Two checks, stdlib-only so the job needs no dependency install:
+
+1. every relative markdown link in README.md and docs/*.md resolves to a
+   real file or directory in the repo (external http/mailto links and
+   pure #anchors are skipped);
+2. every ``src/repro/*`` package appears in docs/ARCHITECTURE.md (as
+   ``repro/<name>`` or ``repro.<name>``), so a new subsystem cannot land
+   without at least a mention in the layered walkthrough.
+
+Usage: python scripts/check_docs.py   (exit 0 = docs pass)
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+ARCHITECTURE = REPO / "docs" / "ARCHITECTURE.md"
+
+# [text](target) — excluding images' leading "!" is unnecessary: image
+# targets must resolve too
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def doc_files():
+    """The markdown surface the gate covers."""
+    files = [REPO / "README.md"]
+    files += sorted((REPO / "docs").glob("*.md"))
+    return [f for f in files if f.exists()]
+
+
+def check_links(path: Path) -> list:
+    """Return failure messages for unresolvable relative links in a file."""
+    failures = []
+    for m in _LINK.finditer(path.read_text(encoding="utf-8")):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        resolved = (path.parent / rel).resolve()
+        if not resolved.exists():
+            failures.append(
+                f"{path.relative_to(REPO)}: broken link -> {target}"
+            )
+    return failures
+
+
+def check_packages_documented() -> list:
+    """Every src/repro/* package must appear in ARCHITECTURE.md."""
+    if not ARCHITECTURE.exists():
+        return ["docs/ARCHITECTURE.md is missing"]
+    text = ARCHITECTURE.read_text(encoding="utf-8")
+    failures = []
+    for pkg in sorted((REPO / "src" / "repro").iterdir()):
+        if not pkg.is_dir() or not (pkg / "__init__.py").exists():
+            continue
+        name = pkg.name
+        if f"repro/{name}" not in text and f"repro.{name}" not in text:
+            failures.append(
+                f"docs/ARCHITECTURE.md: package src/repro/{name}/ is "
+                f"not mentioned (add repro/{name} to the walkthrough)"
+            )
+    return failures
+
+
+def main() -> int:
+    """Run both checks; print failures; return a shell exit code."""
+    failures = []
+    for f in doc_files():
+        failures += check_links(f)
+    failures += check_packages_documented()
+    if failures:
+        for msg in failures:
+            print(f"FAIL {msg}", file=sys.stderr)
+        return 1
+    print(f"docs-check: {len(doc_files())} files, all links resolve, "
+          f"all packages documented")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -46,16 +46,20 @@ from repro.core.vault import ModelVault
 from repro.runtime.clock import SimClock
 from repro.runtime.loop import EventLoop
 
-if TYPE_CHECKING:  # import cycle: runtime.faults imports core.vault
+if TYPE_CHECKING:  # import cycle: runtime.faults/topology import core modules
     from repro.runtime.faults import FaultPlan
+    from repro.runtime.topology import RegionalTopology
 
 
 @dataclasses.dataclass
 class Link:
+    """One network hop's cost model: fixed latency + bandwidth-limited time."""
+
     bandwidth_mbps: float
     latency_ms: float
 
     def transfer_time(self, nbytes: int) -> float:
+        """Simulated seconds to move ``nbytes`` over this link."""
         return self.latency_ms / 1e3 + nbytes * 8 / (self.bandwidth_mbps * 1e6)
 
 
@@ -67,6 +71,8 @@ DEVICE_TO_CLOUD = Link(bandwidth_mbps=20.0, latency_ms=60.0)
 
 @dataclasses.dataclass
 class EdgeServer:
+    """An edge-tier server: hosts one model vault plus its uplink."""
+
     server_id: str
     vault: ModelVault
     link_up: Link = dataclasses.field(default_factory=lambda: EDGE_TO_CLOUD)
@@ -74,12 +80,24 @@ class EdgeServer:
 
 @dataclasses.dataclass
 class TrafficLog:
+    """Byte/time accounting over every simulated transfer.
+
+    ``cloud_egress_bytes`` counts only the bytes that cross the
+    edge↔cloud backbone (in a hierarchical topology: the region↔cloud
+    hop); ``intra_region_bytes`` counts bytes served inside a region —
+    the two numbers are what the hierarchy benchmark compares against the
+    flat topology.
+    """
+
     uploads_bytes: int = 0
     downloads_bytes: int = 0
     card_bytes: int = 0
     total_time_s: float = 0.0
+    cloud_egress_bytes: int = 0
+    intra_region_bytes: int = 0
 
     def as_dict(self):
+        """Plain-dict view for benchmark/report JSON."""
         return dataclasses.asdict(self)
 
 
@@ -93,8 +111,12 @@ class FaultStats:
     delayed_transfers: int = 0
     frauds_detected: int = 0  # verify-on-fetch caught an inflated card
     refunds: int = 0
+    # hierarchical topology only: transfers lost because the requester's
+    # whole region subtree was partitioned (paid fetches are refunded)
+    regional_outage_drops: int = 0
 
     def as_dict(self):
+        """Plain-dict view for benchmark/report JSON."""
         return dataclasses.asdict(self)
 
 
@@ -121,6 +143,17 @@ class Continuum:
     Pass ``faults``/``verifier`` to run under the chaos fault model (see
     module docstring).  ``verifier`` re-measures a delivered model's
     accuracy; returning ``None`` skips the check (e.g. unknown arch).
+
+    Attach a :class:`~repro.runtime.topology.RegionalTopology` (via
+    :meth:`attach_topology` or
+    :func:`~repro.runtime.topology.build_hierarchical_continuum`) to run
+    the hierarchical edge→region→cloud tiering: queries resolve at the
+    requester's region shard first and escalate to the cloud index only on
+    a miss, in-region fetches are costed by the intra-region link (the
+    region operator earning a share of the service fee), escalated blobs
+    are cached in-region on arrival, and regional outages from the fault
+    plan partition the whole subtree.  Without a topology every path below
+    behaves exactly as the flat (PR 1–4) continuum did.
     """
 
     def __init__(self, clock: Optional[SimClock] = None,
@@ -142,12 +175,38 @@ class Continuum:
         self.faults = faults
         self.verifier = verifier
         self.fault_stats = FaultStats()
+        self.topology: Optional["RegionalTopology"] = None
         # cards already slashed, by (model_id, version): concurrent in-flight
         # fetches of one fraudulent card must not slash the publisher twice
         self._frauded: set = set()
 
+    def attach_topology(self, topology: "RegionalTopology") -> None:
+        """Install the region tier; must happen before edges are added.
+
+        Region operator accounts are registered with the ledger up front
+        so they can collect fee shares without ever minting a stipend, and
+        the topology's shards/caches are rebound to this continuum's clock
+        (a topology built without one would otherwise score freshness
+        against a private clock frozen at zero).
+        """
+        if self.edges:
+            raise ValueError("attach the topology before adding edge servers")
+        if topology.clock is not self.clock:
+            topology.rebind_clock(self.clock)
+        self.topology = topology
+        if self.ledger is not None:
+            for region in topology.regions.values():
+                self.ledger.add_operator(region.operator)
+
     def add_edge_server(self, server_id: str,
-                        link_up: Optional[Link] = None) -> EdgeServer:
+                        link_up: Optional[Link] = None,
+                        region: Optional[str] = None) -> EdgeServer:
+        """Create an edge server + vault and index it for discovery.
+
+        With a topology attached, ``region`` names the region the edge
+        belongs to (required) and the edge's vault is indexed by both the
+        region's discovery shard and the cloud index.
+        """
         vault = ModelVault(vault_id=server_id, clock=self.clock)
         edge = EdgeServer(server_id, vault)
         if link_up is not None:
@@ -155,10 +214,21 @@ class Continuum:
         self.edges[server_id] = edge
         bisect.insort(self._edge_order, server_id)
         self.discovery.attach_vault(vault)
+        if self.topology is not None:
+            if region is None:
+                raise ValueError("a hierarchical continuum needs a region "
+                                 "for every edge server")
+            self.topology.register_edge(region, server_id, vault)
         return edge
 
     def nearest_edge(self, party_id: str) -> EdgeServer:
-        """Deterministic assignment of a party to its closest edge server."""
+        """Deterministic assignment of a party to its closest edge server.
+
+        Hierarchical topologies bucket the party onto its home region
+        first, then onto an edge within that region.
+        """
+        if self.topology is not None:
+            return self.edges[self.topology.edge_for(party_id)]
         return self.edges[self._edge_order[_stable_bucket(party_id,
                                                           len(self._edge_order))]]
 
@@ -178,12 +248,45 @@ class Continuum:
         the vault keeps its previous entry and the returned card is the
         *unstored* one) or delayed, stragglers upload slower, and a
         byzantine publisher's card is inflated before it is stored.
+
+        With a hierarchical topology the card hops edge→region (becoming
+        locally discoverable in the region's shard) and then region→cloud
+        (becoming globally discoverable; rewards mint there), and an
+        upload into a region that is dark under the plan's regional-outage
+        schedule is lost exactly like a link drop.
         """
         edge = self.nearest_edge(party_id)
+        region = (self.topology.region_of(party_id)
+                  if self.topology is not None else None)
         faults = self.faults
         if faults is not None and faults.is_byzantine(party_id):
             card = faults.inflate_card(card)
         now0 = self.clock.now()
+        if (faults is not None and region is not None
+                and faults.region_offline(region.region_id, now0)):
+            # the whole subtree is partitioned: the blob leaves the device
+            # and dies at the dark region's doorstep; the vault keeps its
+            # previous entry and the upload time is wasted
+            nbytes = len(params_to_bytes(params))
+            blob_t = (DEVICE_TO_EDGE.transfer_time(nbytes)
+                      * faults.slowdown(party_id))
+            self.fault_stats.regional_outage_drops += 1
+            region.stats.outage_drops += 1
+            self.traffic.uploads_bytes += nbytes
+            self.traffic.total_time_s += blob_t
+
+            def publish_outage(now: float):
+                if on_fail is not None:
+                    on_fail(now)
+
+            self.loop.call_after(
+                blob_t, publish_outage,
+                label=f"publish-outage {card.model_id}",
+                payload={"op": "publish_outage", "party": party_id,
+                         "model": card.model_id,
+                         "region": region.region_id},
+            )
+            return card
         fault = (faults.link_fault("publish", party_id, card.model_id, now0)
                  if faults is not None else None)
         if fault is not None and fault.drop:
@@ -212,18 +315,26 @@ class Continuum:
         nbytes = edge.vault.blob_size(final.model_id)
         blob_t = DEVICE_TO_EDGE.transfer_time(nbytes)
         card_bytes = len(final.to_json().encode())
-        card_t = edge.link_up.transfer_time(card_bytes)
+        if region is not None:
+            region_card_t = region.link_local.transfer_time(card_bytes)
+            card_t = region.link_up.transfer_time(card_bytes)
+        else:
+            region_card_t = 0.0
+            card_t = edge.link_up.transfer_time(card_bytes)
         if faults is not None:
             slow = faults.slowdown(party_id)
             blob_t *= slow
             card_t *= slow
+            region_card_t *= slow
             if fault.delay_factor != 1.0:
                 self.fault_stats.delayed_transfers += 1
                 blob_t *= fault.delay_factor
                 card_t *= fault.delay_factor
+                region_card_t *= fault.delay_factor
         self.traffic.uploads_bytes += nbytes
         self.traffic.card_bytes += card_bytes
-        self.traffic.total_time_s += blob_t + card_t
+        self.traffic.cloud_egress_bytes += card_bytes
+        self.traffic.total_time_s += blob_t + region_card_t + card_t
 
         def card_arrived(now: float):
             self.discovery.register(final, edge.server_id)
@@ -234,13 +345,37 @@ class Continuum:
             if on_done is not None:
                 on_done(final, now)
 
-        def blob_arrived(now: float):
-            self.loop.call_after(
-                card_t, card_arrived,
-                label=f"card->cloud {final.model_id}",
-                payload={"op": "card", "model": final.model_id,
-                         "nbytes": card_bytes},
-            )
+        if region is not None:
+            self.traffic.intra_region_bytes += card_bytes
+
+            def card_at_region(now: float):
+                # locally discoverable as soon as the region shard has it;
+                # the cloud index (and the publish reward) lag one hop
+                region.shard.register(final, edge.server_id)
+                self.loop.call_after(
+                    card_t, card_arrived,
+                    label=f"card->cloud {final.model_id}",
+                    payload={"op": "card", "model": final.model_id,
+                             "nbytes": card_bytes,
+                             "region": region.region_id},
+                )
+
+            def blob_arrived(now: float):
+                self.loop.call_after(
+                    region_card_t, card_at_region,
+                    label=f"card->region {final.model_id}",
+                    payload={"op": "card_region", "model": final.model_id,
+                             "nbytes": card_bytes,
+                             "region": region.region_id},
+                )
+        else:
+            def blob_arrived(now: float):
+                self.loop.call_after(
+                    card_t, card_arrived,
+                    label=f"card->cloud {final.model_id}",
+                    payload={"op": "card", "model": final.model_id,
+                             "nbytes": card_bytes},
+                )
 
         self.loop.call_after(
             blob_t, blob_arrived,
@@ -267,17 +402,30 @@ class Continuum:
         publisher through the ledger.
 
         Under a fault plan, a *paid* download can still fail: dropped or
-        corrupted in flight, or delivered but caught by verify-on-fetch
-        with inflated claimed accuracy (fraud).  In every failure case the
-        requester is refunded; ``on_fail(reason, sim_time)`` fires if
-        given (reason in {"drop", "corrupt", "fraud"}), else
+        corrupted in flight, delivered but caught by verify-on-fetch with
+        inflated claimed accuracy (fraud), or — hierarchical topologies
+        only — lost because the requester's region subtree was dark when
+        the download would have completed (outage).  In every failure case
+        the requester is refunded; ``on_fail(reason, sim_time)`` fires if
+        given (reason in {"drop", "corrupt", "fraud", "outage"}), else
         ``on_done(None, sim_time)``.
+
+        With a topology attached the query resolves against the
+        requester's region shard first (a hit is served in-region over the
+        cheap links, splitting the service fee with the region operator)
+        and escalates to the cloud index only on a shard miss; an
+        escalated blob is inserted into the region cache on delivery so
+        later requesters in the region hit locally.  Anonymous fetches
+        (no ``requester``) have no home region and resolve directly at
+        the cloud index with flat costing.
         """
 
-        def failed(reason: str, now: float, publisher: str):
+        def failed(reason: str, now: float, publisher: str,
+                   region_operator: Optional[str] = None):
             gated = self.ledger is not None and requester is not None
             if gated:
-                self.ledger.on_refund(requester, publisher)
+                self.ledger.on_refund(requester, publisher,
+                                      region_operator=region_operator)
                 self.fault_stats.refunds += 1
             if on_fail is not None:
                 on_fail(reason, now)
@@ -294,6 +442,10 @@ class Continuum:
                 else:
                     on_done(None, now)
                 return
+            if self.topology is not None and requester is not None:
+                self._regional_fetch(query, on_done, top_k, requester,
+                                     failed, now, gated)
+                return
             results = self.discovery.query(query, top_k=top_k)
             if not results:
                 on_done(None, now)
@@ -305,68 +457,185 @@ class Continuum:
             if gated:
                 self.ledger.on_fetch(requester, best.card.owner)
             nbytes = self.edges[best.vault_id].vault.blob_size(card.model_id)
-            dl_t = DEVICE_TO_EDGE.transfer_time(nbytes)
-            fault = None
-            if self.faults is not None:
-                if requester is not None:
-                    dl_t *= self.faults.slowdown(requester)
-                fault = self.faults.link_fault(
-                    "fetch", requester or "anon", card.model_id,
-                    card.version, now,
-                )
-                if fault.delay_factor != 1.0:
-                    self.fault_stats.delayed_transfers += 1
-                    dl_t *= fault.delay_factor
+            dl_t, fault = self._fetch_fault(
+                DEVICE_TO_EDGE.transfer_time(nbytes), requester, card, now)
+            # flat topology: discovery and routing are cloud-mediated, so
+            # every fetched blob is accounted as backbone egress — this is
+            # the baseline the hierarchy benchmark measures reduction from
             self.traffic.downloads_bytes += nbytes
+            self.traffic.cloud_egress_bytes += nbytes
             self.traffic.total_time_s += dl_t
-
-            if fault is not None and fault.drop:
-                self.fault_stats.dropped_fetches += 1
-                self.loop.call_after(
-                    dl_t, lambda now2: failed("drop", now2, card.owner),
-                    label=f"fetch-drop {card.model_id}",
-                    payload={"op": "fetch_drop", "requester": requester,
-                             "model": card.model_id},
-                )
-                return
-            if fault is not None and fault.corrupt:
-                # in-flight corruption: the device-side integrity check
-                # rejects the delivered blob (content hash mismatch)
-                self.fault_stats.corrupted_fetches += 1
-                self.loop.call_after(
-                    dl_t, lambda now2: failed("corrupt", now2, card.owner),
-                    label=f"fetch-corrupt {card.model_id}",
-                    payload={"op": "fetch_corrupt", "requester": requester,
-                             "model": card.model_id},
-                )
-                return
-
-            def delivered(now2: float):
-                fraud, claimed, measured = self._check_fraud(params, card)
-                if fraud:
-                    self.loop.call_after(
-                        0.0,
-                        lambda now3: (self._punish_fraud(card),
-                                      failed("fraud", now3, card.owner)),
-                        label=f"fraud {card.model_id}",
-                        payload={"op": "fraud", "publisher": card.owner,
-                                 "model": card.model_id,
-                                 "claimed": claimed, "measured": measured},
-                    )
-                    return
-                on_done((params, card, best), now2)
-
-            self.loop.call_after(
-                dl_t, delivered,
-                label=f"fetch {card.model_id} <- {best.vault_id}",
-                payload={"op": "fetch", "requester": requester,
-                         "model": card.model_id, "nbytes": nbytes,
-                         "edge": best.vault_id},
-            )
+            self._schedule_fetch_outcome(dl_t, params, card, best, fault,
+                                         failed, requester, nbytes, on_done)
 
         self.loop.call_after(0.0, do_query, label=f"query task={query.task}",
                              payload={"op": "query", "task": query.task,
                                       "requester": requester})
+
+    # -- download outcome machinery (shared by flat + hierarchical paths) ----
+    def _fetch_fault(self, dl_t: float, requester: Optional[str], card, now):
+        """Apply the plan's slowdown/delay to a download; (dl_t, fault)."""
+        if self.faults is None:
+            return dl_t, None
+        if requester is not None:
+            dl_t *= self.faults.slowdown(requester)
+        fault = self.faults.link_fault(
+            "fetch", requester or "anon", card.model_id, card.version, now)
+        if fault.delay_factor != 1.0:
+            self.fault_stats.delayed_transfers += 1
+            dl_t *= fault.delay_factor
+        return dl_t, fault
+
+    def _schedule_fetch_outcome(self, dl_t, params, card, hit, fault, failed,
+                                requester, nbytes, on_done, *,
+                                region=None, region_operator=None,
+                                local=None):
+        """Schedule one (already paid-for) download's outcome events.
+
+        Shared by the flat and hierarchical fetch paths so refund/fault
+        semantics cannot diverge between them: in-flight drop/corruption,
+        delivery-time regional-outage loss, verify-on-fetch fraud,
+        region-cache seeding of escalated blobs, then ``on_done``.  Event
+        labels are identical in both topologies; regional payloads carry
+        extra ``region``/``local`` keys.
+        """
+        extra = {} if region is None else {"region": region.region_id}
+        if fault is not None and fault.drop:
+            self.fault_stats.dropped_fetches += 1
+            self.loop.call_after(
+                dl_t,
+                lambda now2: failed("drop", now2, card.owner,
+                                    region_operator),
+                label=f"fetch-drop {card.model_id}",
+                payload={"op": "fetch_drop", "requester": requester,
+                         "model": card.model_id, **extra},
+            )
+            return
+        if fault is not None and fault.corrupt:
+            # in-flight corruption: the device-side integrity check
+            # rejects the delivered blob (content hash mismatch)
+            self.fault_stats.corrupted_fetches += 1
+            self.loop.call_after(
+                dl_t,
+                lambda now2: failed("corrupt", now2, card.owner,
+                                    region_operator),
+                label=f"fetch-corrupt {card.model_id}",
+                payload={"op": "fetch_corrupt", "requester": requester,
+                         "model": card.model_id, **extra},
+            )
+            return
+
+        def delivered(now2: float):
+            if (region is not None and self.faults is not None
+                    and self.faults.region_offline(region.region_id, now2)):
+                # the subtree went dark while the download was in flight:
+                # every fetch through this region is lost, paid ones refund
+                self.fault_stats.regional_outage_drops += 1
+                region.stats.outage_drops += 1
+                self.loop.call_after(
+                    0.0,
+                    lambda now3: failed("outage", now3, card.owner,
+                                        region_operator),
+                    label=f"fetch-outage {card.model_id}",
+                    payload={"op": "fetch_outage", "requester": requester,
+                             "model": card.model_id, **extra},
+                )
+                return
+            fraud, claimed, measured = self._check_fraud(params, card)
+            if fraud:
+                self.loop.call_after(
+                    0.0,
+                    lambda now3: (self._punish_fraud(card),
+                                  failed("fraud", now3, card.owner,
+                                         region_operator)),
+                    label=f"fraud {card.model_id}",
+                    payload={"op": "fraud", "publisher": card.owner,
+                             "model": card.model_id,
+                             "claimed": claimed, "measured": measured,
+                             **extra},
+                )
+                return
+            if region is not None and local is False:
+                region.cache_blob(params, card)
+            on_done((params, card, hit), now2)
+
+        payload = {"op": "fetch", "requester": requester,
+                   "model": card.model_id, "nbytes": nbytes,
+                   "edge": hit.vault_id, **extra}
+        if local is not None:
+            payload["local"] = local
+        self.loop.call_after(
+            dl_t, delivered,
+            label=f"fetch {card.model_id} <- {hit.vault_id}",
+            payload=payload,
+        )
+
+    # -- hierarchical fetch path ---------------------------------------------
+    def _regional_fetch(self, query, on_done, top_k, requester, failed,
+                        now, gated):
+        """Region-first resolution of one (already credit-gated) fetch.
+
+        A region-shard hit is served from an in-region vault (or the
+        region cache) over the intra-region links, with the service fee
+        split between cloud and region operator; a miss escalates to the
+        cloud index, pays the backbone, and caches the blob in-region on
+        delivery.  ``local_hits``/``escalations`` count resolutions that
+        scheduled an actual download (a query nothing anywhere can satisfy
+        counts as ``cloud_misses`` instead).  Either way the download is
+        subject to the fault plan (drops, corruption, delays,
+        verify-on-fetch) plus the regional outage schedule — see
+        :meth:`_schedule_fetch_outcome`.
+        """
+        from repro.runtime.topology import RegionalHit
+
+        region = self.topology.region_of(requester)
+        region.stats.queries += 1
+        results = region.shard.query(query, top_k=top_k)
+        local = bool(results)
+        if local:
+            best = results[0]
+            params, card = region.shard.fetch(best)
+            region_operator = region.operator
+            region.stats.local_hits += 1
+        else:
+            results = self.discovery.query(query, top_k=top_k)
+            if not results:
+                region.stats.cloud_misses += 1
+                on_done(None, now)
+                return
+            best = results[0]
+            params, card = self.discovery.fetch(best)
+            region_operator = None
+            region.stats.escalations += 1
+        if gated:
+            self.ledger.on_fetch(requester, card.owner,
+                                 region_operator=region_operator)
+        if best.vault_id in self.edges:
+            nbytes = self.edges[best.vault_id].vault.blob_size(card.model_id)
+        else:  # served from the region cache
+            nbytes = region.cache.blob_size(card.model_id)
+        if local:
+            dl_t = (region.link_local.transfer_time(nbytes)
+                    + DEVICE_TO_EDGE.transfer_time(nbytes))
+            self.traffic.intra_region_bytes += nbytes
+        else:
+            # remote edge -> cloud -> region -> device: the blob pays the
+            # backbone once, then rides the cheap tiers down
+            dl_t = (region.link_up.transfer_time(nbytes)
+                    + region.link_local.transfer_time(nbytes)
+                    + DEVICE_TO_EDGE.transfer_time(nbytes))
+            self.traffic.cloud_egress_bytes += nbytes
+        dl_t, fault = self._fetch_fault(dl_t, requester, card, now)
+        self.traffic.downloads_bytes += nbytes
+        self.traffic.total_time_s += dl_t
+        hit = RegionalHit(card=card, vault_id=best.vault_id,
+                          score=best.score, region_id=region.region_id,
+                          local=local)
+        self._schedule_fetch_outcome(dl_t, params, card, hit, fault, failed,
+                                     requester, nbytes, on_done,
+                                     region=region,
+                                     region_operator=region_operator,
+                                     local=local)
 
     # -- verify-on-fetch -----------------------------------------------------
     def _check_fraud(self, params, card):
@@ -386,9 +655,16 @@ class Continuum:
         return claimed - float(measured) > tol, claimed, float(measured)
 
     def _punish_fraud(self, card):
-        """Deregister the inflated card; slash its publisher once."""
+        """Deregister the inflated card; slash its publisher once.
+
+        In a hierarchical topology the card is purged from every region
+        shard too (cached copies of a fraudulent model must not keep
+        serving after the cloud index drops it).
+        """
         self.fault_stats.frauds_detected += 1
         self.discovery.deregister(card.model_id)
+        if self.topology is not None:
+            self.topology.deregister_everywhere(card.model_id)
         key = (card.model_id, card.version)
         if key in self._frauded:
             return

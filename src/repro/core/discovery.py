@@ -36,6 +36,8 @@ _FRESHNESS_CAP = 0.1
 
 @dataclasses.dataclass
 class ModelQuery:
+    """What a learner needs: task + quality constraints over model cards."""
+
     task: str
     min_accuracy: float = 0.0
     min_class_accuracy: Dict[int, float] = dataclasses.field(default_factory=dict)
@@ -50,6 +52,8 @@ class ModelQuery:
 
 @dataclasses.dataclass
 class DiscoveryResult:
+    """One ranked match: the card, the vault serving it, and its score."""
+
     card: ModelCard
     vault_id: str
     score: float
@@ -69,7 +73,20 @@ class DiscoveryService:
     def __len__(self) -> int:
         return len(self._cards)
 
+    def set_clock(self, clock: Callable[[], float]):
+        """Rebind the freshness clock; only legal while nothing is indexed.
+
+        Cards are scored against this clock's notion of "now" — rebinding
+        after registration would score existing ``created_at`` stamps
+        against a different timeline.
+        """
+        if self._cards:
+            raise ValueError("cannot rebind the clock of a discovery "
+                             "service that already indexed cards")
+        self._clock = clock
+
     def attach_vault(self, vault: ModelVault):
+        """Make a vault fetchable and index every card it already holds."""
         self._vaults[vault.vault_id] = vault
         for card in vault.cards():
             self.register(card, vault.vault_id)
@@ -79,6 +96,7 @@ class DiscoveryService:
         return (-card.metrics.get("accuracy", 0.0), card.model_id)
 
     def register(self, card: ModelCard, vault_id: str):
+        """Index a card (replacing any previous version of the model)."""
         if vault_id not in self._vaults:
             raise KeyError(f"unknown vault {vault_id}")
         prev = self._cards.get(card.model_id)
@@ -115,10 +133,12 @@ class DiscoveryService:
         m = card.metrics
         if m.get("accuracy", 0.0) < q.min_accuracy:
             return False
-        per_class = {int(k): v for k, v in m.get("per_class", {}).items()}
-        for cls, need in q.min_class_accuracy.items():
-            if per_class.get(int(cls), 0.0) < need:
-                return False
+        if q.min_class_accuracy:  # skip the per-card dict rebuild otherwise
+            per_class = {int(k): v
+                         for k, v in m.get("per_class", {}).items()}
+            for cls, need in q.min_class_accuracy.items():
+                if per_class.get(int(cls), 0.0) < need:
+                    return False
         if q.max_params is not None and card.num_params > q.max_params:
             return False
         if q.logit_dim is not None:
@@ -130,9 +150,11 @@ class DiscoveryService:
     def _score(self, card: ModelCard, q: ModelQuery) -> float:
         m = card.metrics
         score = 2.0 * m.get("accuracy", 0.0)
-        per_class = {int(k): v for k, v in m.get("per_class", {}).items()}
-        for cls in q.min_class_accuracy:
-            score += per_class.get(int(cls), 0.0)
+        if q.min_class_accuracy:  # skip the per-card dict rebuild otherwise
+            per_class = {int(k): v
+                         for k, v in m.get("per_class", {}).items()}
+            for cls in q.min_class_accuracy:
+                score += per_class.get(int(cls), 0.0)
         # freshness bonus (decays over ~1 day of simulated time)
         age = max(self._clock() - card.created_at, 0.0)
         score += _FRESHNESS_CAP * (1.0 / (1.0 + age / 86400))
@@ -141,6 +163,7 @@ class DiscoveryService:
         return score
 
     def query(self, q: ModelQuery, top_k: int = 3) -> List[DiscoveryResult]:
+        """Top-k matches for a query, best score first (see module doc)."""
         self.stats["queries"] += 1
         if top_k <= 0:
             return []

@@ -24,11 +24,20 @@ re-evaluation — all of the publisher's minted publish rewards are slashed
 (burned, keeping conservation exact) and the account is flagged so future
 publishes mint nothing.  A byzantine publisher therefore ends at most with
 its stipend, below any honest party's publish income.
+
+Hierarchical topologies add *region operator* accounts (registered via
+:meth:`IncentiveLedger.add_operator`): when a fetch is served in-region —
+resolved by the region's discovery shard from one of its edge vaults or
+its cache, never touching the backbone — the region operator earns
+``region_fee_share`` of the service fee and the cloud operator keeps the
+rest; that split is what pays for running the regional shards.  Operator
+accounts never receive stipends and never mint, so the conservation
+invariant extends unchanged over per-region accounts.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Set
+from typing import Dict, Optional, Set
 
 # the cloud operator's account: collects the service fee on every fetch
 OPERATOR = "cloud"
@@ -36,6 +45,8 @@ OPERATOR = "cloud"
 
 @dataclasses.dataclass
 class LedgerEntry:
+    """One account's balance plus per-operation counters."""
+
     balance: float = 0.0
     published: int = 0
     downloads_served: int = 0
@@ -52,11 +63,20 @@ class IncentiveLedger:
     ``service_fee`` is the fraction of each fetch payment retained by the
     operator (paper: the discovery/distillation service is a cloud service
     someone has to run); the remainder goes to the model's publisher.
+    ``region_fee_share`` is the fraction of that fee forwarded to a region
+    operator when a fetch is served in-region — by the region's shard from
+    an edge vault or the region cache (hierarchical topologies only; see
+    :meth:`add_operator`).
     """
 
     def __init__(self, publish_reward: float = 1.0, fetch_cost: float = 2.0,
                  quality_bonus: float = 5.0, stipend: float = 5.0,
-                 service_fee: float = 0.2, operator: str = OPERATOR):
+                 service_fee: float = 0.2, operator: str = OPERATOR,
+                 region_fee_share: float = 0.5):
+        if not 0.0 <= region_fee_share <= 1.0:
+            raise ValueError(
+                f"region_fee_share must be in [0, 1], got {region_fee_share}"
+            )
         self.accounts: Dict[str, LedgerEntry] = {}
         self.publish_reward = publish_reward
         self.fetch_cost = fetch_cost
@@ -64,17 +84,32 @@ class IncentiveLedger:
         self.stipend = stipend
         self.service_fee = service_fee
         self.operator = operator
+        self.region_fee_share = region_fee_share
         self.minted = 0.0  # all credits ever created (stipends + rewards)
         self.flagged: Set[str] = set()  # caught byzantine publishers
+        # operator accounts (cloud + region shards): never stipended
+        self.operators: Set[str] = {operator}
         self._acct(operator)  # operator starts at zero, no stipend
 
     def _acct(self, party: str) -> LedgerEntry:
         acct = self.accounts.get(party)
         if acct is None:
-            grant = 0.0 if party == self.operator else self.stipend
+            grant = 0.0 if party in self.operators else self.stipend
             acct = self.accounts[party] = LedgerEntry(balance=grant)
             self.minted += grant
         return acct
+
+    def add_operator(self, name: str) -> None:
+        """Register an infrastructure operator account (e.g. a region's).
+
+        Operators collect fee shares but never receive stipends and never
+        mint publish rewards, so adding them cannot disturb conservation.
+        Must happen before the account transacts as a party.
+        """
+        if name in self.accounts and name not in self.operators:
+            raise ValueError(f"{name!r} already exists as a party account")
+        self.operators.add(name)
+        self._acct(name)
 
     def on_publish(self, party: str, accuracy: float):
         """Mint the publish reward + accuracy-proportional quality bonus.
@@ -93,38 +128,60 @@ class IncentiveLedger:
         self.minted += reward
 
     def can_fetch(self, party: str) -> bool:
+        """Can this account cover one fetch? (Opens it if new.)"""
         return self._acct(party).balance >= self.fetch_cost
 
     def on_denied(self, party: str):
+        """Count a fetch attempt refused for insufficient credit."""
         self._acct(party).denied += 1
 
-    def on_fetch(self, requester: str, publisher: str):
-        """Zero-sum transfer: requester -> publisher, fee -> operator."""
+    def _fee_split(self, region_operator: Optional[str]):
+        """(total fee, region operator's cut) for one fetch payment."""
+        fee = self.fetch_cost * self.service_fee
+        region_cut = (fee * self.region_fee_share
+                      if region_operator is not None else 0.0)
+        return fee, region_cut
+
+    def on_fetch(self, requester: str, publisher: str,
+                 region_operator: Optional[str] = None):
+        """Zero-sum transfer: requester -> publisher, fee -> operator(s).
+
+        When the fetch was served in-region, pass the region's operator
+        account: it earns ``region_fee_share`` of the service fee and the
+        cloud operator keeps the remainder.
+        """
         if not self.can_fetch(requester):
             self._acct(requester).denied += 1
             raise PermissionError(f"{requester} has insufficient credits")
-        fee = self.fetch_cost * self.service_fee
+        fee, region_cut = self._fee_split(region_operator)
         req = self._acct(requester)
         req.balance -= self.fetch_cost
         req.fetches += 1
         pub = self._acct(publisher)
         pub.balance += self.fetch_cost - fee
         pub.downloads_served += 1
-        self._acct(self.operator).balance += fee
+        self._acct(self.operator).balance += fee - region_cut
+        if region_operator is not None:
+            self._acct(region_operator).balance += region_cut
 
-    def on_refund(self, requester: str, publisher: str):
-        """Reverse one paid fetch (dropped/corrupted/fraudulent delivery).
+    def on_refund(self, requester: str, publisher: str,
+                  region_operator: Optional[str] = None):
+        """Reverse one paid fetch (dropped/corrupted/fraud/outage delivery).
 
-        Exact inverse of :meth:`on_fetch` — requester is made whole, the
-        publisher and operator return their cut — so the transfer nets to
-        zero and conservation is untouched.
+        Exact inverse of :meth:`on_fetch` — requester is made whole, and
+        the publisher, cloud operator, and (if the payment split a fee
+        share) region operator return their cuts — so the transfer nets to
+        zero and conservation is untouched.  Pass the same
+        ``region_operator`` the payment used.
         """
-        fee = self.fetch_cost * self.service_fee
+        fee, region_cut = self._fee_split(region_operator)
         req = self._acct(requester)
         req.balance += self.fetch_cost
         req.refunds += 1
         self._acct(publisher).balance -= self.fetch_cost - fee
-        self._acct(self.operator).balance -= fee
+        self._acct(self.operator).balance -= fee - region_cut
+        if region_operator is not None:
+            self._acct(region_operator).balance -= region_cut
 
     def on_fraud(self, publisher: str) -> float:
         """Slash a publisher caught advertising an inflated card.
@@ -144,10 +201,13 @@ class IncentiveLedger:
         return slashed
 
     def balance(self, party: str) -> float:
+        """Current balance (opens the account — and mints the stipend for
+        non-operators — on first touch)."""
         return self._acct(party).balance
 
     # -- conservation + reporting -------------------------------------------
     def total_credits(self) -> float:
+        """Sum of every account balance, operators included."""
         return sum(a.balance for a in self.accounts.values())
 
     def assert_conserved(self, tol: float = 1e-6):
@@ -160,13 +220,15 @@ class IncentiveLedger:
             )
 
     def distribution(self) -> Dict[str, float]:
-        """Summary of party balances (operator excluded) for reports."""
+        """Summary of party balances (operators excluded) for reports."""
         bals = sorted(a.balance for p, a in self.accounts.items()
-                      if p != self.operator)
+                      if p not in self.operators)
+        region_total = sum(self.accounts[p].balance for p in self.operators
+                           if p != self.operator)
         if not bals:
             return {"parties": 0, "operator": self.balance(self.operator)}
         n = len(bals)
-        return {
+        out = {
             "parties": n,
             "min": bals[0],
             "median": bals[n // 2],
@@ -179,3 +241,7 @@ class IncentiveLedger:
             "frauds": sum(a.frauds for a in self.accounts.values()),
             "flagged": len(self.flagged),
         }
+        if len(self.operators) > 1:
+            out["region_operators"] = len(self.operators) - 1
+            out["region_fee_total"] = region_total
+        return out

@@ -23,6 +23,8 @@ from repro.federated.client import LocalTrainer
 
 @dataclasses.dataclass
 class LearnerConfig:
+    """Per-party training + distillation hyperparameters."""
+
     lr: float = 0.05
     batch_size: int = 32
     distill_alpha: float = 0.5
@@ -61,12 +63,14 @@ class LearningParty:
 
     # -- local operations ----------------------------------------------------
     def train_local(self, epochs: int = 1):
+        """SGD on the party's own data; returns (final loss, steps run)."""
         self.params, loss, steps = self.trainer.train(
             self.params, self.data.x_train, self.data.y_train, epochs=epochs
         )
         return loss, steps
 
     def evaluate(self, x=None, y=None):
+        """Classifier metrics on (x, y), defaulting to the local test split."""
         x = self.data.x_test if x is None else x
         y = self.data.y_test if y is None else y
         return evaluate_classifier(

@@ -7,6 +7,7 @@ Integrity is verified on every fetch; tampered blobs are rejected.
 """
 from __future__ import annotations
 
+import copy
 import dataclasses
 import hashlib
 import hmac
@@ -33,22 +34,41 @@ class ModelCard:
     parent: Optional[str] = None  # lineage (e.g. distilled-from)
 
     def to_json(self) -> str:
-        return json.dumps(dataclasses.asdict(self), sort_keys=True)
+        """Canonical (key-sorted) JSON; the byte string vault signatures cover.
+
+        Built from ``__dict__`` directly: the card is a flat dataclass over
+        JSON-native values, and ``dataclasses.asdict``'s recursive
+        deep-copy was the single hottest call in the 100k-party hierarchy
+        benchmark.
+        """
+        return json.dumps(self.__dict__, sort_keys=True)
 
     @staticmethod
     def from_json(s: str) -> "ModelCard":
+        """Inverse of :meth:`to_json`."""
         return ModelCard(**json.loads(s))
 
 
 class IntegrityError(Exception):
-    pass
+    """A fetched blob or card failed its hash/signature verification."""
 
 
 @dataclasses.dataclass
 class VaultEntry:
+    """One stored model: card + signed blob (+ a fetch-path decode cache).
+
+    ``parsed`` caches the deserialized params after the first verified
+    fetch — blobs are content-addressed and immutable per version, so
+    re-parsing the archive on every download of a popular model is pure
+    overhead.  Integrity (content hash + signature over the *current*
+    card serialization) is still checked on every fetch; only the blob
+    decode is memoized.
+    """
+
     card: ModelCard
     blob: bytes
     signature: bytes
+    parsed: object = None
 
 
 class ModelVault:
@@ -68,6 +88,17 @@ class ModelVault:
         self._clock = clock if clock is not None else SimClock()
 
     # -- internals ---------------------------------------------------------
+    def set_clock(self, clock: Callable[[], float]):
+        """Rebind the ``created_at`` clock; only legal while empty.
+
+        Stored cards already carry timestamps from the old clock, so a
+        non-empty vault cannot switch timelines.
+        """
+        if self._entries:
+            raise ValueError("cannot rebind the clock of a vault that "
+                             "already stores models")
+        self._clock = clock
+
     def _sign(self, blob: bytes, card_json: str) -> bytes:
         mac = hmac.new(self._key, blob, hashlib.sha256)
         mac.update(card_json.encode())
@@ -75,6 +106,7 @@ class ModelVault:
 
     @staticmethod
     def content_hash(blob: bytes) -> str:
+        """Content address of a serialized model blob."""
         return hashlib.sha256(blob).hexdigest()
 
     # -- API ----------------------------------------------------------------
@@ -92,8 +124,31 @@ class ModelVault:
         self._entries[card.model_id] = VaultEntry(card, blob, sig)
         return card
 
+    def store_copy(self, params, card: ModelCard) -> ModelCard:
+        """Store a replica of a card from another vault, identity preserved.
+
+        Unlike :meth:`store`, the card's ``version`` and ``created_at`` are
+        kept (this vault is a cache, not the model's origin), so downstream
+        consumers keyed on ``(model_id, version)`` — e.g. verify-on-fetch
+        verdict memoization — see the same blob identity as the original.
+        The replica is hashed and signed under *this* vault's key.
+        """
+        blob = params_to_bytes(params)
+        card = dataclasses.replace(card, content_hash=self.content_hash(blob))
+        sig = self._sign(blob, card.to_json())
+        self._entries[card.model_id] = VaultEntry(card, blob, sig)
+        return card
+
     def fetch(self, model_id: str):
-        """Verify integrity and return (params, card)."""
+        """Verify integrity and return (params, card).
+
+        Hash and signature are checked on every fetch; the blob decode is
+        memoized per entry (blobs are immutable per version), so repeated
+        downloads of a popular model pay the crypto but not the archive
+        parse.  Each caller receives its own deep copy of the decoded
+        tree — a requester mutating its download cannot poison later
+        fetches of the same blob.
+        """
         entry = self._entries.get(model_id)
         if entry is None:
             raise KeyError(f"model {model_id!r} not in vault {self.vault_id}")
@@ -102,12 +157,16 @@ class ModelVault:
         expect = self._sign(entry.blob, entry.card.to_json())
         if not hmac.compare_digest(expect, entry.signature):
             raise IntegrityError(f"signature mismatch for {model_id}")
-        return params_from_bytes(entry.blob), entry.card
+        if entry.parsed is None:
+            entry.parsed = params_from_bytes(entry.blob)
+        return copy.deepcopy(entry.parsed), entry.card
 
     def cards(self) -> List[ModelCard]:
+        """Every stored model's card (latest version each)."""
         return [e.card for e in self._entries.values()]
 
     def blob_size(self, model_id: str) -> int:
+        """Serialized size in bytes (what the Link cost model transfers)."""
         return len(self._entries[model_id].blob)
 
     def __contains__(self, model_id: str) -> bool:

@@ -18,6 +18,8 @@ __all__ = [
     "CohortExchangeActor", "ExchangeConfig", "ExchangeReport", "CycleStats",
     "run_exchange", "make_verifier", "split_cohorts",
     "FaultPlan", "LinkFault",
+    "Region", "RegionStats", "RegionalHit", "RegionalTopology",
+    "build_hierarchical_continuum",
     "TraceRecording", "serialize_trace", "trace_digest",
     "record", "replay", "assert_replay", "run_scenario",
 ]
@@ -37,6 +39,11 @@ _LAZY = {
     "split_cohorts": "repro.runtime.exchange",
     "FaultPlan": "repro.runtime.faults",
     "LinkFault": "repro.runtime.faults",
+    "Region": "repro.runtime.topology",
+    "RegionStats": "repro.runtime.topology",
+    "RegionalHit": "repro.runtime.topology",
+    "RegionalTopology": "repro.runtime.topology",
+    "build_hierarchical_continuum": "repro.runtime.topology",
     "TraceRecording": "repro.runtime.trace",
     "serialize_trace": "repro.runtime.trace",
     "trace_digest": "repro.runtime.trace",

@@ -59,6 +59,7 @@ class MDDPartyActor:
         start_jitter_s: float = 0.0,
         on_cycle: Optional[Callable[[CycleRecord], None]] = None,
         faults: Optional[FaultPlan] = None,
+        region: Optional[str] = None,
     ):
         self.party = party
         self.eval_x, self.eval_y = eval_x, eval_y
@@ -70,6 +71,15 @@ class MDDPartyActor:
         self.slot_len_s = slot_len_s
         self.start_jitter_s = start_jitter_s
         self.on_cycle = on_cycle
+        # home region (hierarchical topologies): a party inside a dark
+        # region subtree cannot communicate, so regional outages gate its
+        # slots exactly like churn.  Defaults to the continuum's own
+        # placement when the party is wired to a hierarchical continuum.
+        if region is None and party.continuum is not None and \
+                getattr(party.continuum, "topology", None) is not None:
+            region = party.continuum.topology.region_of(
+                party.party_id).region_id
+        self.region = region
         # fault plan: churn gates this actor's slots (on top of any explicit
         # availability trace), stragglers compute slower; link faults are
         # applied by the continuum itself
@@ -88,6 +98,7 @@ class MDDPartyActor:
 
     # -- scheduling glue -----------------------------------------------------
     def start(self, loop: EventLoop, at: float = 0.0):
+        """Schedule this actor's first wake on the loop."""
         self._loop = loop
         loop.call_at(at + self.start_jitter_s, self._wake, label=self.name)
 
@@ -97,6 +108,9 @@ class MDDPartyActor:
     def _available(self, now: float) -> bool:
         if (self.faults is not None
                 and not self.faults.party_online(self.party.party_id, now)):
+            return False
+        if (self.faults is not None and self.region is not None
+                and self.faults.region_offline(self.region, now)):
             return False
         if self.availability is None:
             return True
@@ -182,9 +196,11 @@ class FLServerActor:
         self._rnd = 0
 
     def start(self, loop: EventLoop, at: float = 0.0):
+        """Schedule this actor's first wake on the loop."""
         loop.add_actor(self, start_at=at, label=self.name)
 
     def on_wake(self, now: float) -> Optional[float]:
+        """Run one FL round; return its simulated duration (None = done)."""
         if self._rnd >= self.server.cfg.rounds:
             if self.publish_to is not None:
                 continuum, party_id, card_fn = self.publish_to

@@ -18,6 +18,7 @@ class SimClock:
         self._now = float(start)
 
     def now(self) -> float:
+        """Current simulated time in seconds."""
         return self._now
 
     # Calling the clock is the injection protocol: anything that previously
@@ -25,11 +26,13 @@ class SimClock:
     __call__ = now
 
     def advance_to(self, t: float) -> None:
+        """Jump to absolute simulated time ``t`` (never backwards)."""
         if t < self._now:
             raise ValueError(f"clock cannot move backwards: {t} < {self._now}")
         self._now = t
 
     def advance(self, dt: float) -> float:
+        """Move forward by ``dt`` seconds; returns the new time."""
         if dt < 0:
             raise ValueError(f"negative advance: {dt}")
         self._now += dt

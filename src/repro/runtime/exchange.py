@@ -45,6 +45,8 @@ from repro.runtime.population import PartyPopulation, stack_teachers
 
 @dataclasses.dataclass
 class ExchangeConfig:
+    """Knobs for one exchange run: cycle shape + distillation params."""
+
     cycles: int = 3
     cycle_len_s: float = 600.0  # simulated seconds per MDD cycle
     local_epochs: int = 1
@@ -73,6 +75,11 @@ class CycleStats:
     teacher_fetches: Dict[str, int]  # teacher arch -> count
     # paid fetches that failed in flight (drop/corruption/fraud; refunded)
     failed: int = 0
+    # hierarchical topologies only: how the cycle's successful fetches
+    # resolved — served by the requester's region shard vs escalated to
+    # the cloud index (flat continuums leave both at zero)
+    local_hits: int = 0
+    escalated: int = 0
 
 
 class CohortExchangeActor:
@@ -118,6 +125,7 @@ class CohortExchangeActor:
         self._inbox: Dict[int, tuple] = {}
 
     def start(self, loop: EventLoop, at: float = 0.0):
+        """Schedule this cohort's first cycle on the loop."""
         self._loop = loop
         loop.call_at(at, self._begin_cycle, label=f"{self.name} cycle0")
 
@@ -156,7 +164,8 @@ class CohortExchangeActor:
         # credit-gated queries in the second half: each party asks for a
         # strictly better model in its own logit space
         teachers = self._inbox  # party index -> (params, card)
-        counters = {"denied": 0, "misses": 0, "failed": 0}
+        counters = {"denied": 0, "misses": 0, "failed": 0,
+                    "local_hits": 0, "escalated": 0}
 
         def make_query(i):
             return ModelQuery(
@@ -172,7 +181,12 @@ class CohortExchangeActor:
                     if hit is None:
                         counters["misses"] += 1
                         return
-                    t_params, t_card, _ = hit
+                    t_params, t_card, res = hit
+                    local = getattr(res, "local", None)
+                    if local is True:
+                        counters["local_hits"] += 1
+                    elif local is False:
+                        counters["escalated"] += 1
                     teachers[i] = (t_params, t_card)
 
                 def denied(_now2):
@@ -273,6 +287,8 @@ class CohortExchangeActor:
             distill_loss=mean_loss,
             teacher_fetches={a: len(ix) for a, ix in sorted(by_arch.items())},
             failed=int(counters["failed"]),
+            local_hits=int(counters["local_hits"]),
+            escalated=int(counters["escalated"]),
         ))
         if self.on_cycle is not None:
             self.on_cycle(self.stats[-1])
@@ -284,6 +300,8 @@ class CohortExchangeActor:
 
 @dataclasses.dataclass
 class ExchangeReport:
+    """Aggregate outcome of :func:`run_exchange` across all cohorts."""
+
     cycles: List[CycleStats]
     ledger: Dict[str, float]
     sim_time_s: float
@@ -291,18 +309,28 @@ class ExchangeReport:
     cards: int
     traffic: Dict
     faults: Dict = dataclasses.field(default_factory=dict)
+    # hierarchical topologies: aggregated RegionStats + cache hit rate
+    topology: Dict = dataclasses.field(default_factory=dict)
 
     @property
     def total_fetches(self) -> int:
+        """Teachers actually integrated, summed over cycles."""
         return sum(c.fetched for c in self.cycles)
 
     @property
     def total_cross_arch(self) -> int:
+        """Cross-architecture integrations, summed over cycles."""
         return sum(c.cross_arch for c in self.cycles)
 
     @property
     def total_failed(self) -> int:
+        """Paid fetches that failed in flight (refunded), summed."""
         return sum(c.failed for c in self.cycles)
+
+    @property
+    def total_local_hits(self) -> int:
+        """Fetches served by a region shard, summed over cycles."""
+        return sum(c.local_hits for c in self.cycles)
 
 
 def split_cohorts(n_parties: int, mlp_frac: float):
@@ -376,6 +404,7 @@ def run_exchange(
     ledger: Optional[IncentiveLedger] = None,
     continuum: Optional[Continuum] = None,
     edges: int = 8,
+    regions: int = 0,
     availabilities: Optional[Sequence] = None,  # one trace per cohort
     on_cycle: Optional[Callable[[CycleStats], None]] = None,
     faults: Optional[FaultPlan] = None,
@@ -387,6 +416,14 @@ def run_exchange(
     cross-architecture fetches can be integrated, runs the event loop to
     quiescence, and returns the aggregate report.  Raises if the ledger
     ends non-conserved.
+
+    ``regions > 0`` builds a hierarchical continuum instead of a flat one:
+    ``edges`` edge servers distributed as evenly as possible over
+    ``regions`` regions (every region gets at least one, so the effective
+    total is ``max(edges, regions)``), region-first discovery, in-region
+    caching, and fee sharing — the report's ``topology`` dict then
+    carries the aggregated locality stats (queries, local hits,
+    escalations, cache hit rate).
 
     With ``faults``, the continuum is built under the fault plan: transfers
     drop/delay/corrupt, stragglers slow down, byzantine publishers inflate
@@ -400,9 +437,17 @@ def run_exchange(
     applies = {pop.model.name: pop.model.apply for pop in cohorts}
     if continuum is None:
         ledger = ledger if ledger is not None else IncentiveLedger()
-        continuum = Continuum(ledger=ledger, faults=faults)
-        for e in range(edges):
-            continuum.add_edge_server(f"edge{e:03d}")
+        if regions > 0:
+            from repro.runtime.topology import build_hierarchical_continuum
+
+            continuum = build_hierarchical_continuum(
+                regions, total_edges=max(edges, regions), ledger=ledger,
+                faults=faults,
+            )
+        else:
+            continuum = Continuum(ledger=ledger, faults=faults)
+            for e in range(edges):
+                continuum.add_edge_server(f"edge{e:03d}")
     elif ledger is not None and continuum.ledger is not ledger:
         raise ValueError("pass ledger or a continuum that already has one")
     elif faults is not None and continuum.faults is not faults:
@@ -440,6 +485,11 @@ def run_exchange(
         (s for a in actors for s in a.stats),
         key=lambda s: (s.cycle, s.cohort),
     )
+    topo_report = {}
+    if continuum.topology is not None:
+        topo_report = continuum.topology.totals().as_dict()
+        topo_report["regions"] = len(continuum.topology)
+        topo_report["hit_rate"] = continuum.topology.hit_rate()
     return ExchangeReport(
         cycles=all_stats,
         ledger=(continuum.ledger.distribution()
@@ -449,4 +499,5 @@ def run_exchange(
         cards=len(continuum.discovery),
         traffic=continuum.traffic.as_dict(),
         faults=continuum.fault_stats.as_dict(),
+        topology=topo_report,
     )

@@ -13,6 +13,10 @@ declarative* description of everything that can go wrong in a run:
   stragglers  a fraction of parties compute and transfer uniformly slower
   byzantine   a fraction of publishers inflate their ``ModelCard`` accuracy
               (caught by the continuum's verify-on-fetch re-evaluation)
+  regional    whole region subtrees go dark for a slot at a time
+  outages     (hierarchical topologies): publishes into a dark region are
+              lost, and every fetch through it — including cache hits —
+              drops and refunds
 
 Every decision is a pure function of ``(plan, decision key)``: outcomes are
 drawn by hashing the plan seed with stable string keys (party ids, model
@@ -54,6 +58,7 @@ class LinkFault:
 
     @property
     def clean(self) -> bool:
+        """True when the transfer proceeds unharmed and on time."""
         return not self.drop and not self.corrupt and self.delay_factor == 1.0
 
 
@@ -83,33 +88,44 @@ class FaultPlan:
     byzantine_frac: float = 0.0
     byzantine_inflation: float = 0.3  # claimed = min(0.99, true + inflation)
     verify_tolerance: float = 0.1  # claimed - measured > tol => fraud
+    # -- regional outages (per region, per slot; hierarchical topologies) ----
+    region_outage_prob: float = 0.0  # P(a region is dark in a given slot)
+    region_slot_len_s: float = 300.0  # outage slot length (simulated s)
 
     def __post_init__(self):
         for name in ("churn", "drop_prob", "delay_prob", "corrupt_prob",
-                     "straggler_frac", "byzantine_frac"):
+                     "straggler_frac", "byzantine_frac",
+                     "region_outage_prob"):
             v = getattr(self, name)
             if not 0.0 <= v <= 1.0:
                 raise ValueError(f"{name} must be in [0, 1], got {v}")
         if self.max_delay_factor < 1.0 or self.straggler_slowdown < 1.0:
             raise ValueError("delay/slowdown factors must be >= 1")
+        if self.region_slot_len_s <= 0.0:
+            raise ValueError("region_slot_len_s must be positive")
         self._churn_trace: Optional[AvailabilityTrace] = None
 
     # -- serialization (for trace recordings) --------------------------------
     def to_dict(self) -> Dict:
+        """All plan fields as a JSON-able dict (trace recordings)."""
         return {f.name: getattr(self, f.name)
                 for f in dataclasses.fields(self)}
 
     @staticmethod
     def from_dict(d: Dict) -> "FaultPlan":
+        """Rebuild a plan from :meth:`to_dict` output (missing keys
+        default, so old recordings stay replayable)."""
         return FaultPlan(**d)
 
     # -- per-party decisions (stable for the whole run) ----------------------
     def is_byzantine(self, party_id: str) -> bool:
+        """Does this party inflate its published cards? (Stable per id.)"""
         return (self.byzantine_frac > 0.0
                 and _stable_u01(self.seed, "byz", party_id)
                 < self.byzantine_frac)
 
     def is_straggler(self, party_id: str) -> bool:
+        """Is this party uniformly slow? (Stable per id.)"""
         return (self.straggler_frac > 0.0
                 and _stable_u01(self.seed, "straggler", party_id)
                 < self.straggler_frac)
@@ -150,6 +166,23 @@ class FaultPlan:
             num_parties, horizon=self.churn_horizon, seed=sub_seed,
             avail_mean=min(max(1.0 - self.churn, 1e-3), 1.0 - 1e-3),
         )
+
+    # -- regional outages ----------------------------------------------------
+    def region_offline(self, region_id: str, now: float) -> bool:
+        """Is a whole region subtree partitioned at simulated time ``now``?
+
+        Decided per ``(region, slot)`` by the same seeded-hash draw as
+        every other fault, so outages are deterministic and independent of
+        query order.  The continuum consults this at publish initiation
+        (the upload dies at the dark region's doorstep) and at fetch
+        delivery time (in-flight downloads through a dark region are lost
+        and refunded).
+        """
+        if self.region_outage_prob <= 0.0:
+            return False
+        slot = int(now // self.region_slot_len_s)
+        return (_stable_u01(self.seed, "region-outage", region_id, slot)
+                < self.region_outage_prob)
 
     # -- link faults ---------------------------------------------------------
     def link_fault(self, kind: str, *key) -> LinkFault:

@@ -25,7 +25,9 @@ class Actor(Protocol):
     when the actor is finished.
     """
 
-    def on_wake(self, now: float) -> Optional[float]: ...
+    def on_wake(self, now: float) -> Optional[float]:
+        """Do the actor's next action; return the next wake delay."""
+        ...
 
 
 @dataclasses.dataclass(frozen=True)
@@ -61,6 +63,7 @@ class EventLoop:
     # -- scheduling ----------------------------------------------------------
     def call_at(self, t: float, fn: Callable[[float], Any], label: str = "",
                 payload: Optional[Dict] = None) -> None:
+        """Schedule ``fn(now)`` at absolute simulated time ``t``."""
         if t < self.clock.now():
             raise ValueError(
                 f"cannot schedule in the past: {t} < {self.clock.now()}"
@@ -70,6 +73,7 @@ class EventLoop:
 
     def call_after(self, delay: float, fn: Callable[[float], Any],
                    label: str = "", payload: Optional[Dict] = None) -> None:
+        """Schedule ``fn(now)`` after ``delay`` simulated seconds."""
         self.call_at(self.clock.now() + max(delay, 0.0), fn, label, payload)
 
     def add_actor(self, actor: Actor, start_at: float = 0.0,

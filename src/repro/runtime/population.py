@@ -220,9 +220,11 @@ class PartyPopulation:
 
     # -- per-party views (for publish/fetch paths) ---------------------------
     def party_params(self, i: int):
+        """Party ``i``'s params sliced out of the stacked pytree (numpy)."""
         return jax.tree_util.tree_map(lambda a: np.asarray(a[i]), self.params)
 
     def make_card(self, i: int, accuracy: float) -> ModelCard:
+        """Build party ``i``'s model card around a measured accuracy."""
         return ModelCard(
             model_id=f"{self.party_ids[i]}/{self.model.name}",
             task=self.task,

@@ -19,12 +19,17 @@ as a byte diff against the fixture.
 Scenarios are registered by name so a recording stays runnable from its
 serialized form:
 
-  ``chaos_microworld``  numpy-only publish/fetch chaos over one continuum
-                        (platform-independent floats; used for the golden
-                        fixture)
-  ``chaos_exchange``    the full jax exchange economy under a fault plan
-                        (used for in-process record/replay tests and the
-                        chaos benchmark)
+  ``chaos_microworld``      numpy-only publish/fetch chaos over one (flat)
+                            continuum (platform-independent floats; used
+                            for the golden fixture)
+  ``hierarchy_microworld``  numpy-only publish/fetch over a hierarchical
+                            edge→region→cloud continuum — region-first
+                            discovery, cache escalation, fee splits, and
+                            regional outages, all under the plan (golden
+                            fixture for the topology tier)
+  ``chaos_exchange``        the full jax exchange economy under a fault
+                            plan (used for in-process record/replay tests
+                            and the chaos benchmark)
 """
 from __future__ import annotations
 
@@ -69,6 +74,7 @@ def serialize_trace(log: Sequence[EventRecord]) -> bytes:
 
 
 def trace_digest(blob: bytes) -> str:
+    """Content digest of a canonical trace (what recordings store)."""
     return hashlib.sha256(blob).hexdigest()
 
 
@@ -109,18 +115,22 @@ class TraceRecording:
     trace: str  # canonical trace text (inspectable in diffs)
 
     def to_json(self) -> str:
+        """Serialize the recording (human-diffable, key-sorted)."""
         return json.dumps(dataclasses.asdict(self), sort_keys=True, indent=1)
 
     @staticmethod
     def from_json(s: str) -> "TraceRecording":
+        """Inverse of :meth:`to_json`."""
         return TraceRecording(**json.loads(s))
 
     def save(self, path):
+        """Write the recording to a fixture file (e.g. tests/golden/)."""
         with open(path, "w") as f:
             f.write(self.to_json())
 
     @staticmethod
     def load(path) -> "TraceRecording":
+        """Read a recording saved by :meth:`save`."""
         with open(path) as f:
             return TraceRecording.from_json(f.read())
 
@@ -162,6 +172,18 @@ def assert_replay(recording: TraceRecording) -> None:
 
 # -- scenarios ----------------------------------------------------------------
 
+
+def scripted_accuracy(i: int, cycle: int) -> float:
+    """The microworlds' scripted per-(party, cycle) "true" accuracy.
+
+    A dense deterministic spread in [0.05, 0.95); shared by both golden
+    scenarios and the hierarchy benchmark so their accuracy distributions
+    cannot silently diverge.  Changing it invalidates the checked-in
+    golden fixtures.
+    """
+    return ((i * 37 + cycle * 11) % 90) / 100.0 + 0.05
+
+
 @scenario("chaos_microworld")
 def chaos_microworld(plan: FaultPlan, parties: int = 16, cycles: int = 2,
                      edges: int = 2, cycle_len_s: float = 120.0) -> EventLoop:
@@ -201,9 +223,7 @@ def chaos_microworld(plan: FaultPlan, parties: int = 16, cycles: int = 2,
         for i, pid in enumerate(ids)
     }
 
-    def true_acc(i: int, cycle: int) -> float:
-        return ((i * 37 + cycle * 11) % 90) / 100.0 + 0.05
-
+    true_acc = scripted_accuracy
     counters = {"hits": 0, "misses": 0, "denied": 0, "failed": 0}
 
     for cycle in range(cycles):
@@ -257,6 +277,112 @@ def chaos_microworld(plan: FaultPlan, parties: int = 16, cycles: int = 2,
     # every gated failure refunded, every denial counted on both sides
     assert counters["failed"] == cont.fault_stats.refunds
     assert counters["denied"] == cont.denied_fetches
+    return loop
+
+
+@scenario("hierarchy_microworld")
+def hierarchy_microworld(plan: FaultPlan, parties: int = 16, cycles: int = 2,
+                         regions: int = 3, edges_per_region: int = 2,
+                         cycle_len_s: float = 120.0) -> EventLoop:
+    """Numpy-only publish/fetch over a hierarchical continuum.
+
+    The topology-tier sibling of :func:`chaos_microworld`: parties bucket
+    onto regions, publishes hop edge→region→cloud, queries resolve against
+    the home region's shard first, and each cycle's *second* query wave
+    runs after the first wave's escalations have seeded the region caches
+    — so the trace exercises local hits, cloud escalations, cache-hit fee
+    splits, regional outages (drops + refunds), and byzantine detection
+    through cached copies.  All values are pure Python/numpy, so the trace
+    is byte-stable across platforms and recordable as a golden fixture.
+    """
+    from repro.core.discovery import ModelQuery
+    from repro.core.incentives import IncentiveLedger
+    from repro.core.vault import ModelCard
+    from repro.runtime.topology import build_hierarchical_continuum
+
+    true_accs: Dict[tuple, float] = {}
+
+    def verifier(params, card):
+        return true_accs.get((card.model_id, card.version))
+
+    cont = build_hierarchical_continuum(
+        regions, edges_per_region, ledger=IncentiveLedger(), faults=plan,
+        verifier=verifier,
+    )
+    loop = cont.loop
+
+    ids = [f"p{i:03d}" for i in range(parties)]
+    params_of = {
+        pid: {"w": np.full((4 + i % 3, 3), float(i), np.float32),
+              "b": np.arange(3, dtype=np.float32) * float(i)}
+        for i, pid in enumerate(ids)
+    }
+
+    true_acc = scripted_accuracy
+    counters = {"hits": 0, "misses": 0, "denied": 0, "failed": 0,
+                "local": 0, "escalated": 0}
+
+    def schedule_queries(cycle: int, t0: float, stride: float):
+        for i, pid in enumerate(ids):
+            t_query = t0 + stride * i
+            if not plan.party_online(pid, t_query):
+                continue
+            acc = true_acc(i, cycle)
+
+            def do_query(now, pid=pid, acc=acc):
+                def done(hit, _now):
+                    if hit is None:
+                        counters["misses"] += 1
+                        return
+                    counters["hits"] += 1
+                    counters["local" if hit[2].local else "escalated"] += 1
+
+                cont.discover_and_fetch_async(
+                    ModelQuery(task="hier", min_accuracy=acc + 0.02,
+                               exclude_owners=(pid,)),
+                    done, requester=pid,
+                    on_denied=lambda _now: counters.__setitem__(
+                        "denied", counters["denied"] + 1),
+                    on_fail=lambda _r, _now: counters.__setitem__(
+                        "failed", counters["failed"] + 1),
+                )
+
+            loop.call_at(t_query, do_query, label=f"{pid} query")
+
+    for cycle in range(cycles):
+        window = cycle * cycle_len_s
+        for i, pid in enumerate(ids):
+            t_pub = window + 1.0 + 1.7 * i
+            if not plan.party_online(pid, t_pub):
+                continue
+            acc = true_acc(i, cycle)
+
+            def do_publish(now, pid=pid, acc=acc):
+                card = ModelCard(
+                    model_id=f"{pid}/toy", task="hier", arch="toy",
+                    owner=pid, num_params=15,
+                    metrics={"accuracy": acc, "per_class": {}},
+                )
+
+                def registered(final, _now, acc=acc):
+                    true_accs[(final.model_id, final.version)] = acc
+
+                cont.publish_async(pid, params_of[pid], card,
+                                   on_done=registered)
+
+            loop.call_at(t_pub, do_publish, label=f"{pid} publish c{cycle}")
+
+        # two query waves: the second runs against caches the first seeded
+        schedule_queries(cycle, window + cycle_len_s * 0.45, 1.3)
+        schedule_queries(cycle, window + cycle_len_s * 0.75, 1.1)
+
+    loop.run_to_quiescence()
+    cont.ledger.assert_conserved()
+    assert counters["failed"] == cont.fault_stats.refunds
+    assert counters["denied"] == cont.denied_fetches
+    totals = cont.topology.totals()
+    assert counters["local"] + counters["escalated"] == counters["hits"]
+    assert totals.local_hits + totals.escalations >= counters["hits"]
     return loop
 
 

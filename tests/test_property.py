@@ -254,6 +254,136 @@ def test_event_loop_deterministic_under_random_fault_plans(plan_kw):
     assert a == b
 
 
+# -- hierarchical topology: conservation + determinism under region faults ----
+
+_hier_plans = st.builds(
+    dict,
+    seed=st.integers(0, 2**16),
+    churn=st.floats(0.0, 0.6),
+    drop_prob=st.floats(0.0, 0.4),
+    delay_prob=st.floats(0.0, 0.4),
+    corrupt_prob=st.floats(0.0, 0.4),
+    straggler_frac=st.floats(0.0, 1.0),
+    byzantine_frac=st.floats(0.0, 0.5),
+    region_outage_prob=st.floats(0.0, 0.9),
+    region_slot_len_s=st.sampled_from([30.0, 60.0, 300.0]),
+)
+
+
+@given(plan_kw=_hier_plans)
+@settings(max_examples=10, deadline=None)
+def test_hierarchy_scenario_conserves_ledger_under_random_fault_plans(plan_kw):
+    """Regional outages drop publishes and (paid, refunded) fetches across
+    whole subtrees; the scenario itself asserts sum(balances) == minted and
+    that every failed-fetch callback matches a continuum-side refund —
+    so running it under arbitrary plans is the conservation property."""
+    from repro.runtime.faults import FaultPlan
+    from repro.runtime.trace import run_scenario
+
+    plan = FaultPlan(**plan_kw)
+    blob = run_scenario("hierarchy_microworld", plan, parties=8, cycles=1)
+    assert blob  # events actually fired
+
+
+@given(plan_kw=_hier_plans)
+@settings(max_examples=10, deadline=None)
+def test_hierarchy_outages_drop_subtree_fetches_with_refunds(plan_kw):
+    """Under a fully-dark outage schedule every fetch through a region is
+    dropped and — when paid — refunded exactly: requesters end where they
+    started and the ledger conserves."""
+    import numpy as np
+
+    from repro.core.discovery import ModelQuery
+    from repro.core.incentives import IncentiveLedger
+    from repro.core.vault import ModelCard
+    from repro.runtime.faults import FaultPlan
+    from repro.runtime.topology import build_hierarchical_continuum
+
+    ledger = IncentiveLedger()
+    cont = build_hierarchical_continuum(3, 2, ledger=ledger)
+    ids = [f"p{i:03d}" for i in range(8)]
+    params = {"w": np.arange(4, dtype=np.float32)}
+    for i, pid in enumerate(ids):
+        cont.publish(pid, params, ModelCard(
+            model_id=f"{pid}/toy", task="outage", arch="toy", owner=pid,
+            num_params=4, metrics={"accuracy": 0.5 + i / 20,
+                                   "per_class": {}}))
+    # all regions go permanently dark after the publishes landed
+    cont.faults = FaultPlan(
+        seed=plan_kw["seed"], region_outage_prob=1.0,
+        region_slot_len_s=plan_kw["region_slot_len_s"])
+    before = {pid: ledger.balance(pid) for pid in ids}
+    reasons = []
+    for pid in ids:
+        cont.discover_and_fetch_async(
+            ModelQuery(task="outage", min_accuracy=0.6,
+                       exclude_owners=(pid,)),
+            lambda h, t: (_ for _ in ()).throw(
+                AssertionError("delivered through a dark region")),
+            requester=pid, on_fail=lambda r, t: reasons.append(r))
+    cont.loop.run_to_quiescence()
+    assert reasons == ["outage"] * len(ids)
+    assert cont.fault_stats.refunds == len(ids)
+    for pid in ids:
+        assert ledger.balance(pid) == pytest.approx(before[pid])
+    ledger.assert_conserved()
+
+
+@given(plan_kw=_hier_plans)
+@settings(max_examples=10, deadline=None)
+def test_hierarchy_event_loop_deterministic_under_random_fault_plans(plan_kw):
+    """Same seed + same plan => byte-identical hierarchical event trace."""
+    from repro.runtime.faults import FaultPlan
+    from repro.runtime.trace import run_scenario
+
+    plan = FaultPlan(**plan_kw)
+    a = run_scenario("hierarchy_microworld", plan, parties=8, cycles=1)
+    b = run_scenario("hierarchy_microworld", plan, parties=8, cycles=1)
+    assert a == b
+
+
+_region_ops = st.sampled_from([None, "region:rg000", "region:rg001"])
+
+
+@given(
+    ops=_ledger_ops,
+    refund_mask=st.lists(st.booleans(), min_size=40, max_size=40),
+    regions=st.lists(_region_ops, min_size=40, max_size=40),
+)
+@settings(**SETTINGS)
+def test_ledger_conservation_with_region_fee_splits(ops, refund_mask, regions):
+    """sum(balances) == minted with cache-hit fee splits in the mix, and
+    refunds reversing exactly the split their payment used."""
+    from repro.core.incentives import IncentiveLedger
+
+    led = IncentiveLedger()
+    led.add_operator("region:rg000")
+    led.add_operator("region:rg001")
+    outstanding = []  # (requester, publisher, region_operator)
+    for i, (op, x, y) in enumerate(ops):
+        if op == "publish":
+            led.on_publish(x, y)
+        elif op == "fetch" and x != y:
+            if led.can_fetch(x):
+                region = regions[i % len(regions)]
+                led.on_fetch(x, y, region_operator=region)
+                if refund_mask[i % len(refund_mask)]:
+                    outstanding.append((x, y, region))
+            else:
+                led.on_denied(x)
+        elif op == "fraud":
+            led.on_fraud(x)
+        elif op == "touch":
+            led.balance(x)
+        led.assert_conserved()
+    for requester, publisher, region in outstanding:
+        led.on_refund(requester, publisher, region_operator=region)
+        led.assert_conserved()
+    # operator accounts never minted anything
+    for opname in led.operators:
+        assert led.accounts[opname].mint_earned == 0.0
+
+
 # -- optimizer: adamw decreases a convex quadratic -----------------------------
 
 

@@ -1,0 +1,469 @@
+"""Tests for the hierarchical edge→region→cloud topology tier."""
+import numpy as np
+import pytest
+
+from repro.core.discovery import ModelQuery
+from repro.core.incentives import IncentiveLedger
+from repro.core.vault import ModelCard
+from repro.runtime.faults import FaultPlan
+from repro.runtime.topology import (RegionalTopology,
+                                    build_hierarchical_continuum)
+
+TASK = "topo"
+
+
+def _params(i=0):
+    return {"w": np.arange(6, dtype=np.float32) + float(i)}
+
+
+def _card(pid, acc):
+    return ModelCard(model_id=f"{pid}/toy", task=TASK, arch="toy",
+                     owner=pid, num_params=6,
+                     metrics={"accuracy": acc, "per_class": {}})
+
+
+def _continuum(regions=3, edges=2, ledger=None, faults=None, verifier=None):
+    return build_hierarchical_continuum(
+        regions, edges, ledger=ledger, faults=faults, verifier=verifier)
+
+
+def _ids_by_region(topo: RegionalTopology, per_region=2, prefix="p"):
+    """Deterministically pick `per_region` party ids for every region."""
+    got = {rid: [] for rid in topo.regions}
+    i = 0
+    while any(len(v) < per_region for v in got.values()):
+        pid = f"{prefix}{i:04d}"
+        rid = topo.region_of(pid).region_id
+        if len(got[rid]) < per_region:
+            got[rid].append(pid)
+        i += 1
+    return got
+
+
+# -- placement ----------------------------------------------------------------
+
+
+def test_region_assignment_stable_and_total():
+    topo = RegionalTopology(5)
+    ids = [f"p{i}" for i in range(200)]
+    first = {pid: topo.region_of(pid).region_id for pid in ids}
+    again = {pid: topo.region_of(pid).region_id for pid in ids}
+    assert first == again
+    assert set(first.values()) == set(topo.regions)  # every region populated
+
+
+def test_edge_for_stays_inside_home_region():
+    cont = _continuum(regions=4, edges=3)
+    topo = cont.topology
+    for i in range(100):
+        pid = f"p{i}"
+        region = topo.region_of(pid)
+        assert topo.edge_for(pid) in region.edge_ids
+        assert cont.nearest_edge(pid).server_id in region.edge_ids
+
+
+def test_parties_spread_over_all_edges_within_a_region():
+    # gcd(regions, edges_per_region) > 1: without salting the edge bucket,
+    # hash(party) ≡ region (mod regions) pins every party in a region onto
+    # one edge and the rest sit idle
+    cont = _continuum(regions=8, edges=2)
+    topo = cont.topology
+    used = {topo.edge_for(f"p{i:04d}") for i in range(2000)}
+    assert len(used) == 16  # every edge of every region serves someone
+
+
+def test_topology_must_attach_before_edges():
+    from repro.core.continuum import Continuum
+
+    cont = Continuum()
+    cont.add_edge_server("e0")
+    with pytest.raises(ValueError):
+        cont.attach_topology(RegionalTopology(2))
+
+
+def test_attach_topology_rebinds_region_clocks():
+    from repro.core.continuum import Continuum
+
+    # manual assembly without passing a clock: attach must rebind the
+    # shards/caches to the continuum's clock or shard freshness ranking
+    # would score advancing created_at stamps against a clock frozen at 0
+    cont = Continuum()
+    topo = RegionalTopology(2)
+    cont.attach_topology(topo)
+    for region in topo.regions.values():
+        assert region.shard._clock is cont.clock
+        assert region.cache._clock is cont.clock
+    assert topo.clock is cont.clock
+    cont.add_edge_server("e0", region="rg000")
+    cont.add_edge_server("e1", region="rg001")
+    cont.publish("alice", _params(), _card("alice", 0.8))
+    assert len(topo.region_of("alice").shard) == 1
+    with pytest.raises(ValueError):
+        topo.rebind_clock(cont.clock)  # too late once cards are indexed
+
+
+def test_hierarchical_edges_require_region():
+    from repro.core.continuum import Continuum
+
+    cont = Continuum()
+    cont.attach_topology(RegionalTopology(2, clock=cont.clock))
+    with pytest.raises(ValueError):
+        cont.add_edge_server("e0")  # no region given
+
+
+# -- publish: card hops region shard then cloud -------------------------------
+
+
+def test_publish_registers_in_region_shard_and_cloud():
+    cont = _continuum()
+    topo = cont.topology
+    pid = "alice"
+    home = topo.region_of(pid)
+    cont.publish(pid, _params(), _card(pid, 0.8))
+    assert len(cont.discovery) == 1
+    assert len(home.shard) == 1
+    for rid, region in topo.regions.items():
+        if rid != home.region_id:
+            assert len(region.shard) == 0
+
+
+def test_region_shard_discoverable_before_cloud():
+    cont = _continuum()
+    pid = "alice"
+    home = cont.topology.region_of(pid)
+    cont.publish_async(pid, _params(), _card(pid, 0.8))
+    # step until the card hits the region shard; cloud must still be empty
+    while len(home.shard) == 0:
+        assert cont.loop.step(), "ran out of events before shard register"
+    assert len(cont.discovery) == 0
+    cont.loop.run_to_quiescence()
+    assert len(cont.discovery) == 1
+
+
+# -- fetch: local hit vs cloud escalation + caching ---------------------------
+
+
+def test_local_hit_and_escalation_paths():
+    ledger = IncentiveLedger()
+    cont = _continuum(ledger=ledger)
+    topo = cont.topology
+    ids = _ids_by_region(topo, per_region=2)
+    regions = sorted(ids)
+    publisher = ids[regions[0]][0]
+    neighbour = ids[regions[0]][1]
+    remote1, remote2 = ids[regions[1]][:2]
+    cont.publish(publisher, _params(), _card(publisher, 0.9))
+
+    q = ModelQuery(task=TASK, min_accuracy=0.8)
+    hit = cont.discover_and_fetch(q, requester=neighbour)
+    assert hit is not None and hit[2].local
+    assert hit[2].region_id == regions[0]
+
+    hit = cont.discover_and_fetch(q, requester=remote1)
+    assert hit is not None and not hit[2].local
+    # the escalated blob is now cached in the remote region
+    remote_region = topo.regions[regions[1]]
+    assert remote_region.stats.cache_inserts == 1
+    hit = cont.discover_and_fetch(q, requester=remote2)
+    assert hit is not None and hit[2].local
+    assert hit[2].vault_id == remote_region.cache.vault_id
+    # the cached copy preserves the publisher's identity and blob
+    assert hit[1].owner == publisher
+    np.testing.assert_array_equal(hit[0]["w"], _params()["w"])
+
+    totals = topo.totals()
+    assert totals.local_hits == 2 and totals.escalations == 1
+    assert topo.hit_rate() == pytest.approx(2 / 3)
+    ledger.assert_conserved()
+
+
+def test_local_hit_cheaper_and_no_backbone_egress():
+    cont_a = _continuum()
+    topo = cont_a.topology
+    ids = _ids_by_region(topo, per_region=2)
+    regions = sorted(ids)
+    publisher, neighbour = ids[regions[0]][:2]
+    remote = ids[regions[1]][0]
+
+    cont_a.publish(publisher, _params(), _card(publisher, 0.9))
+    egress_after_pub = cont_a.traffic.cloud_egress_bytes
+    t0 = cont_a.traffic.total_time_s
+    q = ModelQuery(task=TASK, min_accuracy=0.8)
+    assert cont_a.discover_and_fetch(q, requester=neighbour)[2].local
+    local_time = cont_a.traffic.total_time_s - t0
+    # a local hit moves no blob bytes over the backbone
+    assert cont_a.traffic.cloud_egress_bytes == egress_after_pub
+
+    t0 = cont_a.traffic.total_time_s
+    assert not cont_a.discover_and_fetch(q, requester=remote)[2].local
+    escalated_time = cont_a.traffic.total_time_s - t0
+    assert cont_a.traffic.cloud_egress_bytes > egress_after_pub
+    assert escalated_time > local_time
+
+
+def test_anonymous_fetch_resolves_at_cloud_without_region_state():
+    cont = _continuum()
+    topo = cont.topology
+    pid = "alice"
+    cont.publish(pid, _params(), _card(pid, 0.9))
+    queries_before = {r.region_id: r.stats.queries
+                     for r in topo.regions.values()}
+    hit = cont.discover_and_fetch(ModelQuery(task=TASK, min_accuracy=0.8))
+    assert hit is not None
+    # no requester => no home region: plain cloud resolution, no RegionalHit
+    assert not hasattr(hit[2], "local")
+    for r in topo.regions.values():
+        assert r.stats.queries == queries_before[r.region_id]
+        assert r.stats.cache_inserts == 0
+
+
+def test_cloud_miss_counts_as_miss_not_escalation():
+    cont = _continuum()
+    pid = "alice"
+    cont.publish(pid, _params(), _card(pid, 0.6))
+    # nothing anywhere satisfies 0.9: neither a local hit nor an escalation
+    assert cont.discover_and_fetch(
+        ModelQuery(task=TASK, min_accuracy=0.9), requester="bob") is None
+    totals = cont.topology.totals()
+    assert totals.local_hits == 0 and totals.escalations == 0
+    assert totals.cloud_misses == 1
+    assert cont.topology.hit_rate() == 0.0  # no resolutions at all
+
+
+def test_build_with_total_edges_distributes_exactly():
+    cont = build_hierarchical_continuum(3, total_edges=8)
+    counts = sorted(len(r.edge_ids) for r in cont.topology.regions.values())
+    assert sum(counts) == 8 and counts == [2, 3, 3]
+    with pytest.raises(ValueError):
+        build_hierarchical_continuum(3, total_edges=2)  # a region edgeless
+    with pytest.raises(ValueError):
+        build_hierarchical_continuum(3)  # neither sizing argument
+    with pytest.raises(ValueError):
+        build_hierarchical_continuum(3, 2, total_edges=8)  # both
+
+
+def test_fetched_params_are_private_copies():
+    cont = _continuum()
+    topo = cont.topology
+    ids = _ids_by_region(topo, per_region=2)
+    regions = sorted(ids)
+    publisher, neighbour1 = ids[regions[0]][:2]
+    cont.publish(publisher, _params(), _card(publisher, 0.9))
+    q = ModelQuery(task=TASK, min_accuracy=0.8)
+    first = cont.discover_and_fetch(q, requester=neighbour1)
+    first[0]["w"][:] = -1.0  # requester fine-tunes its download in place
+    second = cont.discover_and_fetch(q, requester=neighbour1)
+    np.testing.assert_array_equal(second[0]["w"], _params()["w"])
+
+
+# -- fee split ----------------------------------------------------------------
+
+
+def test_cache_hit_fee_split_and_conservation():
+    ledger = IncentiveLedger()  # fee 0.4 = 20% of 2.0; split 50/50
+    cont = _continuum(ledger=ledger)
+    topo = cont.topology
+    ids = _ids_by_region(topo, per_region=2)
+    regions = sorted(ids)
+    publisher, neighbour = ids[regions[0]][:2]
+    remote = ids[regions[1]][0]
+    cont.publish(publisher, _params(), _card(publisher, 0.9))
+
+    q = ModelQuery(task=TASK, min_accuracy=0.8)
+    assert cont.discover_and_fetch(q, requester=neighbour)[2].local
+    fee = ledger.fetch_cost * ledger.service_fee
+    home_op = topo.regions[regions[0]].operator
+    assert ledger.balance(home_op) == pytest.approx(
+        fee * ledger.region_fee_share)
+    assert ledger.balance(ledger.operator) == pytest.approx(
+        fee - fee * ledger.region_fee_share)
+
+    # escalated fetch: full fee to the cloud operator
+    cloud_before = ledger.balance(ledger.operator)
+    assert not cont.discover_and_fetch(q, requester=remote)[2].local
+    assert ledger.balance(ledger.operator) == pytest.approx(
+        cloud_before + fee)
+    assert ledger.balance(topo.regions[regions[1]].operator) == 0.0
+    ledger.assert_conserved()
+
+
+def test_operator_accounts_never_stipended():
+    ledger = IncentiveLedger()
+    _continuum(ledger=ledger)
+    for op in ledger.operators:
+        assert ledger.balance(op) == 0.0
+    ledger.assert_conserved()
+    ledger.balance("imposter")  # opens a party account with a stipend...
+    with pytest.raises(ValueError):
+        ledger.add_operator("imposter")  # ...so it cannot become an operator
+
+
+# -- regional outages ---------------------------------------------------------
+
+
+def _always_dark_plan():
+    return FaultPlan(seed=0, region_outage_prob=1.0)
+
+
+def test_regional_outage_drops_publishes():
+    cont = _continuum(faults=_always_dark_plan())
+    failed = []
+    cont.publish_async("alice", _params(), _card("alice", 0.8),
+                       on_fail=lambda now: failed.append(now))
+    cont.loop.run_to_quiescence()
+    assert failed and len(cont.discovery) == 0
+    assert cont.fault_stats.regional_outage_drops == 1
+
+
+def test_regional_outage_drops_paid_fetches_and_refunds():
+    ledger = IncentiveLedger()
+    # publish while healthy, then the world goes dark for fetches
+    plan = FaultPlan(seed=1, region_outage_prob=1.0, region_slot_len_s=50.0)
+    cont = _continuum(ledger=ledger)  # publish on a clean continuum
+    topo = cont.topology
+    ids = _ids_by_region(topo, per_region=2)
+    regions = sorted(ids)
+    publisher, neighbour = ids[regions[0]][:2]
+    cont.publish(publisher, _params(), _card(publisher, 0.9))
+    cont.faults = plan  # outage begins after the publish landed
+
+    bal_before = ledger.balance(neighbour)
+    reasons = []
+    cont.discover_and_fetch_async(
+        ModelQuery(task=TASK, min_accuracy=0.8), lambda h, t: None,
+        requester=neighbour, on_fail=lambda r, t: reasons.append(r))
+    cont.loop.run_to_quiescence()
+    assert reasons == ["outage"]
+    assert cont.fault_stats.regional_outage_drops == 1
+    assert cont.fault_stats.refunds == 1
+    # refund made the requester whole; conservation holds
+    assert ledger.balance(neighbour) == pytest.approx(bal_before)
+    ledger.assert_conserved()
+
+
+def test_outage_gates_mdd_party_actor_availability():
+    from repro.core.learner import LearningParty
+    from repro.runtime.actors import MDDPartyActor
+
+    class _Data:
+        x_train = np.zeros((4, 2), np.float32)
+        y_train = np.zeros(4, np.int32)
+
+    class _Model:
+        name = "toy"
+        num_classes = 2
+
+        def init(self, key):
+            return {"w": np.zeros(2, np.float32)}
+
+        def apply(self, params, x):
+            return np.zeros((x.shape[0], 2), np.float32)
+
+    plan = FaultPlan(seed=0, region_outage_prob=1.0)
+    cont = _continuum(faults=plan)
+    pytest.importorskip("jax")
+    party = LearningParty("alice", _Model(), _Data(), task=TASK,
+                          continuum=cont)
+    actor = MDDPartyActor(party, np.zeros((2, 2), np.float32),
+                          np.zeros(2, np.int32), cycles=1, faults=plan)
+    # region inferred from the hierarchical continuum; fully dark => the
+    # actor only ever observes "offline" slots
+    assert actor.region == cont.topology.region_of("alice").region_id
+    assert actor._available(0.0) is False
+
+
+# -- fraud containment across shards ------------------------------------------
+
+
+def test_fraud_deregisters_from_region_shards_and_caches():
+    truth = {}
+
+    def verifier(params, card):
+        return truth.get((card.model_id, card.version))
+
+    plan = FaultPlan(seed=0, byzantine_frac=0.0, verify_tolerance=0.1)
+    ledger = IncentiveLedger()
+    cont = _continuum(ledger=ledger, faults=plan, verifier=verifier)
+    topo = cont.topology
+    ids = _ids_by_region(topo, per_region=2)
+    regions = sorted(ids)
+    publisher = ids[regions[0]][0]
+    remote1, remote2 = ids[regions[1]][:2]
+
+    # publisher lies: claimed 0.9, true 0.3
+    final = cont.publish(publisher, _params(), _card(publisher, 0.9))
+    truth[(final.model_id, final.version)] = 0.3
+
+    # escalated fetch caches the blob remotely, then a local fetch of the
+    # cached copy catches the fraud and purges every shard + the cloud
+    q = ModelQuery(task=TASK, min_accuracy=0.8)
+    assert cont.discover_and_fetch(q, requester=remote1) is None  # fraud
+    assert cont.fault_stats.frauds_detected == 1
+    assert len(cont.discovery) == 0
+    for region in topo.regions.values():
+        assert region.shard.query(q, top_k=3) == []
+    assert cont.discover_and_fetch(q, requester=remote2) is None  # gone
+    assert publisher in ledger.flagged
+    ledger.assert_conserved()
+
+
+# -- exchange + golden trace --------------------------------------------------
+
+
+def test_run_exchange_on_hierarchical_continuum():
+    jax = pytest.importorskip("jax")  # noqa: F841
+    from repro.models.small import make_lr
+    from repro.runtime.exchange import ExchangeConfig, run_exchange
+    from repro.runtime.population import PartyPopulation
+
+    rng = np.random.default_rng(0)
+    n, n_per, n_feat, n_classes = 24, 16, 8, 4
+    w = rng.normal(size=(n_feat, n_classes)).astype(np.float32)
+    x = rng.normal(size=(n, n_per, n_feat)).astype(np.float32)
+    y = (x @ w).argmax(-1).astype(np.int32)
+    ex = rng.normal(size=(32, n_feat)).astype(np.float32)
+    ey = (ex @ w).argmax(-1).astype(np.int32)
+    pop = PartyPopulation(make_lr(num_features=n_feat, num_classes=n_classes),
+                          x, y, task="hier_x", lr=0.1, batch_size=8, seed=0)
+
+    report = run_exchange([pop], ex, ey,
+                          cfg=ExchangeConfig(cycles=2, distill_epochs=1),
+                          ledger=IncentiveLedger(), edges=8, regions=4)
+    assert report.topology["regions"] == 4
+    assert report.topology["local_hits"] + report.topology["escalations"] > 0
+    assert 0.0 <= report.topology["hit_rate"] <= 1.0
+    # CycleStats locality counters agree with delivered fetches
+    assert sum(c.local_hits + c.escalated for c in report.cycles) == \
+        report.total_fetches
+    assert report.total_local_hits == sum(c.local_hits for c in report.cycles)
+
+
+def test_hierarchy_microworld_deterministic_and_faithful():
+    from repro.runtime.trace import run_scenario
+
+    plan = FaultPlan(seed=5, churn=0.1, drop_prob=0.05,
+                     region_outage_prob=0.3, region_slot_len_s=60.0)
+    a = run_scenario("hierarchy_microworld", plan, parties=12, cycles=2)
+    b = run_scenario("hierarchy_microworld", plan, parties=12, cycles=2)
+    assert a == b and a
+
+
+def test_hierarchy_golden_trace_replays_byte_identical():
+    from pathlib import Path
+
+    from repro.runtime.trace import TraceRecording, assert_replay
+
+    fixture = Path(__file__).parent / "golden" / "hierarchy_microworld.json"
+    assert_replay(TraceRecording.load(fixture))
+
+
+def test_hierarchy_demo_imports_and_runs():
+    import importlib
+    import sys
+    from pathlib import Path
+
+    repo_root = str(Path(__file__).resolve().parent.parent)
+    if repo_root not in sys.path:  # CI runs with PYTHONPATH=src only
+        sys.path.insert(0, repo_root)
+    demo = importlib.import_module("examples.hierarchy_demo")
+    demo.main()  # the demo asserts its own local/escalated/cached story
