@@ -10,6 +10,11 @@ regression on the CI smoke scale); ``min`` entries fail when the measured
 value drops below the reference (catching e.g. the exchange loop silently
 losing its cross-architecture distillations).  Missing keys fail too — a
 benchmark that stops reporting a number is a regression, not a pass.
+
+``optional_max``/``optional_min`` entries gate benchmarks that only run
+on demand (e.g. the 1M-party ``population_scale.py --million`` leg):
+when the key is present it is checked exactly like ``max``/``min``, and
+when absent it is reported as skipped rather than failed.
 """
 from __future__ import annotations
 
@@ -38,24 +43,33 @@ def main(argv=None):
 
     factor = float(spec.get("regression_factor", 2.0))
     failures = []
-    for key, limit in sorted(spec.get("max", {}).items()):
-        got = lookup(results, key)
-        if got is None:
-            failures.append(f"{key}: missing from results")
-        elif float(got) > factor * float(limit):
-            failures.append(
-                f"{key}: {got:.3f} > {factor:g}x threshold {limit:.3f}"
-            )
-        else:
-            print(f"ok  {key}: {float(got):.3f} <= {factor:g}x {limit:.3f}")
-    for key, floor in sorted(spec.get("min", {}).items()):
-        got = lookup(results, key)
-        if got is None:
-            failures.append(f"{key}: missing from results")
-        elif float(got) < float(floor):
-            failures.append(f"{key}: {got:.3f} < floor {floor:.3f}")
-        else:
-            print(f"ok  {key}: {float(got):.3f} >= {floor:.3f}")
+    for group, optional in (("max", False), ("optional_max", True)):
+        for key, limit in sorted(spec.get(group, {}).items()):
+            got = lookup(results, key)
+            if got is None:
+                if optional:
+                    print(f"skip {key}: not in results (optional)")
+                else:
+                    failures.append(f"{key}: missing from results")
+            elif float(got) > factor * float(limit):
+                failures.append(
+                    f"{key}: {got:.3f} > {factor:g}x threshold {limit:.3f}"
+                )
+            else:
+                print(f"ok  {key}: {float(got):.3f} <= {factor:g}x "
+                      f"{limit:.3f}")
+    for group, optional in (("min", False), ("optional_min", True)):
+        for key, floor in sorted(spec.get(group, {}).items()):
+            got = lookup(results, key)
+            if got is None:
+                if optional:
+                    print(f"skip {key}: not in results (optional)")
+                else:
+                    failures.append(f"{key}: missing from results")
+            elif float(got) < float(floor):
+                failures.append(f"{key}: {got:.3f} < floor {floor:.3f}")
+            else:
+                print(f"ok  {key}: {float(got):.3f} >= {floor:.3f}")
 
     if failures:
         for msg in failures:

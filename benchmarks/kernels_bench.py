@@ -1,22 +1,37 @@
 """Kernel microbenches: pure-jnp reference timings on CPU + interpret-mode
-validation of the Pallas kernels.
+validation of the Pallas kernels, with an analytic roofline per kernel.
 
 On this CPU container the Pallas kernels run in interpret mode (Python
 executes the kernel body), so wall-times are NOT indicative of TPU perf;
 the CSV reports the jnp-reference timing as the comparable number and the
-max|err| of the kernel against it as the derived column.
+max|err| of the kernel against it as the derived column.  The
+``roofline/<kernel>`` rows model each kernel on the production TPU target
+(:data:`repro.launch.mesh.TARGET`) from analytic FLOP and HBM-byte
+counts: arithmetic intensity vs the ridge point decides whether the
+fused kernel is compute- or memory-bound, and the predicted time is
+``max(flops/peak, bytes/bw)`` — the measured numbers kernel speedup
+claims are quoted against (see docs/BENCHMARKS.md).
+
+``--json`` merges a ``kernels`` section (per-kernel max|err|, reference
+wall, and roofline model) into the shared results file.
 """
 from __future__ import annotations
 
+import argparse
 import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
+
+try:
+    from benchmarks.bench_json import merge_json_section
+except ImportError:  # run as a script: benchmarks/ itself is on sys.path
+    from bench_json import merge_json_section
 
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.kd_loss import kd_loss
 from repro.kernels.ref import flash_attention_ref, kd_loss_ref, ssd_scan_ref
+from repro.launch.mesh import TARGET
 from repro.models.ssm import ssd_chunked
 
 
@@ -29,9 +44,28 @@ def _time(fn, *args, reps=5):
     return (time.perf_counter() - t0) / reps * 1e6  # us
 
 
+def _roofline(name, flops, bytes_):
+    """Model ``flops``/``bytes_`` on the TPU target; returns (row, payload).
+
+    Intensity above the ridge point (peak/bw) means the fused kernel is
+    compute-bound there; the predicted wall is the max of the two terms.
+    """
+    peak, bw = TARGET["peak_flops_bf16"], TARGET["hbm_bytes_per_s"]
+    ridge = peak / bw
+    intensity = flops / bytes_
+    bound = "compute" if intensity >= ridge else "memory"
+    tpu_us = max(flops / peak, bytes_ / bw) * 1e6
+    row = (f"roofline/{name}", tpu_us,
+           f"flops={flops:.2e};bytes={bytes_:.2e};"
+           f"intensity={intensity:.0f};ridge={ridge:.0f};bound={bound}")
+    payload = {"flops": flops, "bytes": bytes_, "intensity": intensity,
+               "bound": bound, "tpu_us_predicted": tpu_us}
+    return row, payload
+
+
 def bench_flash_attention():
     key = jax.random.PRNGKey(0)
-    rows = []
+    rows, sections = [], {}
     for (B, H, KV, S, hd) in [(1, 8, 2, 512, 64), (2, 4, 4, 1024, 64)]:
         q = jax.random.normal(key, (B, H, S, hd), jnp.float32)
         k = jax.random.normal(key, (B, KV, S, hd), jnp.float32)
@@ -40,13 +74,21 @@ def bench_flash_attention():
         us = _time(ref, q, k, v)
         out = flash_attention(q, k, v, causal=True, interpret=True)
         err = float(jnp.max(jnp.abs(out - ref(q, k, v))))
-        rows.append((f"flash_attn/B{B}H{H}KV{KV}S{S}", us, f"maxerr={err:.1e}"))
-    return rows
+        name = f"flash_attn/B{B}H{H}KV{KV}S{S}"
+        rows.append((name, us, f"maxerr={err:.1e}"))
+        # QK^T + PV, halved by causal masking; the fused kernel streams
+        # Q,K,V once and writes O once (no S x S score materialization)
+        flops = 2.0 * B * H * S * S * hd
+        bytes_ = 2.0 * (2 * B * H * S * hd + 2 * B * KV * S * hd)  # bf16
+        roof_row, payload = _roofline(name, flops, bytes_)
+        rows.append(roof_row)
+        sections[name] = {"ref_us": us, "maxerr": err, "roofline": payload}
+    return rows, sections
 
 
 def bench_kd_loss():
     key = jax.random.PRNGKey(1)
-    rows = []
+    rows, sections = [], {}
     for (N, V) in [(256, 8192), (512, 32000)]:
         s = jax.random.normal(key, (N, V), jnp.float32)
         t = jax.random.normal(jax.random.PRNGKey(2), (N, V), jnp.float32)
@@ -55,13 +97,21 @@ def bench_kd_loss():
         us = _time(ref, s, t, lab)
         out = kd_loss(s, t, lab, block_n=128, block_v=2048, interpret=True)
         err = float(jnp.max(jnp.abs(out - ref(s, t, lab))))
-        rows.append((f"kd_loss/N{N}V{V}", us, f"maxerr={err:.1e}"))
-    return rows
+        name = f"kd_loss/N{N}V{V}"
+        rows.append((name, us, f"maxerr={err:.1e}"))
+        # two softmaxes + KL + CE over (N, V) logits, ~8 flops/element;
+        # the fused kernel reads each logit block once, no (N, V) temps
+        flops = 8.0 * N * V
+        bytes_ = 2.0 * 2 * N * V  # bf16 student + teacher logits
+        roof_row, payload = _roofline(name, flops, bytes_)
+        rows.append(roof_row)
+        sections[name] = {"ref_us": us, "maxerr": err, "roofline": payload}
+    return rows, sections
 
 
 def bench_ssd():
     key = jax.random.PRNGKey(3)
-    rows = []
+    rows, sections = [], {}
     for (B, S, H, P, N) in [(1, 512, 4, 32, 16)]:
         ks = jax.random.split(key, 5)
         x = jax.random.normal(ks[0], (B, S, H, P))
@@ -74,16 +124,39 @@ def bench_ssd():
         us_seq = _time(seq, x, dt, A, Bm, Cm)
         us_chk = _time(chk, x, dt, A, Bm, Cm)
         err = float(jnp.max(jnp.abs(seq(x, dt, A, Bm, Cm) - chk(x, dt, A, Bm, Cm))))
+        name = f"ssd_scan/S{S}"
         rows.append((f"ssd_seq/S{S}", us_seq, ""))
         rows.append((f"ssd_chunked/S{S}", us_chk,
                      f"speedup={us_seq/us_chk:.1f}x;maxerr={err:.1e}"))
-    return rows
+        # per step: state decay + B outer-product accumulate + C
+        # contraction over the (H, P, N) state, ~6 flops/state element
+        flops = 6.0 * B * S * H * P * N
+        bytes_ = 2.0 * B * S * (2 * H * P + 2 * N + H)  # bf16 in/out streams
+        roof_row, payload = _roofline(name, flops, bytes_)
+        rows.append(roof_row)
+        sections[name] = {"ref_seq_us": us_seq, "ref_chunked_us": us_chk,
+                          "chunked_speedup": us_seq / us_chk, "maxerr": err,
+                          "roofline": payload}
+    return rows, sections
 
 
-def main():
-    rows = bench_flash_attention() + bench_kd_loss() + bench_ssd()
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", type=str, default=None,
+                    help="merge per-kernel numbers into this JSON file")
+    args = ap.parse_args(argv)
+
+    rows, sections = [], {}
+    for fn in (bench_flash_attention, bench_kd_loss, bench_ssd):
+        r, s = fn()
+        rows.extend(r)
+        sections.update(s)
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
+
+    if args.json:
+        sections["worst_maxerr"] = max(v["maxerr"] for v in sections.values())
+        merge_json_section(args.json, "kernels", sections)
     return rows
 
 

@@ -1,0 +1,270 @@
+"""Population-cycle scale benchmark: scan-fused vs per-step dispatch, to 1M.
+
+Measures the tentpole of ISSUE 6 — one MDD cohort cycle as ONE XLA
+dispatch chain (:class:`repro.runtime.population.PartyPopulation` with
+``fused=True``, party axis sharded over
+:func:`repro.launch.mesh.make_party_mesh`) — against the PR-5 per-step
+dispatch baseline: one jitted call per minibatch, each fed by a host-side
+random-permutation gather, exactly as ``train_epochs``/``distill_from``/
+``evaluate`` were written before the scan-fused refactor
+(:class:`_PerStepBaseline` below is a line-for-line replica driving the
+same ``_vstep``/``_vdistill``/``_vapply`` callables).  A "cycle" is the
+exchange actor's compute shape: local SGD epochs + a whole-cohort
+evaluation + the publish export of every party's params to host + a
+shared-teacher KD integration.
+
+Two legs:
+
+  * speedup leg (default): both paths at ``--parties`` (10k default),
+    identical model/data, one warm-up cycle each (compile), then
+    ``--cycles`` timed cycles.  Reports per-cycle wall for both and the
+    speedup — the acceptance gate is >= 2x locally, thresholded at
+    ``population_scale.speedup`` in ``ci_thresholds.json`` (a lenient
+    floor, runner wall-clock is noisy).
+  * 1M leg (``--million``): the sharded scan-fused path only, 1M parties
+    x ``--cycles`` cycles with a smaller per-party shard, gated by
+    ``population_scale_1m.per_cycle_wall_s``.
+
+Prints ``name,us_per_call,derived`` rows; ``--json`` merges the headline
+numbers into a results file for ``benchmarks/check_thresholds.py`` and
+``scripts/append_bench.py``.
+
+  PYTHONPATH=src python benchmarks/population_scale.py [--million]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+try:
+    from benchmarks.bench_json import merge_json_section
+except ImportError:  # run as a script: benchmarks/ itself is on sys.path
+    from bench_json import merge_json_section
+
+from repro.launch.mesh import make_party_mesh
+from repro.models.small import make_lr
+from repro.runtime.population import PartyPopulation
+
+
+def _party_data(n_parties, n_per_party, n_feat, n_classes, n_eval, seed):
+    """Shared linear concept + per-party label noise (exchange workload)."""
+    rng = np.random.default_rng(seed)
+    w_true = rng.normal(size=(n_feat, n_classes)).astype(np.float32)
+    x = rng.normal(size=(n_parties, n_per_party, n_feat)).astype(np.float32)
+    y_clean = (x @ w_true).argmax(-1)
+    noise = rng.uniform(0.0, 0.6, size=n_parties)
+    flip = rng.random((n_parties, n_per_party)) < noise[:, None]
+    y = np.where(flip, rng.integers(0, n_classes, y_clean.shape), y_clean)
+    ex = rng.normal(size=(n_eval, n_feat)).astype(np.float32)
+    ey = (ex @ w_true).argmax(-1)
+    return x, y.astype(np.int32), ex, ey.astype(np.int32)
+
+
+class _PerStepBaseline:
+    """The PR-5 dispatch loop, verbatim, over a population's callables.
+
+    One jitted ``_vstep``/``_vdistill`` call per minibatch, each batch
+    assembled on the host by a fresh per-epoch random-permutation gather
+    (``rng.permuted`` + fancy indexing), evaluation pulling the full
+    logit tensor to the host, and the publish export slicing each
+    party's params out of the device stack one at a time — the exact
+    pre-refactor hot path this benchmark measures the scan-fused cycle
+    (and its one-transfer ``all_party_params`` export) against.
+    """
+
+    def __init__(self, pop: PartyPopulation, seed: int):
+        self.pop = pop
+        self.rng = np.random.default_rng(seed)
+
+    def _epoch_batches(self):
+        pop = self.pop
+        n, B = pop.y.shape[1], pop.batch_size
+        rows = np.arange(pop.num_parties)
+        perm = self.rng.permuted(
+            np.broadcast_to(np.arange(n), (pop.num_parties, n)), axis=1
+        )
+        for s in range(0, n - B + 1, B):
+            cols = perm[:, s:s + B]
+            yield pop.x[rows[:, None], cols], pop.y[rows[:, None], cols]
+
+    def train_epochs(self, epochs):
+        pop = self.pop
+        params, opt = pop.params, pop._vinit(pop.params)
+        loss = None
+        for _ in range(epochs):
+            for bx, by in self._epoch_batches():
+                params, opt, loss = pop._vstep(params, opt, bx, by)
+        pop.params = params
+        return float(np.mean(loss))
+
+    def distill_from(self, teacher, epochs):
+        pop = self.pop
+        vstep = pop._vdistill(None, None, 0.5, 2.0)
+        params, opt = pop.params, pop._vinit(pop.params)
+        loss = None
+        for _ in range(epochs):
+            for bx, by in self._epoch_batches():
+                params, opt, loss = vstep(params, opt, bx, by, teacher)
+        pop.params = params
+        return float(np.mean(loss))
+
+    def evaluate(self, ex, ey):
+        import jax.numpy as jnp
+
+        pop = self.pop
+        logits = pop._vapply(pop.params, jnp.asarray(ex))
+        preds = np.asarray(jnp.argmax(logits, -1))
+        return (preds == np.asarray(ey)[None, :]).mean(axis=1)
+
+    def export(self):
+        pop = self.pop
+        return [pop.party_params(i) for i in range(pop.num_parties)]
+
+
+def _timed_cycles(train, evaluate, export, distill, teacher, ex, ey,
+                  cycles, epochs):
+    """Warm-up (compile) then per-cycle walls for ``cycles`` timed cycles."""
+
+    def cycle():
+        train(epochs)
+        evaluate(ex, ey)
+        export()
+        distill(teacher, epochs)
+
+    cycle()  # warm-up: compiles + first run
+    walls = []
+    for _ in range(cycles):
+        t0 = time.perf_counter()
+        cycle()
+        walls.append(time.perf_counter() - t0)
+    return walls
+
+
+def bench_speedup(n_parties=10000, cycles=3, epochs=2, seed=0):
+    """Scan-fused+sharded vs PR-5 per-step dispatch, same cohort cycle."""
+    n_per_party, n_feat, n_classes = 128, 32, 8
+    x, y, ex, ey = _party_data(n_parties, n_per_party, n_feat, n_classes,
+                               64, seed)
+    model = make_lr(num_features=n_feat, num_classes=n_classes)
+    wall0 = time.perf_counter()
+
+    fused = PartyPopulation(model, x, y, task="pop_bench", lr=0.1,
+                            batch_size=32, seed=seed, fused=True,
+                            mesh=make_party_mesh())
+    fused_walls = _timed_cycles(
+        fused.train_epochs, fused.evaluate, fused.all_party_params,
+        lambda t, e: fused.distill_from(t, epochs=e),
+        fused.party_params(0), ex, ey, cycles, epochs,
+    )
+
+    pop = PartyPopulation(model, x, y, task="pop_bench", lr=0.1,
+                          batch_size=32, seed=seed, fused=False)
+    base = _PerStepBaseline(pop, seed)
+    base_walls = _timed_cycles(
+        base.train_epochs, base.evaluate, base.export, base.distill_from,
+        pop.party_params(0), ex, ey, cycles, epochs,
+    )
+
+    f = float(np.mean(fused_walls))
+    e = float(np.mean(base_walls))
+    return {
+        "wall_s": time.perf_counter() - wall0,
+        "parties": n_parties,
+        "cycles": cycles,
+        "epochs": epochs,
+        "per_cycle_wall_s": f,
+        "baseline_per_cycle_wall_s": e,
+        "speedup": e / f,
+        "fused_cycle_walls_s": fused_walls,
+        "baseline_cycle_walls_s": base_walls,
+    }
+
+
+def bench_million(n_parties=1_000_000, cycles=3, seed=0):
+    """The sharded scan-fused compute path at 1M parties (ROADMAP item 1).
+
+    Train + evaluate + KD only — the publish export is a host-side
+    Python loop over parties, exercised (and gated) by the 10k leg.
+    """
+    n_per_party, n_feat, n_classes = 16, 8, 4
+    x, y, ex, ey = _party_data(n_parties, n_per_party, n_feat, n_classes,
+                               64, seed)
+    model = make_lr(num_features=n_feat, num_classes=n_classes)
+    wall0 = time.perf_counter()
+    pop = PartyPopulation(model, x, y, task="pop_bench_1m", lr=0.1,
+                          batch_size=16, seed=seed, fused=True,
+                          mesh=make_party_mesh())
+    walls = _timed_cycles(
+        pop.train_epochs, pop.evaluate, lambda: None,
+        lambda t, e: pop.distill_from(t, epochs=e),
+        pop.party_params(0), ex, ey, cycles, epochs=1,
+    )
+    return {
+        "wall_s": time.perf_counter() - wall0,
+        "parties": n_parties,
+        "cycles": cycles,
+        "per_cycle_wall_s": float(np.mean(walls)),
+        "cycle_walls_s": walls,
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--parties", type=int, default=10000)
+    ap.add_argument("--cycles", type=int, default=3)
+    ap.add_argument("--epochs", type=int, default=2)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--million", action="store_true",
+                    help="also run the 1M-party sharded scan-fused leg")
+    ap.add_argument("--million-parties", type=int, default=1_000_000)
+    ap.add_argument("--json", type=str, default=None,
+                    help="merge headline numbers into this JSON file")
+    args = ap.parse_args(argv)
+    if args.parties < 1 or args.cycles < 1 or args.epochs < 1:
+        ap.error("--parties, --cycles, and --epochs must all be >= 1")
+
+    res = bench_speedup(args.parties, args.cycles, args.epochs, args.seed)
+    print(f"population_scale/fused,{res['per_cycle_wall_s']*1e6:.0f},"
+          f"parties={res['parties']};cycles={res['cycles']};"
+          f"epochs={res['epochs']};per_cycle_s={res['per_cycle_wall_s']:.3f}",
+          flush=True)
+    print(f"population_scale/per_step_baseline,"
+          f"{res['baseline_per_cycle_wall_s']*1e6:.0f},"
+          f"per_cycle_s={res['baseline_per_cycle_wall_s']:.3f}", flush=True)
+    print(f"population_scale/speedup,0,x{res['speedup']:.2f}", flush=True)
+    verdict = ">=2x verified" if res["speedup"] >= 2.0 else "BELOW 2x"
+    print(f"# scan-fused vs per-step dispatch at {res['parties']} parties: "
+          f"{res['speedup']:.2f}x ({verdict})")
+
+    if args.json:
+        merge_json_section(args.json, "population_scale", {
+            "wall_s": res["wall_s"],
+            "parties": res["parties"],
+            "cycles": res["cycles"],
+            "epochs": res["epochs"],
+            "per_cycle_wall_s": res["per_cycle_wall_s"],
+            "baseline_per_cycle_wall_s": res["baseline_per_cycle_wall_s"],
+            "speedup": res["speedup"],
+        })
+
+    if args.million:
+        res1m = bench_million(args.million_parties, args.cycles, args.seed)
+        print(f"population_scale_1m/fused,{res1m['per_cycle_wall_s']*1e6:.0f},"
+              f"parties={res1m['parties']};cycles={res1m['cycles']};"
+              f"per_cycle_s={res1m['per_cycle_wall_s']:.3f};"
+              f"wall_s={res1m['wall_s']:.1f}", flush=True)
+        print(f"# {res1m['parties']} parties x {res1m['cycles']} cycles, "
+              f"{res1m['per_cycle_wall_s']:.2f}s/cycle scan-fused+sharded")
+        if args.json:
+            merge_json_section(args.json, "population_scale_1m", {
+                "wall_s": res1m["wall_s"],
+                "parties": res1m["parties"],
+                "cycles": res1m["cycles"],
+                "per_cycle_wall_s": res1m["per_cycle_wall_s"],
+            })
+
+
+if __name__ == "__main__":
+    main()

@@ -11,9 +11,14 @@ output is both human-skimmable and machine-parsable.
   exchange_scale  — incentive-gated model-exchange economy, hetero cohorts
   chaos_scale     — exchange economy under churn/link-loss/byzantine faults
   hierarchy_scale — edge→region→cloud tiering: cache hit-rate + egress
+  population_scale— scan-fused one-dispatch cycles vs per-step baseline
   roofline        — three-term roofline from dry-run artifacts (if present)
 
-Usage: python -m benchmarks.run [sections...]
+Usage: python -m benchmarks.run [sections...] [--json RESULTS.json]
+
+``--json`` threads through to every section that reports headline
+numbers, merging them all into one results file — the input to
+``benchmarks/check_thresholds.py`` and ``scripts/append_bench.py``.
 """
 from __future__ import annotations
 
@@ -21,6 +26,12 @@ import sys
 import time
 
 import numpy as np
+
+_JSON_PATH = None
+
+
+def _json_args():
+    return ["--json", _JSON_PATH] if _JSON_PATH else []
 
 
 def section(name):
@@ -76,21 +87,21 @@ def run_continuum_scale():
     """Event-driven runtime at 10k parties + sublinear discovery queries."""
     from benchmarks.continuum_scale import main as cmain
 
-    cmain([])
+    cmain(_json_args())
 
 
 def run_exchange_scale():
     """Incentive-gated exchange cycles over heterogeneous 10k-party cohorts."""
     from benchmarks.exchange_scale import main as emain
 
-    emain([])
+    emain(_json_args())
 
 
 def run_chaos_scale():
     """The exchange economy under the seeded chaos fault plan."""
     from benchmarks.chaos_scale import main as cmain
 
-    cmain([])
+    cmain(_json_args())
 
 
 def run_hierarchy_scale():
@@ -101,13 +112,20 @@ def run_hierarchy_scale():
     """
     from benchmarks.hierarchy_scale import main as hmain
 
-    hmain(["--parties", "20000"])
+    hmain(["--parties", "20000"] + _json_args())
+
+
+def run_population_scale():
+    """Scan-fused one-dispatch cohort cycles vs the per-step baseline."""
+    from benchmarks.population_scale import main as pmain
+
+    pmain(_json_args())
 
 
 def run_kernels():
     from benchmarks.kernels_bench import main as kmain
 
-    kmain()
+    kmain(_json_args())
 
 
 def run_roofline():
@@ -120,10 +138,19 @@ def run_roofline():
 
 
 def main():
-    which = set(sys.argv[1:]) or {"fig3", "figs456", "kernels", "traffic",
-                                  "continuum_scale", "exchange_scale",
-                                  "chaos_scale", "hierarchy_scale",
-                                  "roofline"}
+    global _JSON_PATH
+    argv = sys.argv[1:]
+    if "--json" in argv:
+        i = argv.index("--json")
+        if i + 1 >= len(argv):
+            print("error: --json requires a path", file=sys.stderr)
+            raise SystemExit(2)
+        _JSON_PATH = argv[i + 1]
+        argv = argv[:i] + argv[i + 2:]
+    which = set(argv) or {"fig3", "figs456", "kernels", "traffic",
+                          "continuum_scale", "exchange_scale",
+                          "chaos_scale", "hierarchy_scale",
+                          "population_scale", "roofline"}
     print("name,us_per_call,derived")
     if "fig3" in which:
         section("Fig.3 heterogeneity impact")
@@ -140,6 +167,9 @@ def main():
     if "hierarchy_scale" in which:
         section("Hierarchical topology (regions, caches, egress)")
         run_hierarchy_scale()
+    if "population_scale" in which:
+        section("Population scale (scan-fused one-dispatch cycles)")
+        run_population_scale()
     if "figs456" in which:
         section("Figs.4-6 IND vs FL vs MDD")
         run_figs456()

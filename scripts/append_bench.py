@@ -1,0 +1,133 @@
+"""Append a benchmark run to the committed perf trajectory (BENCH_main.json).
+
+The trajectory file is a list of run records, oldest first::
+
+    [{"sha": "...", "date": "...", "label": "...", "results": {...}}, ...]
+
+``results`` is the per-section output of the benchmarks' ``--json`` mode
+(``benchmarks/run.py --json`` or any individual ``*_scale.py --json``).
+Appending compares every ``*wall*`` metric against the most recent
+earlier record with the same label that reports it and FAILS on a >
+``--factor`` (default 2x) slowdown — a perf claim that regresses has to
+be acknowledged by either fixing it or re-recording the baseline, never
+silently.  Speedup-style metrics (``speedup`` keys) fail when they drop
+below ``1/factor`` of the reference.
+
+Usage:
+    python scripts/append_bench.py RESULTS.json [--label main] \
+        [--trajectory BENCH_main.json] [--factor 2.0] [--check-only]
+
+``--check-only`` (the CI mode) runs the comparison against the last
+matching committed record without writing anything, so pull requests
+diff their fresh ``BENCH_ci.json`` against the committed trajectory.
+"""
+from __future__ import annotations
+
+import argparse
+import datetime
+import json
+import os
+import subprocess
+import sys
+
+
+def _git_sha() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, check=True,
+        ).stdout.strip()
+    except (subprocess.CalledProcessError, FileNotFoundError):
+        return "unknown"
+
+
+def _walk(tree, prefix=""):
+    """Yield (dotted_key, value) for every numeric leaf."""
+    for key, val in sorted(tree.items()):
+        dotted = f"{prefix}.{key}" if prefix else key
+        if isinstance(val, dict):
+            yield from _walk(val, dotted)
+        elif isinstance(val, (int, float)) and not isinstance(val, bool):
+            yield dotted, float(val)
+
+
+def compare(results: dict, reference: dict, factor: float) -> list:
+    """Regressions of ``results`` against ``reference`` (empty = pass).
+
+    Wall-time keys regress by exceeding ``factor`` x the reference;
+    speedup keys regress by dropping below ``reference / factor``.
+    Metrics only one side reports are ignored — sections come and go,
+    the gate is about the numbers both runs measured.
+    """
+    ref = dict(_walk(reference))
+    problems = []
+    for key, got in _walk(results):
+        base = ref.get(key)
+        if base is None or base <= 0.0:
+            continue
+        leaf = key.rsplit(".", 1)[-1]
+        if "wall" in leaf and got > factor * base:
+            problems.append(
+                f"{key}: {got:.3f} > {factor:g}x last recorded {base:.3f}"
+            )
+        elif "speedup" in leaf and got < base / factor:
+            problems.append(
+                f"{key}: {got:.3f} < last recorded {base:.3f} / {factor:g}"
+            )
+    return problems
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("results", help="fresh --json output to record")
+    ap.add_argument("--label", default="main",
+                    help="run label; comparisons are per-label")
+    ap.add_argument("--trajectory", default="BENCH_main.json")
+    ap.add_argument("--factor", type=float, default=2.0)
+    ap.add_argument("--check-only", action="store_true",
+                    help="compare against the trajectory, write nothing")
+    args = ap.parse_args(argv)
+
+    with open(args.results) as f:
+        results = json.load(f)
+    trajectory = []
+    if os.path.exists(args.trajectory):
+        with open(args.trajectory) as f:
+            trajectory = json.load(f)
+
+    reference = next(
+        (rec for rec in reversed(trajectory)
+         if rec.get("label") == args.label), None,
+    )
+    if reference is not None:
+        problems = compare(results, reference["results"], args.factor)
+        if problems:
+            for msg in problems:
+                print(f"FAIL {msg}", file=sys.stderr)
+            print(f"regressed vs {reference['sha']} ({reference['date']}); "
+                  f"fix the regression or re-record the baseline",
+                  file=sys.stderr)
+            return 1
+        print(f"no >{args.factor:g}x regressions vs {reference['sha']} "
+              f"({reference['date']})")
+    else:
+        print(f"no earlier '{args.label}' record — nothing to compare")
+
+    if args.check_only:
+        return 0
+    trajectory.append({
+        "sha": _git_sha(),
+        "date": datetime.datetime.now(datetime.timezone.utc)
+        .strftime("%Y-%m-%dT%H:%M:%SZ"),
+        "label": args.label,
+        "results": results,
+    })
+    with open(args.trajectory, "w") as f:
+        json.dump(trajectory, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"appended record #{len(trajectory)} to {args.trajectory}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -173,7 +173,7 @@ class Continuum:
         self.ledger = ledger
         self.denied_fetches = 0
         self.faults = faults
-        self.verifier = verifier
+        self.verifier = verifier  # property: assignment resets the memo
         self.fault_stats = FaultStats()
         self.topology: Optional["RegionalTopology"] = None
         # cards already slashed, by (model_id, version): concurrent in-flight
@@ -638,16 +638,44 @@ class Continuum:
                                      local=local)
 
     # -- verify-on-fetch -----------------------------------------------------
+    @property
+    def verifier(self):
+        """The verify-on-fetch hook: ``(params, card) -> accuracy or None``."""
+        return self._verifier
+
+    @verifier.setter
+    def verifier(self, fn):
+        # a new verifier means a new eval set / new measurement semantics:
+        # memoized measurements from the old one are invalid
+        self._verifier = fn
+        self._verify_memo: Dict[tuple, Optional[float]] = {}
+
     def _check_fraud(self, params, card):
         """Re-evaluate a delivered model against its card's claim.
 
         Returns ``(fraud, claimed, measured)``; ``measured`` is ``None``
         when no verifier is wired or it cannot evaluate the architecture.
+
+        Measurements are memoized on the *content hash of the delivered
+        params* plus the card identity: discovery's top-k ranking
+        concentrates fetches on a few popular teachers, so without the
+        memo every delivery of the same blob re-runs the eval — the
+        verify-on-fetch hotspot.  Because the key covers the delivered
+        *bytes* (not just the card), a tampered blob replayed under a
+        known card hashes differently and gets its own, honest
+        measurement; swapping the ``verifier`` (new eval set) clears the
+        memo.
         """
         claimed = float(card.metrics.get("accuracy", 0.0))
-        if self.verifier is None:
+        if self._verifier is None:
             return False, claimed, None
-        measured = self.verifier(params, card)
+        key = (hashlib.sha256(params_to_bytes(params)).hexdigest(),
+               card.model_id, card.version, card.arch)
+        if key in self._verify_memo:
+            measured = self._verify_memo[key]
+        else:
+            measured = self._verifier(params, card)
+            self._verify_memo[key] = measured
         if measured is None:
             return False, claimed, None
         tol = (self.faults.verify_tolerance if self.faults is not None

@@ -27,3 +27,15 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_host_mesh():
     """1-device mesh with the production axis names (CPU smoke/integration)."""
     return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def make_party_mesh(num_devices: int | None = None):
+    """1-D population mesh: the party axis data-parallel over devices.
+
+    Used by :class:`repro.runtime.population.PartyPopulation` to shard
+    cohort state (see ``sharding.rules.PARTY_AXIS``).  Defaults to all
+    local devices; on a single-device host this yields a 1-device mesh
+    whose sharded cycles are bit-identical to the unsharded path.
+    """
+    n = num_devices if num_devices is not None else jax.local_device_count()
+    return jax.make_mesh((n,), ("party",))

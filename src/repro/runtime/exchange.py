@@ -14,9 +14,11 @@ models are the commodity.  Each MDD cycle,
      credit-gated: parties that cannot pay the fetch cost are refused,
   4. integrates the fetched teacher by distillation — all of a cohort's
      fetches are grouped by teacher architecture and driven through the
-     vmapped fused-KD ``distill_step``
-     (:meth:`~repro.runtime.population.PartyPopulation.distill_batch`), so
-     a whole cohort's KD epoch is a handful of XLA calls.
+     scan-fused, bucket-padded
+     :meth:`~repro.runtime.population.PartyPopulation.distill_batch`, so
+     a whole cohort's KD epoch chain is ONE XLA dispatch per teacher
+     architecture, with subset sizes padded to power-of-two buckets so
+     varying cohort sizes across cycles hit a bounded number of compiles.
 
 Cohorts are :class:`PartyPopulation`\\ s and may have *different*
 architectures (e.g. LR and MLP over the same feature/logit spaces), so
@@ -149,11 +151,15 @@ class CohortExchangeActor:
         accs = pop.evaluate(self.eval_x, self.eval_y)
         online = self._online_indices()
 
-        # publishes staggered across the first ~45% of the cycle; rewards
-        # mint when the card lands in the cloud index
+        # one bulk device->host export for the whole cohort (the cards
+        # carry cycle-start accuracies, so they publish the cycle-start
+        # weights those accuracies were measured on), then publishes
+        # staggered across the first ~45% of the cycle; rewards mint when
+        # the card lands in the cloud index
+        exported = pop.all_party_params()
         for j, i in enumerate(online):
             def do_pub(_now, i=int(i)):
-                cont.publish_async(pop.party_ids[i], pop.party_params(i),
+                cont.publish_async(pop.party_ids[i], exported[i],
                                    pop.make_card(i, accs[i]))
 
             self._loop.call_after(
@@ -214,7 +220,7 @@ class CohortExchangeActor:
                               label=f"{self.name} distill c{cycle}")
 
     def _integrate(self, teachers):
-        """One vmapped KD chain per distinct teacher architecture.
+        """One scan-fused KD dispatch per distinct teacher architecture.
 
         Returns ``(by_arch, mean_loss, n_integrated)``.
         """
@@ -361,10 +367,12 @@ def make_verifier(applies: Dict[str, Callable], eval_x, eval_y):
     is caught by: the card's *claimed* accuracy is checked against an
     actual evaluation on the public split before the model is trusted.
 
-    Verdicts are memoized by ``(model_id, version)``: a vault blob is
-    content-hashed and immutable per version, and discovery's top-k
-    ranking concentrates fetches on a few popular teachers, so without
-    the cache every delivery of the same model would re-run the eval.
+    The verifier itself is deliberately memo-free: an earlier revision
+    cached verdicts by ``(model_id, version)``, which a tampered blob
+    delivered under a replayed card would sail through.  Result caching
+    lives in :class:`~repro.core.continuum.Continuum`, keyed on the
+    *content hash of the delivered params*, so only byte-identical
+    payloads share a verdict (see ``Continuum._check_fraud``).
     """
     import jax
     import jax.numpy as jnp
@@ -372,15 +380,10 @@ def make_verifier(applies: Dict[str, Callable], eval_x, eval_y):
     jx = jnp.asarray(eval_x)
     jy = np.asarray(eval_y)
     jitted: Dict[str, Callable] = {}
-    verdicts: Dict[tuple, Optional[float]] = {}
 
     def verify(params, card):
-        key = (card.model_id, card.version)
-        if key in verdicts:
-            return verdicts[key]
         apply = applies.get(card.arch)
         if apply is None:
-            verdicts[key] = None
             return None
         fn = jitted.get(card.arch)
         if fn is None:
@@ -388,9 +391,7 @@ def make_verifier(applies: Dict[str, Callable], eval_x, eval_y):
                 lambda p, x, a=apply: jnp.argmax(a(p, x), axis=-1)
             )
         preds = np.asarray(fn(params, jx))
-        measured = float((preds == jy).mean())
-        verdicts[key] = measured
-        return measured
+        return float((preds == jy).mean())
 
     return verify
 

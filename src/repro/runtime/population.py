@@ -1,39 +1,62 @@
-"""Vectorized party populations: thousands of parties, a handful of XLA calls.
+"""Vectorized party populations: a whole MDD cycle in one XLA call.
 
 At 10k-party scale, driving each :class:`LearningParty`'s SGD loop through
 its own jitted call is pure dispatch overhead — the models are tiny.  A
 :class:`PartyPopulation` stacks homogeneous parties' params into a single
-pytree with a leading party axis and drives every party's local-training
-step through one ``jax.vmap``-ed update built from the same step function
-:class:`~repro.federated.client.LocalTrainer` uses, so a simulated epoch
-over the whole population is one jitted call per minibatch step.
+:class:`CohortState` pytree with a leading party axis that *stays on
+device* across a cycle, and drives every party's whole local-training
+epoch chain through one donated-buffer ``lax.scan``
+(:func:`repro.common.scan.maybe_scan`) over minibatch steps, so
+``train_epochs`` is a single jitted dispatch per call instead of one per
+minibatch.  The per-step math is the same step function
+:class:`~repro.federated.client.LocalTrainer` uses; the eager per-step
+path survives as ``fused=False`` (the numerical reference and the
+pre-scan dispatch baseline that ``benchmarks/population_scale.py``
+measures speedup against).
 
-Distillation is batched the same way: ``distill_step`` is one vmapped
-update whose loss goes through the fused KD path
-(:func:`repro.core.losses.fused_distillation_loss` — the Pallas ``kd_loss``
-kernel on TPU, the XLA-fused reference on CPU), and ``distill_batch``
-drives a *subset* of parties, each with its own fetched teacher, through
-whole KD epochs in a handful of XLA calls.  Teachers may come from a
-different architecture (paper §IV: only the logit space must match) — pass
-the teacher cohort's ``apply`` fn; each distinct teacher architecture gets
-its own cached jitted step.
+Distillation is fused the same way: ``distill_batch`` drives a *subset*
+of parties, each with its own fetched teacher, through whole KD epochs in
+one scan dispatch whose loss goes through the fused KD path
+(:func:`repro.core.losses.fused_distillation_loss` — the Pallas
+``kd_loss`` kernel on TPU, the XLA-fused reference on CPU).  Subsets are
+padded to power-of-two buckets so the exchange loop's varying cohort
+sizes hit a bounded number of compiles; padded rows are scatter-dropped.
+Teachers may come from a different architecture (paper §IV: only the
+logit space must match) — pass the teacher cohort's ``apply`` fn; each
+distinct teacher architecture gets its own cached jitted cycle.
+
+Pass ``mesh`` (a 1-D ``party``-axis mesh, see
+:func:`repro.launch.mesh.make_party_mesh`) to shard the party axis
+data-parallel across devices: cohort state and per-party data are placed
+with ``NamedSharding`` over the party axis and every fused cycle runs
+under ``shard_map`` (see :mod:`repro.sharding.rules` party helpers).
+Populations whose size does not divide the mesh are padded internally
+with inert clone parties that never surface through the public API.  On
+a 1-device mesh the sharded path is bit-identical to the unsharded one.
 
 Discovery, publishing, and transfer accounting stay per-party (they are
 cheap, event-scheduled Python); only the math is batched.
 """
 from __future__ import annotations
 
-from typing import List, Optional, Sequence
+from typing import Any, List, NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.common.scan import maybe_scan
 from repro.common.tree import count_params
 from repro.core.losses import fused_distillation_loss
 from repro.core.vault import ModelCard
 from repro.federated.client import LocalTrainer
 from repro.optim import apply_updates
+from repro.sharding.rules import (
+    PARTY_AXIS,
+    party_mesh_size,
+    party_sharding,
+    party_shard_map,
+)
 
 
 def stack_teachers(teacher_params: Sequence):
@@ -44,8 +67,57 @@ def stack_teachers(teacher_params: Sequence):
     )
 
 
+class CohortState(NamedTuple):
+    """One cohort's device-resident state: a single pytree per cohort.
+
+    ``params`` and ``opt_state`` carry a leading party axis; ``cursor``
+    counts fused minibatch steps taken since construction (the batch
+    cursor of the scan-fused cycle).  The whole tuple lives on device —
+    sharded over the party axis when the population has a mesh — and is
+    donated into each fused cycle step, so a cycle never round-trips
+    host↔device.
+    """
+
+    params: Any
+    opt_state: Any
+    cursor: jnp.ndarray
+
+
+def _bucket(k: int, multiple: int, cap: int) -> int:
+    """Smallest power-of-two >= k that is a multiple of ``multiple``.
+
+    Bounded by ``cap`` (rounded up to a multiple) so a bucket never
+    exceeds the padded population size by more than the mesh remainder.
+    """
+    b = 1
+    while b < k:
+        b *= 2
+    while b % multiple:
+        b *= 2
+    cap_m = -(-cap // multiple) * multiple
+    return min(b, max(cap_m, multiple)) if cap_m >= k else b
+
+
+def _slice_block(x, blk, batch_size):
+    """Contiguous minibatch: columns [blk*B, blk*B+B) of x (k, n, ...).
+
+    Parties' samples are pre-shuffled once at construction, so epochs can
+    iterate a *permuted schedule of contiguous blocks* instead of
+    re-gathering random columns per step — ``lax.dynamic_slice`` is
+    near-free where XLA:CPU's elementwise gather is the cycle bottleneck.
+    """
+    return jax.lax.dynamic_slice_in_dim(x, blk * batch_size, batch_size,
+                                        axis=1)
+
+
 class PartyPopulation:
-    """N homogeneous parties whose params live in one stacked pytree."""
+    """N homogeneous parties whose state lives in one stacked pytree.
+
+    ``fused=True`` (default) runs training/distillation cycles as single
+    donated-buffer ``lax.scan`` dispatches; ``fused=False`` keeps the
+    eager one-dispatch-per-minibatch reference path.  ``mesh`` shards the
+    party axis across devices (see module docstring).
+    """
 
     def __init__(
         self,
@@ -58,23 +130,55 @@ class PartyPopulation:
         batch_size: int = 32,
         seed: int = 0,
         party_ids: Optional[List[str]] = None,
+        fused: bool = True,
+        mesh=None,
     ):
         assert x_train.shape[0] == y_train.shape[0]
         self.model = model
         self.task = task
-        self.x = np.asarray(x_train)
-        self.y = np.asarray(y_train)
-        self.num_parties = self.x.shape[0]
-        self.batch_size = min(batch_size, self.y.shape[1])
+        self.fused = fused
+        self.mesh = mesh
+        self.num_parties = int(x_train.shape[0])
+        self.batch_size = min(batch_size, y_train.shape[1])
         self.party_ids = party_ids or [
             f"party{i}" for i in range(self.num_parties)
         ]
         self._rng = np.random.default_rng(seed)
 
-        keys = jax.random.split(jax.random.PRNGKey(seed), self.num_parties)
-        self.params = jax.vmap(model.init)(keys)
+        # party axis padded up to a multiple of the mesh's party-axis size;
+        # pad parties are inert clones (party-0 data, fold_in-seeded params)
+        # that train alongside the cohort but never surface through the
+        # public API (views, evaluate, cards all slice [:num_parties])
+        dmesh = party_mesh_size(mesh)
+        self._k = -(-self.num_parties // dmesh) * dmesh
+        pad = self._k - self.num_parties
+        # pre-shuffle each party's samples ONCE (seeded): epochs then walk a
+        # permuted schedule of *contiguous* blocks, so the fused cycle
+        # minibatches with dynamic_slice instead of per-step gathers
+        shuf = self._rng.permuted(
+            np.broadcast_to(np.arange(y_train.shape[1]),
+                            y_train.shape[:2]), axis=1,
+        )
+        self.x = np.take_along_axis(
+            np.asarray(x_train),
+            shuf.reshape(shuf.shape + (1,) * (x_train.ndim - 2)), axis=1,
+        )
+        self.y = np.take_along_axis(np.asarray(y_train), shuf, axis=1)
+        if pad:
+            self.x = np.concatenate([self.x, self.x[:1].repeat(pad, 0)])
+            self.y = np.concatenate([self.y, self.y[:1].repeat(pad, 0)])
+
+        key = jax.random.PRNGKey(seed)
+        params = jax.vmap(model.init)(jax.random.split(key, self.num_parties))
+        if pad:
+            pad_params = jax.vmap(model.init)(
+                jax.random.split(jax.random.fold_in(key, 1), pad)
+            )
+            params = jax.tree_util.tree_map(
+                lambda a, b: jnp.concatenate([a, b]), params, pad_params
+            )
         self._params_per_party = count_params(
-            jax.tree_util.tree_map(lambda a: a[0], self.params)
+            jax.tree_util.tree_map(lambda a: a[0], params)
         )
 
         # one party's step fn (the same one LocalTrainer jits), vmapped over
@@ -82,6 +186,7 @@ class PartyPopulation:
         trainer = LocalTrainer(model.apply, lr=lr, batch_size=self.batch_size,
                                seed=seed)
         self._opt = trainer.opt
+        self._step1 = trainer._step  # single-party step, reused by the scan
         self._vstep = jax.jit(jax.vmap(trainer._step))
         self._vinit = jax.jit(jax.vmap(self._opt.init))
         self._vapply = jax.jit(jax.vmap(model.apply, in_axes=(0, None)))
@@ -89,22 +194,44 @@ class PartyPopulation:
         # entry per teacher architecture seen (cross-arch teachers get their
         # own trace/compile, same student update)
         self._vdistill_cache = {}
+        # fused (scan-over-steps) cycle callables, same keying
+        self._fused_train = None
+        self._fused_eval = None
+        self._fused_distill_cache = {}
+
+        # the cohort's single device-resident state pytree; sharded over
+        # the party axis when a mesh is given, donated into every fused
+        # cycle so it never leaves device between events
+        if mesh is not None:
+            params = jax.device_put(params, party_sharding(mesh, params))
+        self.state = CohortState(
+            params=params,
+            opt_state=self._vinit(params),
+            cursor=jnp.zeros((), jnp.int32),
+        )
+        # device-resident copies of the training data for the fused path
+        self._jx = self._put(jnp.asarray(self.x))
+        self._jy = self._put(jnp.asarray(self.y))
+
+    # -- state plumbing ------------------------------------------------------
+    def _put(self, tree):
+        """Device-put with party-axis sharding when a mesh is attached."""
+        if self.mesh is None:
+            return tree
+        return jax.device_put(tree, party_sharding(self.mesh, tree))
+
+    @property
+    def params(self):
+        """The stacked per-party params (leading axis = padded party axis)."""
+        return self.state.params
+
+    @params.setter
+    def params(self, value):
+        self.state = self.state._replace(params=value)
 
     # -- the vmapped distillation step ---------------------------------------
-    def _vdistill(self, teacher_apply=None, teacher_axis: Optional[int] = 0,
-                  alpha: float = 0.5, temperature: float = 2.0):
-        """Jitted vmapped distill step for one teacher architecture.
-
-        ``teacher_axis=0`` maps per-party stacked teachers; ``None``
-        broadcasts one shared teacher to every party.  ``alpha`` and
-        ``temperature`` are static (they parameterize the fused loss's
-        custom VJP), so each distinct combination compiles once.
-        """
-        t_apply = teacher_apply if teacher_apply is not None else self.model.apply
-        key = (t_apply, teacher_axis, float(alpha), float(temperature))
-        cached = self._vdistill_cache.get(key)
-        if cached is not None:
-            return cached
+    def _distill_step_fn(self, t_apply, alpha: float, temperature: float):
+        """One party's KD update step for one teacher architecture."""
 
         def distill_step(params, opt_state, bx, by, t_params):
             teacher_logits = jax.lax.stop_gradient(t_apply(t_params, bx))
@@ -120,8 +247,26 @@ class PartyPopulation:
             updates, opt_state = self._opt.update(grads, opt_state, params)
             return apply_updates(params, updates), opt_state, loss
 
+        return distill_step
+
+    def _vdistill(self, teacher_apply=None, teacher_axis: Optional[int] = 0,
+                  alpha: float = 0.5, temperature: float = 2.0):
+        """Jitted vmapped distill step for one teacher architecture.
+
+        ``teacher_axis=0`` maps per-party stacked teachers; ``None``
+        broadcasts one shared teacher to every party.  ``alpha`` and
+        ``temperature`` are static (they parameterize the fused loss's
+        custom VJP), so each distinct combination compiles once.
+        """
+        t_apply = teacher_apply if teacher_apply is not None else self.model.apply
+        key = (t_apply, teacher_axis, float(alpha), float(temperature))
+        cached = self._vdistill_cache.get(key)
+        if cached is not None:
+            return cached
+
         vstep = jax.jit(jax.vmap(
-            distill_step, in_axes=(0, 0, 0, 0, teacher_axis)
+            self._distill_step_fn(t_apply, alpha, temperature),
+            in_axes=(0, 0, 0, 0, teacher_axis),
         ))
         self._vdistill_cache[key] = vstep
         return vstep
@@ -141,87 +286,332 @@ class PartyPopulation:
         return vstep(params, opt_state, bx, by, teacher_params)
 
     # -- batching ------------------------------------------------------------
-    def _epoch_batches(self, idx: Optional[np.ndarray] = None):
-        """Per-party shuffled minibatch index blocks for one epoch.
+    @property
+    def _n_blocks(self) -> int:
+        return self.y.shape[1] // self.batch_size
+
+    def _epoch_blocks(self, epochs: int) -> np.ndarray:
+        """Block schedule for ``epochs`` epochs: (steps,) int32 block ids.
+
+        One ``permutation`` draw per epoch from the population RNG; the
+        fused scan and the eager per-step loop consume the identical
+        schedule, so two populations built with the same seed see the
+        same minibatches whichever path runs.
+        """
+        blocks = [self._rng.permutation(self._n_blocks)
+                  for _ in range(epochs)]
+        if not blocks:
+            return np.zeros((0,), np.int32)
+        return np.concatenate(blocks).astype(np.int32)
+
+    def _epoch_batches(self, blocks: np.ndarray,
+                       idx: Optional[np.ndarray] = None):
+        """Contiguous per-block minibatches for a block schedule.
 
         With ``idx``, batches cover only those parties (leading axis = k).
         """
-        rows = np.arange(self.num_parties) if idx is None else np.asarray(idx)
-        k = len(rows)
-        n = self.y.shape[1]
-        perm = self._rng.permuted(
-            np.broadcast_to(np.arange(n), (k, n)), axis=1
+        B = self.batch_size
+        for blk in blocks:
+            s = int(blk) * B
+            if idx is None:
+                yield self.x[:, s:s + B], self.y[:, s:s + B]
+            else:
+                yield self.x[idx, s:s + B], self.y[idx, s:s + B]
+
+    # -- fused (scan) cycle builders -----------------------------------------
+    def _train_cycle(self):
+        """The donated-buffer scanned train cycle: one dispatch per call."""
+        if self._fused_train is not None:
+            return self._fused_train
+        opt_init = self._opt.init
+        vstep = jax.vmap(self._step1)
+        B = self.batch_size
+
+        def cycle(params, x, y, blocks):
+            opt_state = jax.vmap(opt_init)(params)
+
+            def body(carry, blk):
+                params, opt_state, _ = carry
+                bx = _slice_block(x, blk, B)
+                by = _slice_block(y, blk, B)
+                params, opt_state, loss = vstep(params, opt_state, bx, by)
+                return (params, opt_state, loss), None
+
+            loss0 = jnp.zeros((y.shape[0],), jnp.float32)
+            (params, opt_state, loss), _ = maybe_scan(
+                body, (params, opt_state, loss0), blocks
+            )
+            return params, opt_state, loss
+
+        P = jax.sharding.PartitionSpec
+        cycle = party_shard_map(
+            cycle, self.mesh,
+            in_specs=(P(PARTY_AXIS), P(PARTY_AXIS), P(PARTY_AXIS), P()),
+            out_specs=(P(PARTY_AXIS), P(PARTY_AXIS), P(PARTY_AXIS)),
         )
-        for start in range(0, n - self.batch_size + 1, self.batch_size):
-            cols = perm[:, start:start + self.batch_size]  # (k, B)
-            yield self.x[rows[:, None], cols], self.y[rows[:, None], cols]
+        self._fused_train = jax.jit(cycle, donate_argnums=(0,))
+        return self._fused_train
+
+    def _eval_fn(self):
+        """Fused per-party accuracy: correct-prediction counts on device."""
+        if self._fused_eval is not None:
+            return self._fused_eval
+        apply = self.model.apply
+
+        def ev(params, x, y):
+            logits = jax.vmap(apply, in_axes=(0, None))(params, x)
+            preds = jnp.argmax(logits, -1)
+            hits = (preds == y[None]).astype(jnp.int32)
+            return hits.sum(axis=tuple(range(1, hits.ndim)))
+
+        P = jax.sharding.PartitionSpec
+        ev = party_shard_map(
+            ev, self.mesh,
+            in_specs=(P(PARTY_AXIS), P(), P()),
+            out_specs=P(PARTY_AXIS),
+        )
+        self._fused_eval = jax.jit(ev)
+        return self._fused_eval
+
+    def _distill_cycle(self, t_apply, teacher_axis, alpha, temperature,
+                       subset: bool):
+        """The scanned KD cycle for one teacher architecture.
+
+        ``subset=True`` is the gather/scatter form used by
+        :meth:`distill_batch`: the jitted call takes the *full* donated
+        param stack plus (possibly padded) student indices, gathers the
+        students, runs the scanned KD epochs under ``shard_map``, and
+        scatter-drops the updated students back — padded rows carry
+        out-of-range indices and a zero mask, so they update nothing and
+        contribute no loss.  ``subset=False`` is the whole-population
+        broadcast-teacher form used by :meth:`distill_from`.
+        """
+        key = (t_apply, teacher_axis, float(alpha), float(temperature),
+               subset)
+        cached = self._fused_distill_cache.get(key)
+        if cached is not None:
+            return cached
+        opt_init = self._opt.init
+        step = self._distill_step_fn(t_apply, alpha, temperature)
+        vstep = jax.vmap(step, in_axes=(0, 0, 0, 0, teacher_axis))
+        B = self.batch_size
+        P = jax.sharding.PartitionSpec
+        t_spec = P(PARTY_AXIS) if teacher_axis == 0 else P()
+
+        def epochs(params, t_params, x, y, blocks):
+            opt_state = jax.vmap(opt_init)(params)
+
+            def body(carry, blk):
+                params, opt_state, _ = carry
+                bx = _slice_block(x, blk, B)
+                by = _slice_block(y, blk, B)
+                params, opt_state, loss = vstep(params, opt_state, bx, by,
+                                                t_params)
+                return (params, opt_state, loss), None
+
+            loss0 = jnp.zeros((y.shape[0],), jnp.float32)
+            (params, _, loss), _ = maybe_scan(
+                body, (params, opt_state, loss0), blocks
+            )
+            return params, loss
+
+        inner = party_shard_map(
+            epochs, self.mesh,
+            in_specs=(P(PARTY_AXIS), t_spec, P(PARTY_AXIS), P(PARTY_AXIS),
+                      P()),
+            out_specs=(P(PARTY_AXIS), P(PARTY_AXIS)),
+        )
+
+        if not subset:
+            fn = jax.jit(inner, donate_argnums=(0,))
+        else:
+            def subset_cycle(full, t_params, jidx, blocks, mask, x, y):
+                sub = jax.tree_util.tree_map(lambda a: a[jidx], full)
+                xs, ys = x[jidx], y[jidx]
+                sub, loss = inner(sub, t_params, xs, ys, blocks)
+                full = jax.tree_util.tree_map(
+                    lambda a, s: a.at[jidx].set(s, mode="drop"), full, sub
+                )
+                mean_loss = (loss * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+                return full, mean_loss
+
+            out_shardings = None
+            if self.mesh is not None:
+                out_shardings = (
+                    party_sharding(self.mesh, self.state.params),
+                    jax.sharding.NamedSharding(self.mesh, P()),
+                )
+            fn = jax.jit(subset_cycle, donate_argnums=(0,),
+                         out_shardings=out_shardings)
+        self._fused_distill_cache[key] = fn
+        return fn
 
     # -- bulk operations -----------------------------------------------------
-    def train_epochs(self, epochs: int = 1) -> float:
-        """Run local SGD for every party; returns the mean final-step loss."""
-        opt_state = self._vinit(self.params)
-        loss = jnp.zeros((self.num_parties,))
-        for _ in range(epochs):
-            for bx, by in self._epoch_batches():
-                self.params, opt_state, loss = self._vstep(
-                    self.params, opt_state, bx, by
-                )
-        return float(jnp.mean(loss))
+    def train_epochs(self, epochs: int = 1,
+                     fused: Optional[bool] = None) -> float:
+        """Run local SGD for every party; returns the mean final-step loss.
+
+        The fused path (default) runs all ``epochs`` of minibatch steps as
+        one donated-buffer scan dispatch; ``fused=False`` replays the
+        eager one-dispatch-per-minibatch reference.
+        """
+        fused = self.fused if fused is None else fused
+        blocks = self._epoch_blocks(epochs)
+        if fused:
+            params, opt_state, loss = self._train_cycle()(
+                self.state.params, self._jx, self._jy, jnp.asarray(blocks)
+            )
+            self.state = CohortState(
+                params=params, opt_state=opt_state,
+                cursor=self.state.cursor + len(blocks),
+            )
+            return float(jnp.mean(loss[: self.num_parties]))
+        params = self.state.params
+        opt_state = self._vinit(params)
+        loss = jnp.zeros((self._k,))
+        for bx, by in self._epoch_batches(blocks):
+            params, opt_state, loss = self._vstep(params, opt_state, bx, by)
+        self.state = CohortState(params=params, opt_state=opt_state,
+                                 cursor=self.state.cursor + len(blocks))
+        return float(jnp.mean(loss[: self.num_parties]))
 
     def distill_from(self, teacher_params, *, teacher_apply=None,
                      epochs: int = 1, alpha: float = 0.5,
-                     temperature: float = 2.0) -> float:
+                     temperature: float = 2.0,
+                     fused: Optional[bool] = None) -> float:
         """Distill one shared teacher into every party at once."""
+        fused = self.fused if fused is None else fused
+        t_apply = teacher_apply if teacher_apply is not None \
+            else self.model.apply
+        blocks = self._epoch_blocks(epochs)
+        if fused:
+            cycle = self._distill_cycle(t_apply, None, alpha, temperature,
+                                        subset=False)
+            params, loss = cycle(self.state.params, teacher_params,
+                                 self._jx, self._jy, jnp.asarray(blocks))
+            self.state = CohortState(
+                params=params, opt_state=self.state.opt_state,
+                cursor=self.state.cursor + len(blocks),
+            )
+            return float(jnp.mean(loss[: self.num_parties]))
         vstep = self._vdistill(teacher_apply, None, alpha, temperature)
-        opt_state = self._vinit(self.params)
-        loss = jnp.zeros((self.num_parties,))
-        for _ in range(epochs):
-            for bx, by in self._epoch_batches():
-                self.params, opt_state, loss = vstep(
-                    self.params, opt_state, bx, by, teacher_params
-                )
-        return float(jnp.mean(loss))
+        params = self.state.params
+        opt_state = self._vinit(params)
+        loss = jnp.zeros((self._k,))
+        for bx, by in self._epoch_batches(blocks):
+            params, opt_state, loss = vstep(
+                params, opt_state, bx, by, teacher_params
+            )
+        self.params = params
+        return float(jnp.mean(loss[: self.num_parties]))
 
     def distill_batch(self, indices, teacher_params, *, teacher_apply=None,
                       epochs: int = 1, alpha: float = 0.5,
-                      temperature: float = 2.0) -> float:
+                      temperature: float = 2.0, fused: Optional[bool] = None,
+                      bucket: bool = True) -> float:
         """KD epochs for a *subset* of parties, each with its own teacher.
 
         ``indices`` selects the students; ``teacher_params`` is a pytree
         stacked along a matching leading axis (see :func:`stack_teachers`).
-        The whole cohort's KD epoch is a handful of XLA calls: gather the
-        students out of the population stack, run the vmapped fused-KD
-        update chain, scatter the updated params back.  Returns the mean
+        The whole cohort's KD epoch chain is ONE scan dispatch: gather the
+        students out of the donated population stack, run the scanned
+        fused-KD update chain (``shard_map``-sharded over the party axis
+        under a mesh), scatter the updated params back.  With ``bucket``
+        (default) the subset is padded to a power-of-two bucket that
+        divides the mesh, so the exchange loop's varying cohort sizes
+        compile a bounded number of programs; padded rows are
+        scatter-dropped and masked out of the loss.  Returns the mean
         final-step loss.
         """
         idx = np.asarray(indices, dtype=np.int64)
         if idx.size == 0:
             return 0.0
+        fused = self.fused if fused is None else fused
+        t_apply = teacher_apply if teacher_apply is not None \
+            else self.model.apply
+        k = idx.size
+        blocks = self._epoch_blocks(epochs)
+        if fused:
+            pad = (_bucket(k, party_mesh_size(self.mesh), self._k) - k
+                   if bucket else
+                   (-k) % party_mesh_size(self.mesh))
+            if pad:
+                # out-of-range student rows: gather clamps them to the last
+                # real party (dummy work), scatter-drop discards the result
+                idx_pad = np.concatenate(
+                    [idx, np.full(pad, self._k, dtype=np.int64)])
+                teacher_params = jax.tree_util.tree_map(
+                    lambda a: jnp.concatenate(
+                        [a, jnp.repeat(a[:1], pad, axis=0)]),
+                    teacher_params,
+                )
+            else:
+                idx_pad = idx
+            mask = jnp.asarray(
+                np.concatenate([np.ones(k), np.zeros(pad)]).astype(np.float32)
+            )
+            cycle = self._distill_cycle(t_apply, 0, alpha, temperature,
+                                        subset=True)
+            params, mean_loss = cycle(
+                self.state.params, teacher_params, jnp.asarray(idx_pad),
+                jnp.asarray(blocks), mask, self._jx, self._jy,
+            )
+            self.state = CohortState(
+                params=params, opt_state=self.state.opt_state,
+                cursor=self.state.cursor + len(blocks),
+            )
+            return float(mean_loss)
         vstep = self._vdistill(teacher_apply, 0, alpha, temperature)
         jidx = jnp.asarray(idx)
-        sub = jax.tree_util.tree_map(lambda a: a[jidx], self.params)
+        sub = jax.tree_util.tree_map(lambda a: a[jidx], self.state.params)
         opt_state = self._vinit(sub)
         loss = jnp.zeros((idx.size,))
-        for _ in range(epochs):
-            for bx, by in self._epoch_batches(idx):
-                sub, opt_state, loss = vstep(
-                    sub, opt_state, bx, by, teacher_params
-                )
+        for bx, by in self._epoch_batches(blocks, idx):
+            sub, opt_state, loss = vstep(
+                sub, opt_state, bx, by, teacher_params
+            )
         self.params = jax.tree_util.tree_map(
-            lambda a, s: a.at[jidx].set(s), self.params, sub
+            lambda a, s: a.at[jidx].set(s), self.state.params, sub
         )
         return float(jnp.mean(loss))
 
     def evaluate(self, x_eval, y_eval) -> np.ndarray:
-        """Per-party accuracy on a shared eval set; one vmapped apply."""
-        logits = self._vapply(self.params, jnp.asarray(x_eval))
-        preds = np.asarray(jnp.argmax(logits, -1))
-        return (preds == np.asarray(y_eval)[None, :]).mean(axis=1)
+        """Per-party accuracy on a shared eval set; one fused dispatch.
+
+        Correct-prediction *counts* are computed on device (no logits ever
+        reach the host); the division happens in float64 on the host so
+        accuracies are bit-identical to the historic numpy path.
+        """
+        x_eval = jnp.asarray(x_eval)
+        y = np.asarray(y_eval)
+        hits = np.asarray(self._eval_fn()(
+            self.state.params, x_eval, jnp.asarray(y)
+        ))
+        return hits[: self.num_parties] / float(y.size)
 
     # -- per-party views (for publish/fetch paths) ---------------------------
     def party_params(self, i: int):
         """Party ``i``'s params sliced out of the stacked pytree (numpy)."""
-        return jax.tree_util.tree_map(lambda a: np.asarray(a[i]), self.params)
+        return jax.tree_util.tree_map(lambda a: np.asarray(a[i]),
+                                      self.state.params)
+
+    def all_party_params(self) -> list:
+        """Every party's params as numpy trees, from ONE device transfer.
+
+        The per-party form (``party_params`` in a loop) dispatches a
+        device slice per party per leaf — at 10k parties that is tens of
+        thousands of host round-trips per publish cycle.  Because cohort
+        state is a single device-resident pytree, the whole stack comes
+        back in one ``device_get``; the per-party trees are zero-copy
+        row views into it.  Bit-identical to ``party_params(i)``.
+        """
+        host = jax.tree_util.tree_map(np.asarray,
+                                      jax.device_get(self.state.params))
+        leaves, treedef = jax.tree_util.tree_flatten(host)
+        return [
+            jax.tree_util.tree_unflatten(treedef, [a[i] for a in leaves])
+            for i in range(self.num_parties)
+        ]
 
     def make_card(self, i: int, accuracy: float) -> ModelCard:
         """Build party ``i``'s model card around a measured accuracy."""

@@ -244,6 +244,55 @@ def replicated(mesh: Mesh):
 
 
 # ---------------------------------------------------------------------------
+# Party-axis (population data-parallel) helpers
+# ---------------------------------------------------------------------------
+
+# The population mesh is 1-D: every cohort pytree carries a leading party
+# axis that shards data-parallel across it (ISSUE 6 / ROADMAP item 1).
+PARTY_AXIS = "party"
+
+try:  # jax >= 0.4.35 ships shard_map under jax.experimental
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    HAS_SHARD_MAP = True
+except ImportError:  # pragma: no cover - ancient jax
+    _shard_map = None
+    HAS_SHARD_MAP = False
+
+
+def party_mesh_size(mesh: Optional[Mesh]) -> int:
+    """Number of shards along the party axis (1 without a mesh)."""
+    if mesh is None:
+        return 1
+    return int(_mesh_axis_sizes(mesh).get(PARTY_AXIS, 1))
+
+
+def party_sharding(mesh: Mesh, tree):
+    """Shard every leaf's leading (party) dim over the party axis."""
+    sh = NamedSharding(mesh, P(PARTY_AXIS))
+    return jax.tree_util.tree_map(lambda _: sh, tree)
+
+
+def party_shard_map(fn, mesh: Optional[Mesh], *, in_specs, out_specs):
+    """Wrap ``fn`` in ``shard_map`` over the party mesh; identity without one.
+
+    ``in_specs``/``out_specs`` may be PartitionSpec pytree prefixes, as
+    usual for ``shard_map``.  ``check_rep=False`` because the population
+    cycle is a pure per-shard map with no collectives.  Callers that jit
+    the result keep a single code path whether or not a mesh exists.
+    """
+    if mesh is None:
+        return fn
+    if not HAS_SHARD_MAP:  # pragma: no cover - ancient jax
+        raise RuntimeError(
+            "party-axis sharding requires jax.experimental.shard_map; "
+            "run without a mesh on this jax version"
+        )
+    return _shard_map(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=False)
+
+
+# ---------------------------------------------------------------------------
 # In-graph activation constraints (no-ops without a mesh context)
 # ---------------------------------------------------------------------------
 
