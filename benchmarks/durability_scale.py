@@ -1,0 +1,230 @@
+"""Durability scale benchmark: snapshot/restore + membership churn at 10k.
+
+Drives a deterministic publish/fetch workload over the hierarchical
+continuum with elastic membership churn (a batch of admits and retires
+every cycle, plus one region added and one drained), snapshotting the
+entire world at every cycle barrier.  At the middle barrier the live
+world is thrown away and rebuilt from its snapshot bytes — the forced
+restore — and the run continues from there.  Two things are proven, not
+just timed:
+
+* **byte-identity** — the interrupted run's concatenated event trace is
+  compared byte-for-byte against an uninterrupted reference run of the
+  same workload (``byte_identical`` gates in CI);
+* **conservation** — ``sum(balances) == minted`` is asserted at every
+  barrier, across the restore boundary, and after every membership
+  event (``conserved`` gates in CI).
+
+Headline timings are the full-world snapshot cost (which scales with
+vault bytes + ledger accounts + frontier size), the restore cost, and
+the workload wall time with snapshotting in the loop.  ``--json`` merges
+the numbers into a results file for ``benchmarks/check_thresholds.py``
+and ``scripts/append_bench.py``.
+
+  PYTHONPATH=src python benchmarks/durability_scale.py [--parties 10000]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+try:
+    from benchmarks.bench_json import merge_json_section
+except ImportError:  # run as a script: benchmarks/ itself is on sys.path
+    from bench_json import merge_json_section
+
+from repro.core.discovery import ModelQuery
+from repro.core.incentives import IncentiveLedger
+from repro.core.vault import ModelCard
+from repro.runtime.faults import FaultPlan
+from repro.runtime.snapshot import restore_world, snapshot_world
+from repro.runtime.topology import build_hierarchical_continuum
+from repro.runtime.trace import scripted_accuracy as _true_acc
+from repro.runtime.trace import serialize_trace
+
+CYCLE_LEN_S = 600.0
+
+
+def _build(regions, edges_per_region, seed):
+    return build_hierarchical_continuum(
+        regions, edges_per_region, ledger=IncentiveLedger(),
+        faults=FaultPlan(seed=seed),
+    )
+
+
+def _ids_at(parties, churn, cycle):
+    """Base cohort plus every churn batch admitted before ``cycle``.
+
+    A pure function of the cycle number, so the interrupted and reference
+    runs — and a restored process — schedule identical workloads.
+    """
+    extra = [f"n{k:02d}x{j:04d}"
+             for k in range(1, cycle + 1) for j in range(churn)]
+    return [f"p{i:06d}" for i in range(parties)] + extra
+
+
+def _schedule_cycle(cont, parties, churn, cycle, cycles, n_tasks):
+    """Membership for the next barrier, then this cycle's publish/query."""
+    loop, window = cont.loop, cycle * CYCLE_LEN_S
+    nxt = cycle + 1
+    if nxt < cycles:
+        t0 = nxt * CYCLE_LEN_S - cont.clock.now()
+        for j in range(churn):
+            cont.admit_party(f"n{nxt:02d}x{j:04d}", delay=t0 + 0.1)
+            victim = (nxt - 1) * churn + j
+            if victim < parties:
+                cont.retire_party(f"p{victim:06d}", delay=t0 + 0.2)
+        if nxt == 1:
+            cont.add_region("rgx00", n_edges=1, delay=t0 + 0.3)
+        elif nxt == 2:
+            cont.drain_region("rgx00", delay=t0 + 0.3)
+
+    ids = _ids_at(parties, churn, cycle)
+    n = max(len(ids), 1)
+    for j, pid in enumerate(ids):
+        acc = _true_acc(j, cycle)
+        task = f"task{j % n_tasks:03d}"
+
+        def do_publish(now, pid=pid, j=j, acc=acc, task=task):
+            card = ModelCard(
+                model_id=f"{pid}/m", task=task, arch="toy", owner=pid,
+                num_params=33, metrics={"accuracy": acc, "per_class": {}},
+            )
+            params = {"w": np.full(32, float(j % 97), np.float32),
+                      "acc": np.asarray(acc, np.float32)}
+            cont.publish_async(pid, params, card)
+
+        loop.call_at(window + 1.0 + 0.40 * CYCLE_LEN_S * j / n,
+                     do_publish, label="pub")
+
+        def do_query(now, pid=pid, acc=acc, task=task):
+            cont.discover_and_fetch_async(
+                ModelQuery(task=task, min_accuracy=acc + 0.02,
+                           exclude_owners=(pid,)),
+                lambda hit, _now: None, requester=pid,
+            )
+
+        loop.call_at(window + 0.55 * CYCLE_LEN_S
+                     + 0.40 * CYCLE_LEN_S * j / n, do_query, label="query")
+
+
+def _run_cycle(cont, cycle):
+    cont.loop.run_until((cycle + 1) * CYCLE_LEN_S)
+    cont.ledger.assert_conserved()
+
+
+def bench_durability(parties=10000, cycles=3, regions=8, edges_per_region=2,
+                     churn=100, seed=0, n_tasks=32):
+    """Interrupted-with-restore run vs uninterrupted reference run."""
+    # -- reference: same workload, never interrupted -------------------------
+    ref = _build(regions, edges_per_region, seed)
+    for c in range(cycles):
+        _schedule_cycle(ref, parties, churn, c, cycles, n_tasks)
+        _run_cycle(ref, c)
+    ref.loop.run_to_quiescence()
+    ref.ledger.assert_conserved()
+    ref_trace = serialize_trace(ref.loop.log)
+    ref_events = ref.loop.events_processed
+    del ref
+
+    # -- measured run: snapshot every barrier, forced restore at the middle --
+    cont = _build(regions, edges_per_region, seed)
+    restore_at = max(1, cycles // 2)
+    snap_times, snap_bytes, restore_s = [], [], 0.0
+    pre_trace = b""
+    wall0 = time.perf_counter()
+    for c in range(cycles):
+        _schedule_cycle(cont, parties, churn, c, cycles, n_tasks)
+        _run_cycle(cont, c)
+        t0 = time.perf_counter()
+        snap = snapshot_world(cont, extra={"next_cycle": c + 1})
+        snap_times.append(time.perf_counter() - t0)
+        snap_bytes.append(len(snap))
+        if c + 1 == restore_at:
+            # the forced restore: drop the live world, rebuild from bytes
+            pre_trace = serialize_trace(cont.loop.log)
+            del cont
+            t0 = time.perf_counter()
+            cont, _extra = restore_world(snap)
+            restore_s = time.perf_counter() - t0
+            cont.ledger.assert_conserved()
+    cont.loop.run_to_quiescence()
+    cont.ledger.assert_conserved()
+    wall = time.perf_counter() - wall0
+
+    trace = pre_trace + serialize_trace(cont.loop.log)
+    return {
+        "parties": parties,
+        "cycles": cycles,
+        "regions": regions,
+        "churn": churn,
+        "events": ref_events,
+        "wall_s": wall,
+        "events_per_s": ref_events / wall,
+        "snapshots": len(snap_times),
+        "snapshot_s": max(snap_times),
+        "snapshot_mbytes": max(snap_bytes) / 1e6,
+        "restore_s": restore_s,
+        "byte_identical": int(trace == ref_trace),
+        "membership_refusals": cont.membership_refusals,
+        "retired": len(cont.retired),
+        "admitted": len(cont.members),
+        "conserved": 1,  # assert_conserved above would have raised
+    }
+
+
+def main(argv=None):
+    """CLI entry point; prints CSV rows like the other benchmark sections."""
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--parties", type=int, default=10000)
+    ap.add_argument("--cycles", type=int, default=3)
+    ap.add_argument("--regions", type=int, default=8)
+    ap.add_argument("--edges-per-region", type=int, default=2)
+    ap.add_argument("--churn", type=int, default=100,
+                    help="admits (and retires) per cycle")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--tasks", type=int, default=32)
+    ap.add_argument("--json", type=str, default=None,
+                    help="merge headline numbers into this JSON file")
+    args = ap.parse_args(argv)
+    if args.parties < 1 or args.cycles < 2 or args.regions < 2 \
+            or args.edges_per_region < 1 or args.churn < 0 or args.tasks < 1:
+        ap.error("--parties/--edges-per-region/--tasks must be >= 1, "
+                 "--cycles >= 2, --regions >= 2, --churn >= 0")
+
+    res = bench_durability(args.parties, args.cycles, args.regions,
+                           args.edges_per_region, args.churn, args.seed,
+                           args.tasks)
+    print(f"durability_scale/run,{res['wall_s']*1e6:.0f},"
+          f"parties={res['parties']};cycles={res['cycles']};"
+          f"events={res['events']};events_per_s={res['events_per_s']:.0f}",
+          flush=True)
+    print(f"durability_scale/snapshot,{res['snapshot_s']*1e6:.0f},"
+          f"snapshots={res['snapshots']};"
+          f"mbytes={res['snapshot_mbytes']:.1f};"
+          f"restore_s={res['restore_s']:.3f}")
+    print(f"durability_scale/churn,0,"
+          f"admitted={res['admitted']};retired={res['retired']};"
+          f"refusals={res['membership_refusals']}")
+    print(f"durability_scale/resume,0,"
+          f"byte_identical={res['byte_identical']};conserved=1")
+    verdict = ("byte-identical resume"
+               if res["byte_identical"] else "TRACE DIVERGED after restore")
+    print(f"# {res['parties']} parties, snapshot every cycle "
+          f"(max {res['snapshot_s']:.2f}s / {res['snapshot_mbytes']:.1f}MB), "
+          f"restore {res['restore_s']:.2f}s: {verdict}")
+    assert res["byte_identical"], "restored run diverged from reference"
+
+    if args.json:
+        merge_json_section(args.json, "durability_scale", {
+            k: res[k] for k in
+            ("wall_s", "parties", "cycles", "churn", "events", "snapshots",
+             "snapshot_s", "snapshot_mbytes", "restore_s", "byte_identical",
+             "retired", "conserved")
+        })
+
+
+if __name__ == "__main__":
+    main()

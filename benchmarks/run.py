@@ -11,6 +11,7 @@ output is both human-skimmable and machine-parsable.
   exchange_scale  — incentive-gated model-exchange economy, hetero cohorts
   chaos_scale     — exchange economy under churn/link-loss/byzantine faults
   hierarchy_scale — edge→region→cloud tiering: cache hit-rate + egress
+  durability_scale— full-world snapshot/restore + membership churn
   population_scale— scan-fused one-dispatch cycles vs per-step baseline
   roofline        — three-term roofline from dry-run artifacts (if present)
 
@@ -115,6 +116,17 @@ def run_hierarchy_scale():
     hmain(["--parties", "20000"] + _json_args())
 
 
+def run_durability_scale():
+    """Full-world snapshot/restore with membership churn, byte-identical.
+
+    The section runs at 5k parties to keep the orchestrator sweep short;
+    the standalone CLI defaults to the 10k-party headline scale.
+    """
+    from benchmarks.durability_scale import main as dmain
+
+    dmain(["--parties", "5000"] + _json_args())
+
+
 def run_population_scale():
     """Scan-fused one-dispatch cohort cycles vs the per-step baseline."""
     from benchmarks.population_scale import main as pmain
@@ -150,7 +162,8 @@ def main():
     which = set(argv) or {"fig3", "figs456", "kernels", "traffic",
                           "continuum_scale", "exchange_scale",
                           "chaos_scale", "hierarchy_scale",
-                          "population_scale", "roofline"}
+                          "durability_scale", "population_scale",
+                          "roofline"}
     print("name,us_per_call,derived")
     if "fig3" in which:
         section("Fig.3 heterogeneity impact")
@@ -167,6 +180,9 @@ def main():
     if "hierarchy_scale" in which:
         section("Hierarchical topology (regions, caches, egress)")
         run_hierarchy_scale()
+    if "durability_scale" in which:
+        section("Durability (snapshot/restore + membership churn)")
+        run_durability_scale()
     if "population_scale" in which:
         section("Population scale (scan-fused one-dispatch cycles)")
         run_population_scale()

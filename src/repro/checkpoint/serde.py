@@ -1,18 +1,42 @@
 """Parameter (de)serialization and simple step checkpoints.
 
-Format: npz archive keyed by '/'-joined pytree paths, so any nested dict of
-arrays round-trips exactly.  This is also the wire format models travel in
-between vaults and learners (content-hashed by repro.core.vault).
+Two archive layouts share one npz container:
+
+* **Legacy / plain layout** — nested string-keyed dicts of arrays are
+  stored keyed by '/'-joined pytree paths, byte-for-byte identical to
+  every archive this module has ever written.  This is also the wire
+  format models travel in between vaults and learners (content-hashed
+  by repro.core.vault), so its bytes are load-bearing.
+* **Structured layout** — any tree the plain layout cannot represent
+  faithfully (lists, tuples, ``None``, empty dicts, keys containing
+  ``/``, bare-leaf roots, extension dtypes such as bfloat16) stores its
+  leaves as ``leaf<i>`` entries plus a reserved ``__pytree__`` entry
+  holding a JSON treedef.  Restoring rebuilds the original structure
+  from that stored treedef instead of guessing dicts from path strings,
+  which is the round-trip bug the old format had: a list node came back
+  as a dict keyed by stringified indices.
+
+``restore_checkpoint`` parses step numbers numerically (never
+lexicographically), names the requested and available steps when a step
+is missing, and skips corrupt/partial archives when resolving
+"latest" — saves are write-then-rename so a crashed writer can only
+ever leave a ``.tmp`` file behind, not a truncated checkpoint.
 """
 from __future__ import annotations
 
 import io
 import json
 import os
+import re
+import zipfile
 from typing import Any
 
 import jax
 import numpy as np
+
+# Reserved npz entry holding the JSON treedef of a structured archive.
+_SPEC_KEY = "__pytree__"
+_CKPT_RE = re.compile(r"^ckpt_(\d+)\.npz$")
 
 
 def _flatten(tree) -> dict:
@@ -36,41 +60,203 @@ def _unflatten(flat: dict) -> Any:
     return tree
 
 
+def _is_plain(tree) -> bool:
+    """Whether ``tree`` round-trips exactly under the legacy path layout.
+
+    Plain means: a non-empty nested dict with string keys free of ``/``
+    (and not the reserved ``__pytree__`` key), whose leaves are arrays
+    of builtin numpy dtypes.  Anything else — lists, tuples, ``None``,
+    empty dicts, bare leaves, extension dtypes — needs the structured
+    layout to survive a round trip.
+    """
+    if not isinstance(tree, dict) or not tree:
+        return False
+    if _SPEC_KEY in tree:
+        return False
+
+    def ok(node) -> bool:
+        if isinstance(node, dict):
+            if not node:
+                return False
+            return all(
+                isinstance(k, str) and "/" not in k and ok(v)
+                for k, v in node.items()
+            )
+        if isinstance(node, (list, tuple)) or node is None:
+            return False
+        arr = np.asarray(node)
+        return arr.dtype.isbuiltin == 1 and arr.dtype != object
+
+    return ok(tree)
+
+
+def _resolve_dtype(name: str) -> np.dtype:
+    """Look up a dtype by name, falling back to ml_dtypes extensions."""
+    try:
+        return np.dtype(name)
+    except TypeError:
+        pass
+    try:
+        import ml_dtypes
+
+        return np.dtype(getattr(ml_dtypes, name))
+    except (ImportError, AttributeError) as exc:
+        raise TypeError(f"cannot resolve archived dtype {name!r}") from exc
+
+
+def _build_spec(node, leaves: list) -> dict:
+    """Recursively describe ``node``, appending its leaves to ``leaves``."""
+    if isinstance(node, dict):
+        keys = list(node.keys())
+        if not all(isinstance(k, str) for k in keys):
+            raise TypeError("serde supports string dict keys only")
+        return {
+            "t": "dict",
+            "k": keys,
+            "c": [_build_spec(node[k], leaves) for k in keys],
+        }
+    if isinstance(node, (list, tuple)):
+        kind = "list" if isinstance(node, list) else "tuple"
+        return {"t": kind, "c": [_build_spec(v, leaves) for v in node]}
+    if node is None:
+        return {"t": "none"}
+    arr = np.asarray(node)
+    if arr.dtype == object:
+        raise TypeError(f"cannot serialize object-dtype leaf: {node!r}")
+    idx = len(leaves)
+    spec: dict = {"t": "leaf", "i": idx}
+    if arr.dtype.isbuiltin != 1:
+        # Extension dtypes (e.g. ml_dtypes bfloat16) do not survive npz
+        # natively — store raw bytes and record dtype + shape.  Sized
+        # string/bytes dtypes name themselves unresolvably ("str96"), so
+        # they record their ``.str`` form ("<U3") instead.
+        dt = arr.dtype
+        spec["d"] = dt.str if dt.kind in "SU" else dt.name
+        spec["s"] = list(arr.shape)
+        arr = np.frombuffer(arr.tobytes(), dtype=np.uint8)
+    leaves.append(arr)
+    return spec
+
+
+def _apply_spec(spec: dict, leaves: dict):
+    kind = spec["t"]
+    if kind == "dict":
+        return {
+            k: _apply_spec(c, leaves)
+            for k, c in zip(spec["k"], spec["c"])
+        }
+    if kind in ("list", "tuple"):
+        seq = [_apply_spec(c, leaves) for c in spec["c"]]
+        return seq if kind == "list" else tuple(seq)
+    if kind == "none":
+        return None
+    arr = leaves[f"leaf{spec['i']}"]
+    if "d" in spec:
+        dtype = _resolve_dtype(spec["d"])
+        arr = np.frombuffer(arr.tobytes(), dtype=dtype).reshape(spec["s"])
+    return arr
+
+
 def params_to_bytes(params) -> bytes:
+    """Serialize a pytree of arrays into a self-describing npz archive."""
     buf = io.BytesIO()
-    np.savez(buf, **_flatten(params))
+    if _is_plain(params):
+        np.savez(buf, **_flatten(params))
+        return buf.getvalue()
+    leaves: list = []
+    spec = _build_spec(params, leaves)
+    entries = {f"leaf{i}": arr for i, arr in enumerate(leaves)}
+    entries[_SPEC_KEY] = np.frombuffer(
+        json.dumps(spec, sort_keys=True).encode("utf-8"), dtype=np.uint8
+    )
+    np.savez(buf, **entries)
     return buf.getvalue()
 
 
 def params_from_bytes(data: bytes):
+    """Restore a pytree serialized by :func:`params_to_bytes`.
+
+    Structured archives rebuild against the treedef stored in the
+    archive; legacy path-keyed archives rebuild nested dicts.
+    """
     with np.load(io.BytesIO(data)) as npz:
         flat = {k: npz[k] for k in npz.files}
+    if _SPEC_KEY in flat:
+        spec = json.loads(flat.pop(_SPEC_KEY).tobytes().decode("utf-8"))
+        return _apply_spec(spec, flat)
     return _unflatten(flat)
 
 
+def _atomic_write(path: str, data: bytes):
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(data)
+    os.replace(tmp, path)
+
+
 def save_checkpoint(directory: str, step: int, params, extra: dict | None = None):
+    """Atomically write ``params`` (+ JSON metadata) for ``step``.
+
+    Both files are written to a ``.tmp`` sibling and renamed into place,
+    so a crash mid-save never leaves a truncated ``ckpt_*.npz`` that a
+    later restore would trip over.
+    """
     os.makedirs(directory, exist_ok=True)
     path = os.path.join(directory, f"ckpt_{step:08d}.npz")
-    with open(path, "wb") as f:
-        f.write(params_to_bytes(params))
+    _atomic_write(path, params_to_bytes(params))
     meta = {"step": step, **(extra or {})}
-    with open(os.path.join(directory, f"ckpt_{step:08d}.json"), "w") as f:
-        json.dump(meta, f)
+    meta_path = os.path.join(directory, f"ckpt_{step:08d}.json")
+    _atomic_write(meta_path, json.dumps(meta).encode("utf-8"))
     return path
 
 
+def _checkpoint_steps(directory: str) -> dict:
+    steps = {}
+    for name in os.listdir(directory):
+        m = _CKPT_RE.match(name)
+        if m:
+            steps[int(m.group(1))] = name
+    return steps
+
+
 def restore_checkpoint(directory: str, step: int | None = None):
-    ckpts = sorted(
-        f for f in os.listdir(directory) if f.startswith("ckpt_") and f.endswith(".npz")
-    )
-    if not ckpts:
+    """Load a checkpoint, picking the numerically-latest step by default.
+
+    Raises FileNotFoundError naming the requested step and the steps
+    actually present when ``step`` is missing.  When resolving "latest",
+    corrupt or partially-written archives are skipped (with the next
+    older step tried) rather than crashing the restore.
+    """
+    steps = _checkpoint_steps(directory)
+    if not steps:
         raise FileNotFoundError(f"no checkpoints in {directory}")
-    name = f"ckpt_{step:08d}.npz" if step is not None else ckpts[-1]
-    with open(os.path.join(directory, name), "rb") as f:
-        params = params_from_bytes(f.read())
-    meta_path = os.path.join(directory, name.replace(".npz", ".json"))
-    meta = {}
-    if os.path.exists(meta_path):
-        with open(meta_path) as f:
-            meta = json.load(f)
-    return params, meta
+    if step is not None:
+        if step not in steps:
+            raise FileNotFoundError(
+                f"checkpoint step {step} not found in {directory}; "
+                f"available steps: {sorted(steps)}"
+            )
+        candidates = [step]
+    else:
+        candidates = sorted(steps, reverse=True)
+
+    skipped = []
+    for s in candidates:
+        path = os.path.join(directory, steps[s])
+        try:
+            with open(path, "rb") as f:
+                params = params_from_bytes(f.read())
+        except (OSError, ValueError, KeyError, EOFError, zipfile.BadZipFile) as exc:
+            if step is not None:
+                raise ValueError(f"checkpoint {path} is corrupt: {exc}") from exc
+            skipped.append(steps[s])
+            continue
+        meta_path = os.path.join(directory, steps[s].replace(".npz", ".json"))
+        meta = {}
+        if os.path.exists(meta_path):
+            with open(meta_path) as f:
+                meta = json.load(f)
+        return params, meta
+    raise FileNotFoundError(
+        f"no readable checkpoints in {directory}; skipped corrupt: {skipped}"
+    )

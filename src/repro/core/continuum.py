@@ -179,6 +179,11 @@ class Continuum:
         # cards already slashed, by (model_id, version): concurrent in-flight
         # fetches of one fraudulent card must not slash the publisher twice
         self._frauded: set = set()
+        # elastic membership: explicitly admitted / retired party ids, plus
+        # a counter for operations refused because the party had retired
+        self.members: set = set()
+        self.retired: set = set()
+        self.membership_refusals = 0
 
     def attach_topology(self, topology: "RegionalTopology") -> None:
         """Install the region tier; must happen before edges are added.
@@ -254,7 +259,25 @@ class Continuum:
         (becoming globally discoverable; rewards mint there), and an
         upload into a region that is dark under the plan's regional-outage
         schedule is lost exactly like a link drop.
+
+        A retired party (see :meth:`retire_party`) is refused before any
+        bytes move: nothing is stored, ``on_fail`` fires, and the refusal
+        is counted in ``membership_refusals``.
         """
+        if party_id in self.retired:
+            self.membership_refusals += 1
+
+            def publish_refused(now: float):
+                if on_fail is not None:
+                    on_fail(now)
+
+            self.loop.call_after(
+                0.0, publish_refused,
+                label=f"publish-retired {card.model_id}",
+                payload={"op": "publish_retired", "party": party_id,
+                         "model": card.model_id},
+            )
+            return card
         edge = self.nearest_edge(party_id)
         region = (self.topology.region_of(party_id)
                   if self.topology is not None else None)
@@ -433,6 +456,15 @@ class Continuum:
                 on_done(None, now)
 
         def do_query(now: float):
+            if requester is not None and requester in self.retired:
+                # retired parties are out of the exchange entirely: refused
+                # before the credit gate, counted separately from denials
+                self.membership_refusals += 1
+                if on_denied is not None:
+                    on_denied(now)
+                else:
+                    on_done(None, now)
+                return
             gated = self.ledger is not None and requester is not None
             if gated and not self.ledger.can_fetch(requester):
                 self.ledger.on_denied(requester)
@@ -699,6 +731,179 @@ class Continuum:
         self._frauded.add(key)
         if self.ledger is not None:
             self.ledger.on_fraud(card.owner)
+
+    # -- elastic membership --------------------------------------------------
+    def _schedule_membership(self, op: str, fields: Dict, delay: float,
+                             label: str) -> Dict:
+        """Schedule a membership event with a *durable* payload.
+
+        The payload carries everything needed to re-execute the event
+        (``durable: "membership"``), so a snapshot taken while it is
+        still pending can persist it and a restore can reschedule it via
+        :meth:`membership_handler` — closures never need to survive the
+        process boundary.
+        """
+        payload = {"op": op, "durable": "membership", **fields}
+        self.loop.call_after(
+            delay, lambda now: self.membership_handler(payload),
+            label=label, payload=payload,
+        )
+        return payload
+
+    def membership_handler(self, payload: Dict) -> None:
+        """Execute one durable membership payload (also the restore path).
+
+        Dispatches on ``payload["op"]``: ``admit`` / ``retire`` /
+        ``add_region`` / ``drain_region``.  Pure function of the payload
+        plus current world state, so replaying a restored frontier event
+        has exactly the effect the pre-snapshot schedule would have had.
+        """
+        op = payload["op"]
+        if op == "admit":
+            self._apply_admit(payload["party"])
+        elif op == "retire":
+            self._apply_retire(payload["party"])
+        elif op == "add_region":
+            self._apply_add_region(payload["region"], payload["n_edges"])
+        elif op == "drain_region":
+            self._apply_drain_region(payload["region"])
+        else:
+            raise ValueError(f"unknown membership op {op!r}")
+
+    def admit_party(self, party_id: str, delay: float = 0.0) -> None:
+        """Schedule a party's admission to the exchange.
+
+        At fire time the party's ledger account opens (minting the
+        cold-start stipend) and the id joins ``members``.  Placement
+        needs no bookkeeping — party→region→edge assignment is a pure
+        sha256 function of the id and the current topology shape.
+        Retired ids cannot be re-admitted: their balance was escrowed
+        and their listings purged; a fresh identity must join instead.
+        """
+        if party_id in self.retired:
+            raise ValueError(f"{party_id!r} was retired; re-admission is "
+                             "not supported (join with a fresh identity)")
+        self._schedule_membership("admit", {"party": party_id}, delay,
+                                  f"admit {party_id}")
+
+    def retire_party(self, party_id: str, delay: float = 0.0) -> None:
+        """Schedule a party's retirement from the exchange.
+
+        At fire time the party's listings are deregistered from the cloud
+        index and every region shard (blobs stay in their vaults but stop
+        being discoverable), its remaining balance escrows to its region
+        operator (the cloud operator in a flat topology) — a zero-sum
+        transfer, so ``sum(balances) == minted`` holds across the event —
+        and future publishes/fetches by the id are refused.
+        """
+        if party_id in self.retired:
+            raise ValueError(f"{party_id!r} is already retired")
+        self._schedule_membership("retire", {"party": party_id}, delay,
+                                  f"retire {party_id}")
+
+    def add_region(self, region_id: str, n_edges: int = 1,
+                   delay: float = 0.0) -> None:
+        """Schedule a new region (with ``n_edges`` edge servers) to join.
+
+        At fire time the region is added to the topology (re-homing the
+        parties whose stable bucket lands on the grown region list), its
+        operator account registers with the ledger, and edge servers
+        ``edge:<region>:<ee>`` come up wired into both the region shard
+        and the cloud index.
+        """
+        if self.topology is None:
+            raise ValueError("add_region needs a hierarchical topology")
+        if region_id in self.topology.regions:
+            raise ValueError(f"region {region_id!r} already exists")
+        if n_edges < 1:
+            raise ValueError(f"a region needs at least one edge server, "
+                             f"got {n_edges}")
+        self._schedule_membership(
+            "add_region", {"region": region_id, "n_edges": n_edges}, delay,
+            f"add-region {region_id}",
+        )
+
+    def drain_region(self, region_id: str, delay: float = 0.0) -> None:
+        """Schedule a region's drain (graceful decommission).
+
+        At fire time every model the cloud index serves from the region's
+        edge vaults migrates (``store_copy`` — identity preserved) to the
+        owner's new home edge in the surviving topology and re-registers
+        there; the region's edges and caches are torn down, its operator
+        account's balance escrows to the cloud operator, and placement
+        re-homes over the shrunk region list.  The last region cannot be
+        drained.
+
+        Existence is checked at *fire* time, not here: the membership
+        plane is asynchronous, so the region may be created by an
+        ``add_region`` event that is still pending when the drain is
+        scheduled.
+        """
+        if self.topology is None:
+            raise ValueError("drain_region needs a hierarchical topology")
+        self._schedule_membership("drain_region", {"region": region_id},
+                                  delay, f"drain-region {region_id}")
+
+    def _apply_admit(self, party_id: str) -> None:
+        if party_id in self.retired:  # retired after scheduling: refuse
+            self.membership_refusals += 1
+            return
+        self.members.add(party_id)
+        if self.ledger is not None:
+            self.ledger.balance(party_id)  # opens account, mints stipend
+
+    def _apply_retire(self, party_id: str) -> None:
+        if party_id in self.retired:  # idempotent under event races
+            return
+        self.retired.add(party_id)
+        self.members.discard(party_id)
+        self.discovery.deregister_owner(party_id)
+        if self.topology is not None:
+            for rid in sorted(self.topology.regions):
+                self.topology.regions[rid].shard.deregister_owner(party_id)
+        if self.ledger is not None:
+            if self.topology is not None:
+                beneficiary = self.topology.region_of(party_id).operator
+            else:
+                beneficiary = self.ledger.operator
+            self.ledger.on_retire(party_id, beneficiary)
+
+    def _apply_add_region(self, region_id: str, n_edges: int) -> None:
+        region = self.topology.add_region(region_id)
+        if self.ledger is not None:
+            self.ledger.add_operator(region.operator)
+        for e in range(n_edges):
+            self.add_edge_server(f"edge:{region_id}:{e:02d}",
+                                 region=region_id)
+
+    def _apply_drain_region(self, region_id: str) -> None:
+        topo = self.topology
+        region = topo.regions[region_id]
+        doomed = sorted(region.edge_ids)
+        doomed_set = set(doomed)
+        # models the cloud index serves from this region's vaults must
+        # survive the drain: pull their params out before teardown
+        moves = []
+        for card, vid in self.discovery.entries():
+            if vid in doomed_set:
+                params, _card = self.edges[vid].vault.fetch(card.model_id)
+                moves.append((card, params))
+        for vid in doomed:
+            self.discovery.detach_vault(vid)
+            del self.edges[vid]
+            self._edge_order.remove(vid)
+        if self.ledger is not None:
+            self.ledger.on_retire(region.operator, self.ledger.operator)
+        topo.remove_region(region_id)
+        # re-home each surviving model onto its owner's new nearest edge;
+        # store_copy preserves version/created_at so verify-on-fetch
+        # memoization and freshness ranking see the same identity
+        for card, params in moves:
+            home = self.nearest_edge(card.owner)
+            stored = home.vault.store_copy(params, card)
+            self.discovery.register(stored, home.server_id)
+            topo.region_of(card.owner).shard.register(stored,
+                                                      home.server_id)
 
     # -- synchronous wrappers (classic API) ----------------------------------
     def publish(self, party_id: str, params, card):

@@ -122,6 +122,42 @@ class DiscoveryService:
             bucket.pop(i)
         return True
 
+    def deregister_owner(self, owner: str) -> List[str]:
+        """Drop every card published by ``owner`` (party retirement).
+
+        Returns the model ids dropped, sorted — retiring a party removes
+        its listings from the market; the blobs stay in their vaults but
+        are no longer discoverable.
+        """
+        doomed = sorted(mid for mid, (card, _vid) in self._cards.items()
+                        if card.owner == owner)
+        for mid in doomed:
+            self.deregister(mid)
+        return doomed
+
+    def detach_vault(self, vault_id: str) -> List[str]:
+        """Forget a vault and deregister every card it was serving.
+
+        Region draining: the drained edges' vaults disappear, so every
+        listing that pointed at them must leave the index (the continuum
+        migrates the blobs and re-registers under the new serving vault).
+        Returns the model ids dropped, sorted.
+        """
+        self._vaults.pop(vault_id, None)
+        doomed = sorted(mid for mid, (_card, vid) in self._cards.items()
+                        if vid == vault_id)
+        for mid in doomed:
+            self.deregister(mid)
+        return doomed
+
+    def entries(self) -> List[Tuple[ModelCard, str]]:
+        """Every indexed ``(card, serving vault id)``, model-id-sorted.
+
+        The snapshot layer's export: together with the vault entries this
+        is the full discoverable state of the index.
+        """
+        return [self._cards[mid] for mid in sorted(self._cards)]
+
     # -- matching -----------------------------------------------------------
     def _satisfies(self, card: ModelCard, q: ModelQuery) -> bool:
         if card.task != q.task:

@@ -200,6 +200,27 @@ class IncentiveLedger:
         self.flagged.add(publisher)
         return slashed
 
+    def on_retire(self, party: str, beneficiary: str) -> float:
+        """Escrow a retiring account's entire balance to ``beneficiary``.
+
+        Elastic membership: when a party retires from the exchange (or a
+        region is drained and its operator account wound down), its
+        credits do not vanish — they transfer to the named beneficiary
+        account (the party's region operator, or the cloud operator in a
+        flat topology).  A pure zero-sum transfer, so conservation holds
+        across every membership event.  Returns the escrowed amount.
+        Retiring an account that never transacted escrows nothing (the
+        account is *not* opened — that would mint a stipend just to move
+        it).
+        """
+        acct = self.accounts.get(party)
+        if acct is None:
+            return 0.0
+        amount = acct.balance
+        acct.balance = 0.0
+        self._acct(beneficiary).balance += amount
+        return amount
+
     def balance(self, party: str) -> float:
         """Current balance (opens the account — and mints the stipend for
         non-operators — on first touch)."""

@@ -161,6 +161,35 @@ class ModelVault:
             entry.parsed = params_from_bytes(entry.blob)
         return copy.deepcopy(entry.parsed), entry.card
 
+    def entries(self) -> List[VaultEntry]:
+        """Every stored entry, model-id-sorted (snapshot export).
+
+        Entries carry the exact blob and signature bytes, so a snapshot
+        can persist and later reinstall them verbatim via
+        :meth:`restore_entry` — content hashes (and therefore every
+        ``nbytes`` the Link cost model will compute) survive unchanged.
+        """
+        return [self._entries[mid] for mid in sorted(self._entries)]
+
+    def restore_entry(self, card: ModelCard, blob: bytes,
+                      signature: bytes) -> None:
+        """Reinstall a snapshotted entry verbatim.
+
+        The blob's content hash and the HMAC signature (under *this*
+        vault's key) are verified on restore, so a snapshot tampered with
+        at rest is rejected at load time, not at first fetch.
+        """
+        if self.content_hash(blob) != card.content_hash:
+            raise IntegrityError(
+                f"restored blob hash mismatch for {card.model_id}"
+            )
+        expect = self._sign(blob, card.to_json())
+        if not hmac.compare_digest(expect, signature):
+            raise IntegrityError(
+                f"restored signature mismatch for {card.model_id}"
+            )
+        self._entries[card.model_id] = VaultEntry(card, blob, signature)
+
     def cards(self) -> List[ModelCard]:
         """Every stored model's card (latest version each)."""
         return [e.card for e in self._entries.values()]

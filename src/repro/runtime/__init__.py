@@ -22,6 +22,8 @@ __all__ = [
     "build_hierarchical_continuum",
     "TraceRecording", "serialize_trace", "trace_digest",
     "record", "replay", "assert_replay", "run_scenario",
+    "SnapshotError", "snapshot_world", "restore_world", "snapshot_manifest",
+    "SNAPSHOT_VERSION",
 ]
 
 _LAZY = {
@@ -51,6 +53,11 @@ _LAZY = {
     "replay": "repro.runtime.trace",
     "assert_replay": "repro.runtime.trace",
     "run_scenario": "repro.runtime.trace",
+    "SnapshotError": "repro.runtime.snapshot",
+    "snapshot_world": "repro.runtime.snapshot",
+    "restore_world": "repro.runtime.snapshot",
+    "snapshot_manifest": "repro.runtime.snapshot",
+    "SNAPSHOT_VERSION": "repro.runtime.snapshot",
 }
 
 

@@ -88,6 +88,44 @@ class EventLoop:
 
         self.call_at(start_at, wake, label=name)
 
+    # -- snapshot/restore ----------------------------------------------------
+    def frontier(self) -> List:
+        """Pending (not yet fired) events as ``(t, seq, label, payload)``.
+
+        Returned in firing order.  Callbacks are *not* included — they are
+        closures; a snapshot can only persist events whose payload carries
+        enough information to reconstruct the callback (see
+        :mod:`repro.runtime.snapshot`).
+        """
+        return [(t, seq, label, payload)
+                for t, seq, label, _fn, payload in sorted(self._heap)]
+
+    def restore_event(self, t: float, seq: int, label: str,
+                      fn: Callable[[float], Any],
+                      payload: Optional[Dict] = None) -> None:
+        """Re-insert a snapshotted pending event with its *original* seq.
+
+        Unlike :meth:`call_at` this does not assign a fresh sequence
+        number — byte-identical resume requires restored events to fire
+        with the seq they were scheduled under before the snapshot.
+        """
+        heapq.heappush(self._heap, (t, seq, label, fn, payload))
+
+    def restore_progress(self, seq: int, events_processed: int) -> None:
+        """Restore the scheduling counters captured by a snapshot.
+
+        ``seq`` is the next sequence number to assign; events scheduled
+        after a restore must continue the pre-snapshot numbering or the
+        resumed trace diverges from the uninterrupted run.
+        """
+        self._seq = seq
+        self.events_processed = events_processed
+
+    @property
+    def next_seq(self) -> int:
+        """The sequence number the next scheduled event would receive."""
+        return self._seq
+
     # -- running -------------------------------------------------------------
     def step(self) -> bool:
         """Fire the single next event. Returns False when the queue is empty."""

@@ -613,6 +613,59 @@ class PartyPopulation:
             for i in range(self.num_parties)
         ]
 
+    # -- snapshot/restore ----------------------------------------------------
+    def export_state(self) -> dict:
+        """The cohort's full mutable state as host-side data (snapshot).
+
+        One bulk ``device_get`` brings back the stacked params *and* opt
+        state (the ``all_party_params`` pattern — never per-party slice
+        loops), plus the fused-step cursor and the population RNG's
+        bit-generator state.  The RNG state is what makes a restored
+        population's future epoch block schedules byte-identical to the
+        uninterrupted run's.
+        """
+        params, opt_state = jax.tree_util.tree_map(
+            np.asarray, jax.device_get((self.state.params,
+                                        self.state.opt_state))
+        )
+        return {
+            "params": params,
+            "opt_state": opt_state,
+            "cursor": int(self.state.cursor),
+            "rng_state": self._rng.bit_generator.state,
+            "num_parties": self.num_parties,
+            "party_ids": list(self.party_ids),
+        }
+
+    def restore_state(self, snap: dict) -> None:
+        """Install a state captured by :meth:`export_state`.
+
+        Params and opt state are re-placed on device (sharded over the
+        party axis when the population has a mesh) and the RNG resumes
+        from the captured bit-generator state.  The population must have
+        been constructed with the same shape/ids the snapshot was taken
+        from — data and schedules are reconstructed by the constructor;
+        only mutable state is restored.
+        """
+        if (snap["num_parties"] != self.num_parties
+                or list(snap["party_ids"]) != list(self.party_ids)):
+            raise ValueError(
+                f"snapshot is for {snap['num_parties']} parties "
+                f"{snap['party_ids'][:3]}..., this population has "
+                f"{self.num_parties} parties {self.party_ids[:3]}..."
+            )
+        params = self._put(
+            jax.tree_util.tree_map(jnp.asarray, snap["params"])
+        )
+        opt_state = self._put(
+            jax.tree_util.tree_map(jnp.asarray, snap["opt_state"])
+        )
+        self.state = CohortState(
+            params=params, opt_state=opt_state,
+            cursor=jnp.asarray(snap["cursor"], jnp.int32),
+        )
+        self._rng.bit_generator.state = snap["rng_state"]
+
     def make_card(self, i: int, accuracy: float) -> ModelCard:
         """Build party ``i``'s model card around a measured accuracy."""
         return ModelCard(

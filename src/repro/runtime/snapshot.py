@@ -1,0 +1,416 @@
+"""Versioned, content-hashed snapshots of the whole continuum world.
+
+A :func:`snapshot_world` archive captures everything a running
+edge-to-cloud continuum is, so a fresh process can
+:func:`restore_world` it and *continue* the simulation byte-identically
+(the restored run's trace, concatenated onto the snapshot's
+trace-so-far, equals the uninterrupted run's — the durability tests
+prove this against the PR-4 golden-trace machinery):
+
+* the :class:`~repro.core.incentives.IncentiveLedger` — accounts in
+  insertion order (float sums are order-sensitive), minted total,
+  flagged set, operator set — with ``sum(balances) == minted`` checked
+  on both sides of the boundary,
+* every :class:`~repro.core.vault.ModelVault` entry (edge vaults and
+  region caches): cards, signatures, and blobs, the blobs deduplicated
+  into a content-addressed ``blobs/<sha256>`` pool — a model cached in
+  three regions stores its bytes once,
+* the cloud :class:`~repro.core.discovery.DiscoveryService` index and
+  every region shard (cards + serving vault ids + query stats),
+* the :class:`~repro.runtime.topology.RegionalTopology`: region ids,
+  links, edge membership, locality stats, and operator accounts,
+* ``TrafficLog`` / ``FaultStats`` counters, fraud/membership sets,
+* the :class:`~repro.runtime.loop.EventLoop` frontier — pending events
+  whose payloads are *durable* (self-describing, e.g. the membership
+  events) are persisted with their original sequence numbers and
+  rescheduled on restore; a snapshot with non-durable in-flight
+  closures is refused (:class:`SnapshotError`) — snapshot at a cycle
+  barrier instead,
+* the :class:`~repro.runtime.clock.SimClock` time and the loop's
+  sequence counters (restored events must continue the numbering),
+* the :class:`~repro.runtime.faults.FaultPlan` (seeded and stateless,
+  so persisting its field dict is its entire cursor), and
+* device-resident :class:`~repro.runtime.population.CohortState`
+  pytrees, exported through one bulk ``device_get`` per cohort
+  (``all_party_params``-style) and re-placed sharded on restore.
+
+The archive is a deterministic uncompressed zip: entries are written in
+sorted name order with fixed timestamps, the manifest is canonical
+(key-sorted) JSON, and a ``digest`` entry carries the sha256 over every
+other entry — verified before anything is deserialized, so a snapshot
+tampered with or truncated at rest fails loudly at load time.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import io
+import json
+import zipfile
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.checkpoint.serde import params_from_bytes, params_to_bytes
+from repro.core.continuum import Continuum, FaultStats, Link, TrafficLog
+from repro.core.incentives import IncentiveLedger, LedgerEntry
+from repro.core.vault import ModelCard, ModelVault
+from repro.runtime.clock import SimClock
+from repro.runtime.faults import FaultPlan
+from repro.runtime.loop import EventLoop
+from repro.runtime.trace import serialize_trace
+
+SNAPSHOT_VERSION = 1
+_MANIFEST = "manifest.json"
+_DIGEST = "digest"
+
+
+class SnapshotError(Exception):
+    """The world cannot be snapshotted (or a snapshot failed integrity)."""
+
+
+# -- export helpers -----------------------------------------------------------
+
+def _link_dict(link: Link) -> Dict:
+    return {"bandwidth_mbps": link.bandwidth_mbps,
+            "latency_ms": link.latency_ms}
+
+
+def _vault_manifest(vault: ModelVault, pool: Dict[str, bytes]) -> List[Dict]:
+    """Entry manifests for one vault; blob bytes dedupe into ``pool``."""
+    out = []
+    for entry in vault.entries():
+        sha = hashlib.sha256(entry.blob).hexdigest()
+        pool[sha] = entry.blob
+        out.append({"card": entry.card.to_json(), "blob": sha,
+                    "sig": entry.signature.hex()})
+    return out
+
+
+def _discovery_manifest(svc) -> Dict:
+    return {"cards": [[card.to_json(), vault_id]
+                      for card, vault_id in svc.entries()],
+            "stats": dict(svc.stats)}
+
+
+def _ledger_manifest(ledger: IncentiveLedger) -> Dict:
+    return {
+        "config": {
+            "publish_reward": ledger.publish_reward,
+            "fetch_cost": ledger.fetch_cost,
+            "quality_bonus": ledger.quality_bonus,
+            "stipend": ledger.stipend,
+            "service_fee": ledger.service_fee,
+            "operator": ledger.operator,
+            "region_fee_share": ledger.region_fee_share,
+        },
+        # insertion order preserved: conservation sums floats in account
+        # order, and float addition is not associative
+        "accounts": [[name, dataclasses.asdict(entry)]
+                     for name, entry in ledger.accounts.items()],
+        "minted": ledger.minted,
+        "flagged": sorted(ledger.flagged),
+        "operators": sorted(ledger.operators),
+    }
+
+
+def snapshot_world(cont: Continuum, cohorts: Sequence = (),
+                   extra: Optional[Dict] = None) -> bytes:
+    """Serialize the entire world into a versioned, content-hashed archive.
+
+    ``cohorts`` are :class:`~repro.runtime.population.PartyPopulation`
+    instances whose device state should ride along (restored positionally
+    by :func:`restore_world`).  ``extra`` is a JSON-able dict for caller
+    state the world does not know about (e.g. a scenario's cycle cursor);
+    read it back with :func:`snapshot_manifest`.
+
+    Raises :class:`SnapshotError` if the event frontier holds any
+    non-durable pending event — closures cannot cross a process
+    boundary, so snapshot at a quiescent point (or with only durable
+    membership events pending).
+    """
+    loop = cont.loop
+    frontier = []
+    for t, seq, label, payload in loop.frontier():
+        if not (payload and payload.get("durable")):
+            raise SnapshotError(
+                f"cannot snapshot: pending event {label!r} at t={t} has no "
+                "durable payload; run the loop to a barrier first"
+            )
+        frontier.append([t, seq, label, payload])
+
+    pool: Dict[str, bytes] = {}
+    edges = []
+    for sid in sorted(cont.edges):
+        edge = cont.edges[sid]
+        region_id = None
+        if cont.topology is not None:
+            for rid in sorted(cont.topology.regions):
+                if sid in cont.topology.regions[rid].edge_ids:
+                    region_id = rid
+                    break
+        edges.append({
+            "server_id": sid,
+            "region": region_id,
+            "link_up": _link_dict(edge.link_up),
+            "entries": _vault_manifest(edge.vault, pool),
+        })
+
+    topology = None
+    if cont.topology is not None:
+        topo = cont.topology
+        regions = []
+        for rid in sorted(topo.regions):
+            region = topo.regions[rid]
+            regions.append({
+                "region_id": rid,
+                "link_up": _link_dict(region.link_up),
+                "link_local": _link_dict(region.link_local),
+                "edge_ids": list(region.edge_ids),
+                "operator": region.operator,
+                "stats": region.stats.as_dict(),
+                "cache": _vault_manifest(region.cache, pool),
+                "shard": _discovery_manifest(region.shard),
+            })
+        topology = {
+            "regions": regions,
+            "default_link_up": (_link_dict(topo._link_up)
+                                if topo._link_up is not None else None),
+            "default_link_local": (_link_dict(topo._link_local)
+                                   if topo._link_local is not None else None),
+        }
+
+    cohort_meta = []
+    cohort_blobs = []
+    for pop in cohorts:
+        state = pop.export_state()
+        blob = params_to_bytes({"params": state["params"],
+                                "opt_state": state["opt_state"]})
+        cohort_blobs.append(blob)
+        cohort_meta.append({
+            "num_parties": state["num_parties"],
+            "party_ids": state["party_ids"],
+            "cursor": state["cursor"],
+            "rng_state": state["rng_state"],
+        })
+
+    manifest = {
+        "version": SNAPSHOT_VERSION,
+        "clock": {"now": cont.clock.now()},
+        "loop": {"seq": loop.next_seq,
+                 "events_processed": loop.events_processed},
+        "trace": serialize_trace(loop.log).decode("utf-8"),
+        "frontier": frontier,
+        "ledger": (_ledger_manifest(cont.ledger)
+                   if cont.ledger is not None else None),
+        "discovery": _discovery_manifest(cont.discovery),
+        "edges": edges,
+        "topology": topology,
+        "traffic": cont.traffic.as_dict(),
+        "fault_stats": cont.fault_stats.as_dict(),
+        "denied_fetches": cont.denied_fetches,
+        "frauded": sorted([m, v] for m, v in cont._frauded),
+        "members": sorted(cont.members),
+        "retired": sorted(cont.retired),
+        "membership_refusals": cont.membership_refusals,
+        "faults": (cont.faults.to_dict()
+                   if cont.faults is not None else None),
+        "cohorts": cohort_meta,
+        "extra": extra or {},
+    }
+
+    entries = {_MANIFEST: json.dumps(manifest, sort_keys=True,
+                                     separators=(",", ":")).encode("utf-8")}
+    for sha, blob in pool.items():
+        entries[f"blobs/{sha}"] = blob
+    for i, blob in enumerate(cohort_blobs):
+        entries[f"cohort_{i}.npz"] = blob
+    entries[_DIGEST] = _entries_digest(entries).encode("utf-8")
+
+    buf = io.BytesIO()
+    with zipfile.ZipFile(buf, "w", zipfile.ZIP_STORED) as zf:
+        for name in sorted(entries):
+            info = zipfile.ZipInfo(name, date_time=(1980, 1, 1, 0, 0, 0))
+            zf.writestr(info, entries[name])
+    return buf.getvalue()
+
+
+def _entries_digest(entries: Dict[str, bytes]) -> str:
+    """sha256 over every (name, content) pair except the digest itself."""
+    h = hashlib.sha256()
+    for name in sorted(entries):
+        if name == _DIGEST:
+            continue
+        h.update(name.encode("utf-8"))
+        h.update(b"\x00")
+        h.update(entries[name])
+        h.update(b"\x00")
+    return h.hexdigest()
+
+
+def _read_archive(data: bytes) -> Dict[str, bytes]:
+    """Load + integrity-verify a snapshot's entries."""
+    try:
+        with zipfile.ZipFile(io.BytesIO(data)) as zf:
+            entries = {name: zf.read(name) for name in zf.namelist()}
+    except zipfile.BadZipFile as exc:
+        raise SnapshotError(f"not a snapshot archive: {exc}") from exc
+    if _DIGEST not in entries or _MANIFEST not in entries:
+        raise SnapshotError("snapshot archive is missing manifest/digest")
+    want = entries[_DIGEST].decode("utf-8")
+    got = _entries_digest(entries)
+    if got != want:
+        raise SnapshotError(
+            f"snapshot digest mismatch: archive says {want[:12]}..., "
+            f"contents hash to {got[:12]}... (corrupt or tampered)"
+        )
+    return entries
+
+
+def snapshot_manifest(data: bytes) -> Dict:
+    """The (integrity-verified) manifest of a snapshot archive.
+
+    Use this to inspect a snapshot — version, clock, trace-so-far, the
+    caller ``extra`` dict — without rebuilding the world.
+    """
+    return json.loads(_read_archive(data)[_MANIFEST].decode("utf-8"))
+
+
+# -- restore ------------------------------------------------------------------
+
+def _restore_ledger(m: Dict) -> IncentiveLedger:
+    ledger = IncentiveLedger(**m["config"])
+    ledger.operators = set(m["operators"])
+    ledger.accounts.clear()
+    for name, fields in m["accounts"]:
+        ledger.accounts[name] = LedgerEntry(**fields)
+    ledger.minted = m["minted"]
+    ledger.flagged = set(m["flagged"])
+    return ledger
+
+
+def _restore_vault(vault: ModelVault, entries: List[Dict],
+                   pool: Dict[str, bytes]) -> None:
+    for e in entries:
+        card = ModelCard.from_json(e["card"])
+        blob = pool.get(e["blob"])
+        if blob is None:
+            raise SnapshotError(f"snapshot blob {e['blob'][:12]}... missing "
+                                f"for {card.model_id}")
+        vault.restore_entry(card, blob, bytes.fromhex(e["sig"]))
+
+
+def _restore_discovery(svc, m: Dict) -> None:
+    for card_json, vault_id in m["cards"]:
+        svc.register(ModelCard.from_json(card_json), vault_id)
+    svc.stats = dict(m["stats"])
+
+
+def restore_world(data: bytes, *, verifier=None,
+                  cohorts: Sequence = ()) -> Tuple[Continuum, Dict]:
+    """Rebuild a continuum (and cohorts) from a snapshot archive.
+
+    Returns ``(continuum, extra)`` where ``extra`` is the caller dict
+    :func:`snapshot_world` stored.  ``verifier`` re-wires the
+    verify-on-fetch hook (closures do not survive the archive);
+    ``cohorts`` are freshly-constructed
+    :class:`~repro.runtime.population.PartyPopulation` instances (same
+    shape/seed as at snapshot time) whose device state is restored
+    positionally.
+
+    The restored world continues *byte-identically*: the event loop's
+    sequence counters resume the pre-snapshot numbering, pending durable
+    events are rescheduled under their original sequence numbers, and
+    the ledger's account ordering (float-sum order) is preserved.
+    Conservation (``sum(balances) == minted``) is asserted before the
+    world is handed back.
+    """
+    entries = _read_archive(data)
+    m = json.loads(entries[_MANIFEST].decode("utf-8"))
+    if m["version"] != SNAPSHOT_VERSION:
+        raise SnapshotError(f"snapshot version {m['version']} is not "
+                            f"supported (this build reads "
+                            f"{SNAPSHOT_VERSION})")
+    pool = {name[len("blobs/"):]: blob for name, blob in entries.items()
+            if name.startswith("blobs/")}
+
+    ledger = _restore_ledger(m["ledger"]) if m["ledger"] else None
+    faults = FaultPlan.from_dict(dict(m["faults"])) if m["faults"] else None
+    clock = SimClock(start=m["clock"]["now"])
+    loop = EventLoop(clock)
+    cont = Continuum(loop=loop, ledger=ledger, faults=faults,
+                     verifier=verifier)
+
+    if m["topology"] is not None:
+        from repro.runtime.topology import RegionalTopology
+
+        tm = m["topology"]
+        topo = RegionalTopology(
+            region_ids=[r["region_id"] for r in tm["regions"]],
+            clock=clock,
+            link_up=(Link(**tm["default_link_up"])
+                     if tm["default_link_up"] else None),
+            link_local=(Link(**tm["default_link_local"])
+                        if tm["default_link_local"] else None),
+        )
+        for rm in tm["regions"]:
+            region = topo.regions[rm["region_id"]]
+            region.link_up = Link(**rm["link_up"])
+            region.link_local = Link(**rm["link_local"])
+        cont.attach_topology(topo)
+
+    edge_regions = {e["server_id"]: e for e in m["edges"]}
+    for sid in sorted(edge_regions):
+        em = edge_regions[sid]
+        edge = cont.add_edge_server(sid, link_up=Link(**em["link_up"]),
+                                    region=em["region"])
+        _restore_vault(edge.vault, em["entries"], pool)
+
+    _restore_discovery(cont.discovery, m["discovery"])
+    if m["topology"] is not None:
+        for rm in m["topology"]["regions"]:
+            region = cont.topology.regions[rm["region_id"]]
+            _restore_vault(region.cache, rm["cache"], pool)
+            _restore_discovery(region.shard, rm["shard"])
+            region.stats = type(region.stats)(**rm["stats"])
+            if list(region.edge_ids) != list(rm["edge_ids"]):
+                raise SnapshotError(
+                    f"region {rm['region_id']} edge set diverged on "
+                    f"restore: {region.edge_ids} != {rm['edge_ids']}"
+                )
+
+    cont.traffic = TrafficLog(**m["traffic"])
+    cont.fault_stats = FaultStats(**m["fault_stats"])
+    cont.denied_fetches = m["denied_fetches"]
+    cont._frauded = {(mid, ver) for mid, ver in m["frauded"]}
+    cont.members = set(m["members"])
+    cont.retired = set(m["retired"])
+    cont.membership_refusals = m["membership_refusals"]
+
+    loop.restore_progress(m["loop"]["seq"], m["loop"]["events_processed"])
+    for t, seq, label, payload in m["frontier"]:
+        if payload.get("durable") != "membership":
+            raise SnapshotError(
+                f"frontier event {label!r} has unknown durable kind "
+                f"{payload.get('durable')!r}"
+            )
+        loop.restore_event(
+            t, seq, label,
+            lambda now, p=payload: cont.membership_handler(p), payload,
+        )
+
+    if len(cohorts) != len(m["cohorts"]):
+        raise SnapshotError(f"snapshot has {len(m['cohorts'])} cohorts, "
+                            f"caller passed {len(cohorts)}")
+    for i, (pop, cm) in enumerate(zip(cohorts, m["cohorts"])):
+        tree = params_from_bytes(entries[f"cohort_{i}.npz"])
+        pop.restore_state({
+            "params": tree["params"],
+            "opt_state": tree["opt_state"],
+            "cursor": cm["cursor"],
+            "rng_state": cm["rng_state"],
+            "num_parties": cm["num_parties"],
+            "party_ids": cm["party_ids"],
+        })
+
+    if ledger is not None:
+        ledger.assert_conserved()
+    return cont, m["extra"]

@@ -36,8 +36,9 @@ discovery ranking.
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence
 
 from repro.core.continuum import DEVICE_TO_EDGE, Link, _stable_bucket
 from repro.core.discovery import DiscoveryService
@@ -136,16 +137,27 @@ class RegionalTopology:
     function of the party id and the topology shape.
     """
 
-    def __init__(self, n_regions: int, clock: Optional[SimClock] = None,
+    def __init__(self, n_regions: Optional[int] = None,
+                 clock: Optional[SimClock] = None,
                  link_up: Optional[Link] = None,
-                 link_local: Optional[Link] = None):
-        if n_regions < 1:
-            raise ValueError(f"need at least one region, got {n_regions}")
+                 link_local: Optional[Link] = None,
+                 region_ids: Optional[Sequence[str]] = None):
+        if (n_regions is None) == (region_ids is None):
+            raise ValueError("pass exactly one of n_regions/region_ids")
+        if region_ids is not None:
+            ids = list(region_ids)
+            if len(set(ids)) != len(ids):
+                raise ValueError(f"duplicate region ids: {ids}")
+        else:
+            ids = [f"rg{r:03d}" for r in range(n_regions)]
+        if not ids:
+            raise ValueError("need at least one region")
         self.clock = clock
+        self._link_up = link_up
+        self._link_local = link_local
         self.regions: Dict[str, Region] = {}
         self._region_order: List[str] = []
-        for r in range(n_regions):
-            rid = f"rg{r:03d}"
+        for rid in ids:
             self.regions[rid] = Region(rid, clock=clock, link_up=link_up,
                                        link_local=link_local)
             self._region_order.append(rid)
@@ -196,6 +208,40 @@ class RegionalTopology:
         region.edge_ids.append(server_id)
         region.edge_ids.sort()
         region.shard.attach_vault(vault)
+        return region
+
+    # -- elastic membership --------------------------------------------------
+    def add_region(self, region_id: str) -> Region:
+        """Grow the topology by one (empty) region.
+
+        Placement is a pure function of the sorted region-id list, so
+        adding a region deterministically re-homes the parties whose
+        sha256 bucket lands on the grown list — the same ids always move,
+        on every host, on every replay.  The new region shares the
+        topology's clock and default links; the caller registers its
+        operator account and edge servers.
+        """
+        if region_id in self.regions:
+            raise ValueError(f"region {region_id!r} already exists")
+        region = Region(region_id, clock=self.clock, link_up=self._link_up,
+                        link_local=self._link_local)
+        self.regions[region_id] = region
+        bisect.insort(self._region_order, region_id)
+        return region
+
+    def remove_region(self, region_id: str) -> Region:
+        """Drop a region from placement (the drain's final step).
+
+        Returns the removed :class:`Region` so the caller can migrate or
+        retire its contents; refuses to remove the last region (the
+        topology would have nowhere to place anyone).
+        """
+        if region_id not in self.regions:
+            raise KeyError(f"unknown region {region_id!r}")
+        if len(self.regions) <= 1:
+            raise ValueError("cannot remove the last region")
+        region = self.regions.pop(region_id)
+        self._region_order.remove(region_id)
         return region
 
     def deregister_everywhere(self, model_id: str) -> int:

@@ -30,13 +30,20 @@ serialized form:
   ``chaos_exchange``        the full jax exchange economy under a fault
                             plan (used for in-process record/replay tests
                             and the chaos benchmark)
+  ``durable_world``         numpy-only chaos+hierarchy run with elastic
+                            membership (admits/retires, region add/drain)
+                            structured as cycle barriers, so the world can
+                            be snapshotted between cycles and restored in
+                            a fresh process (:mod:`repro.runtime.snapshot`)
+                            with a byte-identical continuation — the
+                            durability golden fixture
 """
 from __future__ import annotations
 
 import dataclasses
 import hashlib
 import json
-from typing import Callable, Dict, Sequence
+from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -384,6 +391,215 @@ def hierarchy_microworld(plan: FaultPlan, parties: int = 16, cycles: int = 2,
     assert counters["local"] + counters["escalated"] == counters["hits"]
     assert totals.local_hits + totals.escalations >= counters["hits"]
     return loop
+
+
+def durable_verifier(params, card):
+    """Stateless verify-on-fetch used by the durable scenario.
+
+    The scripted truth rides inside the *params* (an ``acc`` leaf), so the
+    verifier is a pure function of the model — exactly the contract the
+    continuum's verify memo assumes (measured accuracy is a property of
+    the weights, not of the card).  Byzantine inflation rewrites only the
+    card's listed ``accuracy``, so inflated cards get caught like a real
+    re-evaluation would catch them, with no process-local verifier state
+    for a snapshot to capture.
+    """
+    if not isinstance(params, dict) or "acc" not in params:
+        return None
+    return float(np.asarray(params["acc"]))
+
+
+def durable_cycle_len(parties: int) -> float:
+    """Smallest cycle window that lets every wave drain before the barrier.
+
+    Publishes start at ``window + 1.0`` with a 1.7 s stride and the last
+    query wave starts at ``0.75 * len``, so the window must out-run the
+    query stride plus the worst-case (straggler x delay) transfer tail.
+    """
+    return max(120.0, 5.0 * parties + 60.0)
+
+
+def durable_party_ids(parties: int, cycle: int) -> List[str]:
+    """Every id that schedules work during ``cycle``.
+
+    The base cohort plus every party admitted so far (``px001``..).
+    Already-retired ids are deliberately *included*: their publishes and
+    fetches must hit the membership gates in-trace.
+    """
+    extras = [f"px{k:03d}" for k in range(1, cycle + 1)]
+    return [f"p{i:03d}" for i in range(parties)] + extras
+
+
+def _durable_index(pid: str, parties: int) -> int:
+    """Stable accuracy/params index for base (``pNNN``) and admitted
+    (``pxNNN``) ids — a pure function so a restored process rebuilds the
+    exact same schedule."""
+    if pid.startswith("px"):
+        return parties + int(pid[2:])
+    return int(pid[1:])
+
+
+def _durable_params(idx: int, acc: float) -> Dict[str, np.ndarray]:
+    """Per-(party, cycle) weights carrying their own scripted accuracy.
+
+    The ``acc`` leaf makes the params differ across cycles (so memo keys
+    never collide when a re-homed party republishes version 1 into a new
+    vault) and gives :func:`durable_verifier` something to measure.
+    """
+    return {"w": np.full((4 + idx % 3, 3), float(idx), np.float32),
+            "b": np.arange(3, dtype=np.float32) * float(idx),
+            "acc": np.asarray(acc, np.float32)}
+
+
+def build_durable_world(plan: FaultPlan, regions: int = 3,
+                        edges_per_region: int = 2):
+    """A hierarchical continuum wired for the durable scenario.
+
+    Called identically by the recording process and by any process that
+    restores a snapshot mid-run (:func:`repro.runtime.snapshot.restore_world`
+    only needs :func:`durable_verifier` re-attached — everything else is
+    state, and state travels in the archive).
+    """
+    from repro.core.incentives import IncentiveLedger
+    from repro.runtime.topology import build_hierarchical_continuum
+
+    return build_hierarchical_continuum(
+        regions, edges_per_region, ledger=IncentiveLedger(), faults=plan,
+        verifier=durable_verifier,
+    )
+
+
+def schedule_durable_cycle(cont, plan: FaultPlan, parties: int, cycle: int,
+                           cycles: int, cycle_len_s: float,
+                           counters: Optional[Dict[str, int]] = None) -> None:
+    """Schedule cycle ``cycle``'s full workload onto the loop.
+
+    Three groups, in a fixed order so seq numbering is reproducible:
+
+    1. membership for the *next* cycle boundary (admit ``px{cycle+1}``,
+       retire ``p{cycle}``, and the one-shot region add/drain) — these
+       stay pending past this cycle's last data event, which is exactly
+       what makes a barrier snapshot exercise the durable frontier;
+    2. one publish per known id (retired ids get refused in-trace);
+    3. two query waves, the second running against caches the first
+       seeded.
+    """
+    from repro.core.discovery import ModelQuery
+    from repro.core.vault import ModelCard
+
+    if counters is None:
+        counters = {"hits": 0, "misses": 0, "denied": 0, "failed": 0,
+                    "refused_pub": 0, "refused_query": 0}
+    loop = cont.loop
+    window = cycle * cycle_len_s
+
+    nxt = cycle + 1
+    if nxt < cycles:
+        t_base = nxt * cycle_len_s
+        now = cont.clock.now()
+        cont.admit_party(f"px{nxt:03d}", delay=t_base + 0.1 - now)
+        if cycle < parties:
+            cont.retire_party(f"p{cycle:03d}", delay=t_base + 0.2 - now)
+        if nxt == 1:
+            cont.add_region("rgx00", n_edges=1, delay=t_base + 0.3 - now)
+        elif nxt == 2:
+            cont.drain_region("rgx00", delay=t_base + 0.3 - now)
+
+    ids = durable_party_ids(parties, cycle)
+
+    for pid in ids:
+        i = _durable_index(pid, parties)
+        t_pub = window + 1.0 + 1.7 * i
+        if not plan.party_online(pid, t_pub):
+            continue
+        acc = scripted_accuracy(i, cycle)
+
+        def do_publish(now, pid=pid, i=i, acc=acc):
+            if pid in cont.retired:
+                counters["refused_pub"] += 1
+            card = ModelCard(
+                model_id=f"{pid}/toy", task="durable", arch="toy",
+                owner=pid, num_params=16,
+                metrics={"accuracy": acc, "per_class": {}},
+            )
+            cont.publish_async(pid, _durable_params(i, acc), card)
+
+        loop.call_at(t_pub, do_publish, label=f"{pid} publish c{cycle}")
+
+    def schedule_queries(t0: float, stride: float):
+        for pid in ids:
+            i = _durable_index(pid, parties)
+            t_query = t0 + stride * i
+            if not plan.party_online(pid, t_query):
+                continue
+            acc = scripted_accuracy(i, cycle)
+
+            def do_query(now, pid=pid, acc=acc):
+                if pid in cont.retired:
+                    counters["refused_query"] += 1
+
+                def done(hit, _now):
+                    counters["hits" if hit is not None else "misses"] += 1
+
+                cont.discover_and_fetch_async(
+                    ModelQuery(task="durable", min_accuracy=acc + 0.02,
+                               exclude_owners=(pid,)),
+                    done, requester=pid,
+                    on_denied=lambda _now: counters.__setitem__(
+                        "denied", counters["denied"] + 1),
+                    on_fail=lambda _r, _now: counters.__setitem__(
+                        "failed", counters["failed"] + 1),
+                )
+
+            loop.call_at(t_query, do_query, label=f"{pid} query c{cycle}")
+
+    schedule_queries(window + cycle_len_s * 0.45, 1.3)
+    schedule_queries(window + cycle_len_s * 0.75, 1.1)
+
+
+def run_durable_cycle(cont, cycle: int, cycle_len_s: float) -> None:
+    """Run cycle ``cycle`` to its barrier and check conservation.
+
+    ``run_until`` (not quiescence) — next-cycle membership events must
+    stay pending so a barrier snapshot carries a non-empty durable
+    frontier.
+    """
+    cont.loop.run_until((cycle + 1) * cycle_len_s)
+    cont.ledger.assert_conserved()
+
+
+@scenario("durable_world")
+def durable_world(plan: FaultPlan, parties: int = 12, cycles: int = 3,
+                  regions: int = 3, edges_per_region: int = 2,
+                  cycle_len_s: Optional[float] = None) -> EventLoop:
+    """Chaos + hierarchy + elastic membership, barriered for snapshots.
+
+    Each cycle publishes and double-queries from every known id, while the
+    membership plane admits one party, retires one, and (cycles 1/2) adds
+    then drains a region ``rgx00`` — re-homing placements and escrowing
+    balances ledger-conservingly.  The cycle structure is exposed piecewise
+    (:func:`build_durable_world` / :func:`schedule_durable_cycle` /
+    :func:`run_durable_cycle`) so a snapshot taken at any barrier can be
+    restored in a fresh process and continued to a byte-identical trace.
+    """
+    if cycle_len_s is None:
+        cycle_len_s = durable_cycle_len(parties)
+    cont = build_durable_world(plan, regions, edges_per_region)
+    counters = {"hits": 0, "misses": 0, "denied": 0, "failed": 0,
+                "refused_pub": 0, "refused_query": 0}
+    for cycle in range(cycles):
+        schedule_durable_cycle(cont, plan, parties, cycle, cycles,
+                               cycle_len_s, counters)
+        run_durable_cycle(cont, cycle, cycle_len_s)
+    cont.loop.run_to_quiescence()
+    cont.ledger.assert_conserved()
+    assert counters["failed"] == cont.fault_stats.refunds
+    # on_denied fires for both credit denials and membership refusals;
+    # the continuum books them in separate counters
+    assert counters["denied"] == cont.denied_fetches + counters["refused_query"]
+    assert cont.membership_refusals == (counters["refused_pub"]
+                                        + counters["refused_query"])
+    return cont.loop
 
 
 @scenario("chaos_exchange")

@@ -1,0 +1,259 @@
+"""Checkpoint serde: the structured-layout round-trip fixes (lists/tuples,
+None, empty containers, "/"-keys, extension dtypes), legacy wire-format
+stability, numeric step selection, corrupt-archive recovery, and atomic
+saves."""
+import io
+import json
+import pathlib
+import zipfile
+
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpoint.serde import (params_from_bytes, params_to_bytes,
+                                    restore_checkpoint, save_checkpoint)
+
+try:
+    import hypothesis
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover - property tests just skip
+    hypothesis = None
+
+try:
+    import ml_dtypes
+except ImportError:  # pragma: no cover
+    ml_dtypes = None
+
+
+def _assert_same_tree(a, b):
+    assert jax.tree_util.tree_structure(a) == jax.tree_util.tree_structure(b)
+    for la, lb in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)):
+        la, lb = np.asarray(la), np.asarray(lb)
+        assert la.dtype == lb.dtype
+        assert la.shape == lb.shape
+        np.testing.assert_array_equal(la, lb)
+
+
+def _roundtrip(tree):
+    back = params_from_bytes(params_to_bytes(tree))
+    _assert_same_tree(tree, back)
+    return back
+
+
+# -- the regression: list/tuple nodes must come back as lists/tuples ----------
+
+
+def test_list_and_tuple_nodes_round_trip_exactly():
+    """The old path-keyed layout silently rebuilt list/tuple nodes as dicts
+    keyed by stringified indices; the stored treedef fixes that."""
+    tree = {
+        "layers": [
+            {"w": np.ones((2, 3), np.float32)},
+            {"w": np.zeros((3, 4), np.float32)},
+        ],
+        "opt": ("sgd", np.asarray(0.1, np.float32)),
+    }
+    back = _roundtrip(tree)
+    assert isinstance(back["layers"], list)
+    assert isinstance(back["opt"], tuple)
+
+
+def test_opt_state_shaped_tree_round_trips():
+    """The exact shape that bit the snapshot path: an sgd opt state whose
+    momentum slot is an *empty tuple*."""
+    tree = {
+        "params": {"w": np.arange(6, dtype=np.float32).reshape(2, 3)},
+        "opt_state": {"step": np.asarray(3, np.int32), "mom": ()},
+    }
+    back = _roundtrip(tree)
+    assert back["opt_state"]["mom"] == ()
+
+
+def test_none_empty_dict_and_scalars():
+    tree = {
+        "none": None,
+        "empty": {},
+        "scalar_f32": np.float32(1.5),
+        "scalar_i32": np.asarray(7, np.int32),
+    }
+    back = _roundtrip(tree)
+    assert back["none"] is None
+    assert back["empty"] == {}
+    assert np.asarray(back["scalar_f32"]).shape == ()
+
+
+def test_bare_leaf_and_top_level_sequence_roots():
+    _roundtrip(np.arange(5, dtype=np.float32))
+    _roundtrip([np.ones(2, np.float32), (np.zeros(3, np.int32), None)])
+    _roundtrip({})
+
+
+def test_keys_containing_slashes_survive():
+    """'/' is the legacy layout's path separator, so such keys must route
+    through the structured layout instead of being split on restore."""
+    tree = {"a/b": np.ones(3, np.float32), "c": {"d/e/f": np.zeros(2)}}
+    _roundtrip(tree)
+
+
+def test_reserved_spec_key_forces_structured_layout():
+    """A plain-looking dict using the reserved ``__pytree__`` key would be
+    misread as a structured archive if written legacy-style."""
+    tree = {"__pytree__": np.ones(2, np.float32), "x": np.zeros(1)}
+    _roundtrip(tree)
+
+
+@pytest.mark.skipif(ml_dtypes is None, reason="ml_dtypes not installed")
+def test_bfloat16_round_trips_with_dtype_preserved():
+    tree = {"w": np.arange(6, dtype=ml_dtypes.bfloat16).reshape(2, 3),
+            "b": np.ones(3, np.float32)}
+    back = _roundtrip(tree)
+    assert np.asarray(back["w"]).dtype == ml_dtypes.bfloat16
+
+
+def test_mixed_dtypes_round_trip():
+    tree = {"f32": np.linspace(0, 1, 4, dtype=np.float32),
+            "i32": np.arange(4, dtype=np.int32),
+            "f64": np.linspace(0, 1, 3),
+            "u8": np.arange(3, dtype=np.uint8)}
+    _roundtrip(tree)
+
+
+# -- legacy wire format: plain trees keep their historical bytes ---------------
+
+
+def test_plain_tree_keeps_legacy_path_keyed_layout():
+    """Plain nested dicts are the vault wire format (content-hashed), so
+    they must keep writing the exact legacy npz layout."""
+    tree = {"layer": {"w": np.ones((2, 3), np.float32),
+                      "b": np.zeros(3, np.float32)}}
+    blob = params_to_bytes(tree)
+    with zipfile.ZipFile(io.BytesIO(blob)) as zf:
+        assert sorted(zf.namelist()) == ["layer/b.npy", "layer/w.npy"]
+    # and byte-for-byte what a direct legacy savez would have produced
+    # (jax flattens dict keys in sorted order, so 'b' precedes 'w')
+    buf = io.BytesIO()
+    np.savez(buf, **{"layer/b": tree["layer"]["b"], "layer/w": tree["layer"]["w"]})
+    assert blob == buf.getvalue()
+    _assert_same_tree(tree, params_from_bytes(blob))
+
+
+def test_old_legacy_archives_still_readable():
+    buf = io.BytesIO()
+    np.savez(buf, **{"enc/w": np.ones((2, 2), np.float32),
+                     "enc/b": np.zeros(2, np.float32),
+                     "head": np.ones(4, np.float32)})
+    back = params_from_bytes(buf.getvalue())
+    assert set(back) == {"enc", "head"}
+    assert set(back["enc"]) == {"w", "b"}
+
+
+def test_serialization_is_deterministic():
+    tree = {"a": [np.ones(2, np.float32), None], "b": (np.zeros(1),)}
+    assert params_to_bytes(tree) == params_to_bytes(tree)
+
+
+# -- checkpoint step selection + corruption recovery ---------------------------
+
+
+def _save(tmp, step, val):
+    return save_checkpoint(str(tmp), step,
+                           {"w": np.full(2, float(val), np.float32)},
+                           extra={"val": val})
+
+
+def test_latest_is_numeric_not_lexicographic(tmp_path):
+    """'ckpt_9.npz' > 'ckpt_00000010.npz' lexicographically; the resolver
+    must still pick step 10."""
+    _save(tmp_path, 10, 10)
+    blob = params_to_bytes({"w": np.full(2, 9.0, np.float32)})
+    (tmp_path / "ckpt_9.npz").write_bytes(blob)
+    params, meta = restore_checkpoint(str(tmp_path))
+    assert float(params["w"][0]) == 10.0
+    assert meta["step"] == 10
+
+
+def test_missing_step_names_requested_and_available(tmp_path):
+    _save(tmp_path, 3, 3)
+    _save(tmp_path, 7, 7)
+    with pytest.raises(FileNotFoundError) as ei:
+        restore_checkpoint(str(tmp_path), step=5)
+    assert "step 5" in str(ei.value)
+    assert "[3, 7]" in str(ei.value)
+
+
+def test_empty_directory_raises_readably(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        restore_checkpoint(str(tmp_path))
+
+
+def test_latest_skips_corrupt_archive(tmp_path):
+    _save(tmp_path, 1, 1)
+    _save(tmp_path, 2, 2)
+    (tmp_path / "ckpt_00000002.npz").write_bytes(b"not an npz at all")
+    params, meta = restore_checkpoint(str(tmp_path))
+    assert meta["step"] == 1
+
+
+def test_explicit_corrupt_step_raises_value_error(tmp_path):
+    _save(tmp_path, 4, 4)
+    (tmp_path / "ckpt_00000004.npz").write_bytes(b"\x00" * 16)
+    with pytest.raises(ValueError, match="corrupt"):
+        restore_checkpoint(str(tmp_path), step=4)
+
+
+def test_all_corrupt_raises_with_skipped_list(tmp_path):
+    _save(tmp_path, 1, 1)
+    (tmp_path / "ckpt_00000001.npz").write_bytes(b"junk")
+    with pytest.raises(FileNotFoundError, match="skipped corrupt"):
+        restore_checkpoint(str(tmp_path))
+
+
+def test_saves_are_atomic_and_leave_no_tmp_files(tmp_path):
+    _save(tmp_path, 12, 12)
+    names = sorted(p.name for p in tmp_path.iterdir())
+    assert names == ["ckpt_00000012.json", "ckpt_00000012.npz"]
+    params, meta = restore_checkpoint(str(tmp_path), step=12)
+    assert meta == {"step": 12, "val": 12}
+
+
+# -- hypothesis property tests -------------------------------------------------
+
+if hypothesis is not None:
+    _leaf = st.one_of(
+        st.integers(1, 5).map(
+            lambda n: np.linspace(-1, 1, n, dtype=np.float32)),
+        st.integers(1, 4).map(lambda n: np.arange(n, dtype=np.int32)),
+        st.just(np.float32(0.5)),  # 0-d scalar
+        st.just(np.asarray(3, np.int32)),
+    )
+    _key = st.text(
+        alphabet=st.characters(whitelist_categories=("Ll", "Nd"),
+                               whitelist_characters="/_."),
+        min_size=1, max_size=8)
+    _node = st.recursive(
+        st.one_of(_leaf, st.none()),
+        lambda ch: st.one_of(
+            st.dictionaries(_key, ch, max_size=3),
+            st.lists(ch, max_size=3),
+            st.lists(ch, max_size=3).map(tuple),
+        ),
+        max_leaves=10,
+    )
+
+    @given(tree=_node)
+    @settings(max_examples=50, deadline=None)
+    def test_any_tree_round_trips(tree):
+        """Any mix of dicts (slashes allowed), lists, tuples, None, empty
+        containers, and 0-d/1-d leaves of several dtypes round-trips with
+        structure and dtypes intact."""
+        _roundtrip(tree)
+
+    if ml_dtypes is not None:
+        _bf16 = st.integers(1, 6).map(
+            lambda n: np.linspace(-2, 2, n).astype(ml_dtypes.bfloat16))
+
+        @given(leaves=st.lists(_bf16, min_size=1, max_size=4))
+        @settings(max_examples=20, deadline=None)
+        def test_bf16_trees_round_trip(leaves):
+            _roundtrip({"stack": leaves, "lone": leaves[0]})

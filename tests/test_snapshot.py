@@ -1,0 +1,402 @@
+"""Durable continuum: full-world snapshot/restore (byte-identical resume,
+per-subsystem state equality, archive integrity) and elastic membership
+(admit/retire, region add/drain, conservation across every event)."""
+import io
+import json
+import pathlib
+import subprocess
+import sys
+import zipfile
+
+import numpy as np
+import pytest
+
+from repro.core.continuum import Continuum
+from repro.core.discovery import ModelQuery
+from repro.core.incentives import OPERATOR, IncentiveLedger
+from repro.core.vault import ModelCard
+from repro.runtime.faults import FaultPlan
+from repro.runtime.snapshot import (SnapshotError, restore_world,
+                                    snapshot_manifest, snapshot_world)
+from repro.runtime.topology import build_hierarchical_continuum
+from repro.runtime.trace import (TraceRecording, build_durable_world,
+                                 durable_cycle_len, durable_verifier,
+                                 run_durable_cycle, schedule_durable_cycle,
+                                 serialize_trace)
+
+GOLDEN = pathlib.Path(__file__).parent / "golden" / "durable_world.json"
+
+
+def _fixture_plan():
+    rec = TraceRecording.load(GOLDEN)
+    return FaultPlan.from_dict(rec.plan), rec
+
+
+def _run_cycles(cont, parties, cycles, clen, start=0):
+    for c in range(start, cycles):
+        schedule_durable_cycle(cont, cont.faults, parties, c, cycles, clen)
+        run_durable_cycle(cont, c, clen)
+    cont.loop.run_to_quiescence()
+    cont.ledger.assert_conserved()
+    return serialize_trace(cont.loop.log)
+
+
+def _world_at_barrier(barrier, parties=12, cycles=3):
+    """The fixture world run up to ``barrier`` cycles, ready to snapshot."""
+    plan, rec = _fixture_plan()
+    clen = durable_cycle_len(parties)
+    cont = build_durable_world(plan)
+    for c in range(barrier):
+        schedule_durable_cycle(cont, plan, parties, c, cycles, clen)
+        run_durable_cycle(cont, c, clen)
+    return cont, rec, clen
+
+
+# -- per-subsystem restore equality -------------------------------------------
+
+
+def _restored_pair(barrier=1):
+    cont, _rec, _clen = _world_at_barrier(barrier)
+    back, _extra = restore_world(snapshot_world(cont),
+                                 verifier=durable_verifier)
+    return cont, back
+
+
+def test_ledger_restores_identically():
+    cont, back = _restored_pair()
+    a, b = cont.ledger, back.ledger
+    assert list(a.accounts) == list(b.accounts)  # insertion order too
+    for name in a.accounts:
+        assert a.accounts[name] == b.accounts[name]
+    assert a.minted == b.minted
+    assert a.flagged == b.flagged
+    assert a.operators == b.operators
+    b.assert_conserved()
+
+
+def test_vaults_restore_byte_identically():
+    cont, back = _restored_pair()
+    assert sorted(cont.edges) == sorted(back.edges)
+    for sid, edge in cont.edges.items():
+        for ea, eb in zip(edge.vault.entries(), back.edges[sid].vault.entries()):
+            assert ea.card.to_json() == eb.card.to_json()
+            assert ea.blob == eb.blob  # byte-identical => same content hash
+            assert ea.signature == eb.signature
+            # integrity machinery still live on the restored vault
+            back.edges[sid].vault.fetch(ea.card.model_id)
+
+
+def test_discovery_restores_identically():
+    cont, back = _restored_pair()
+    a = [(c.to_json(), v) for c, v in cont.discovery.entries()]
+    b = [(c.to_json(), v) for c, v in back.discovery.entries()]
+    assert a == b
+    assert cont.discovery.stats == back.discovery.stats
+    q = ModelQuery(task="durable", min_accuracy=0.0)
+    assert ([r.card.model_id for r in cont.discovery.query(q, top_k=5)]
+            == [r.card.model_id for r in back.discovery.query(q, top_k=5)])
+
+
+def test_frontier_restores_with_original_seq_numbers():
+    cont, back = _restored_pair()
+    fa, fb = cont.loop.frontier(), back.loop.frontier()
+    assert fa and fa == fb  # membership events pending at the barrier
+    assert cont.loop.next_seq == back.loop.next_seq
+    assert cont.loop.events_processed == back.loop.events_processed
+    assert cont.clock.now() == back.clock.now()
+
+
+def test_topology_and_counters_restore_identically():
+    cont, back = _restored_pair()
+    ta, tb = cont.topology, back.topology
+    assert sorted(ta.regions) == sorted(tb.regions)
+    for rid in ta.regions:
+        ra, rb = ta.regions[rid], tb.regions[rid]
+        assert ra.stats == rb.stats
+        assert sorted(ra.edge_ids) == sorted(rb.edge_ids)
+    assert cont.denied_fetches == back.denied_fetches
+    assert cont.membership_refusals == back.membership_refusals
+    assert cont.members == back.members
+    assert cont.retired == back.retired
+    assert cont.fault_stats == back.fault_stats
+    assert cont.traffic == back.traffic
+
+
+# -- byte-identical resume vs the golden fixture -------------------------------
+
+
+@pytest.mark.parametrize("barrier", [1, 2])
+def test_snapshot_restore_continue_matches_golden(barrier):
+    """Snapshot at a cycle barrier, restore into a fresh continuum, finish
+    the run: pre + post trace must equal the checked-in golden fixture."""
+    cont, rec, clen = _world_at_barrier(barrier)
+    pre = serialize_trace(cont.loop.log)
+    snap = snapshot_world(cont, extra={"next_cycle": barrier})
+    del cont
+
+    back, extra = restore_world(snap, verifier=durable_verifier)
+    assert extra == {"next_cycle": barrier}
+    post = _run_cycles(back, 12, 3, clen, start=barrier)
+    assert (pre + post) == rec.trace.encode()
+
+
+def test_restore_survives_process_death(tmp_path):
+    """The acceptance path: record + snapshot in one process, let it die,
+    restore and continue in another — concatenation is byte-identical."""
+    plan, rec = _fixture_plan()
+    clen = durable_cycle_len(12)
+    env_script = """
+import sys
+sys.path.insert(0, {src!r})
+from repro.runtime.faults import FaultPlan
+from repro.runtime.snapshot import restore_world, snapshot_world
+from repro.runtime.trace import (build_durable_world, durable_cycle_len,
+                                 durable_verifier, run_durable_cycle,
+                                 schedule_durable_cycle, serialize_trace)
+plan = FaultPlan.from_dict({plan!r})
+clen = durable_cycle_len(12)
+"""
+    src = str(pathlib.Path(__file__).resolve().parent.parent / "src")
+    header = env_script.format(src=src, plan=plan.to_dict())
+    phase1 = header + f"""
+cont = build_durable_world(plan)
+schedule_durable_cycle(cont, plan, 12, 0, 3, clen)
+run_durable_cycle(cont, 0, clen)
+open({str(tmp_path / "pre.trace")!r}, "wb").write(
+    serialize_trace(cont.loop.log))
+open({str(tmp_path / "world.snap")!r}, "wb").write(snapshot_world(cont))
+sys.exit(0)  # process dies with the world in memory
+"""
+    phase2 = header + f"""
+data = open({str(tmp_path / "world.snap")!r}, "rb").read()
+cont, _ = restore_world(data, verifier=durable_verifier)
+for c in range(1, 3):
+    schedule_durable_cycle(cont, plan, 12, c, 3, clen)
+    run_durable_cycle(cont, c, clen)
+cont.loop.run_to_quiescence()
+cont.ledger.assert_conserved()
+open({str(tmp_path / "post.trace")!r}, "wb").write(
+    serialize_trace(cont.loop.log))
+"""
+    for script in (phase1, phase2):
+        proc = subprocess.run([sys.executable, "-c", script],
+                              capture_output=True, text=True)
+        assert proc.returncode == 0, proc.stderr
+    pre = (tmp_path / "pre.trace").read_bytes()
+    post = (tmp_path / "post.trace").read_bytes()
+    assert (pre + post) == rec.trace.encode()
+
+
+# -- archive integrity ---------------------------------------------------------
+
+
+def test_snapshot_refuses_non_durable_frontier_events():
+    cont, _rec, _clen = _world_at_barrier(1)
+    cont.loop.call_after(5.0, lambda now: None, label="ephemeral closure")
+    with pytest.raises(SnapshotError, match="durable"):
+        snapshot_world(cont)
+
+
+def test_tampered_archive_is_rejected():
+    cont, _rec, _clen = _world_at_barrier(1)
+    snap = bytearray(snapshot_world(cont))
+    snap[len(snap) // 2] ^= 0x01
+    with pytest.raises(SnapshotError):
+        restore_world(bytes(snap), verifier=durable_verifier)
+
+
+def test_snapshot_manifest_is_inspectable():
+    cont, _rec, _clen = _world_at_barrier(1)
+    m = snapshot_manifest(snapshot_world(cont, extra={"tag": "b1"}))
+    assert m["version"] == 1
+    assert m["extra"] == {"tag": "b1"}
+    assert m["clock"]["now"] == cont.clock.now()
+    assert len(m["frontier"]) == len(cont.loop.frontier())
+
+
+def test_snapshot_bytes_are_deterministic():
+    a1, _rec, _clen = _world_at_barrier(1)
+    a2, _rec, _clen = _world_at_barrier(1)
+    assert snapshot_world(a1) == snapshot_world(a2)
+
+
+# -- elastic membership --------------------------------------------------------
+
+
+def _micro_world(plan=None):
+    cont = build_hierarchical_continuum(3, 2, ledger=IncentiveLedger(),
+                                        faults=plan or FaultPlan(seed=0))
+    return cont
+
+
+def _publish(cont, pid, acc=0.8, mid=None):
+    card = ModelCard(model_id=mid or f"{pid}/m", task="t", arch="toy",
+                     owner=pid, num_params=3,
+                     metrics={"accuracy": acc, "per_class": {}})
+    return cont.publish(pid, {"w": np.ones(3, np.float32)}, card)
+
+
+def test_admit_opens_account_and_mints_conservingly():
+    cont = _micro_world()
+    cont.admit_party("alice")
+    cont.loop.run_to_quiescence()
+    assert "alice" in cont.members
+    assert cont.ledger.balance("alice") > 0
+    cont.ledger.assert_conserved()
+
+
+def test_retire_escrows_deregisters_and_gates():
+    cont = _micro_world()
+    _publish(cont, "bob")
+    _publish(cont, "carol")
+    region_op = cont.topology.region_of("bob").operator
+    bob_before = cont.ledger.balance("bob")
+    op_before = cont.ledger.balance(region_op)
+    minted = cont.ledger.minted
+
+    cont.retire_party("bob")
+    cont.loop.run_to_quiescence()
+    assert "bob" in cont.retired
+    # balance escrowed to the home region operator, nothing minted
+    assert cont.ledger.balance("bob") == 0.0
+    assert cont.ledger.balance(region_op) == pytest.approx(
+        op_before + bob_before)
+    assert cont.ledger.minted == minted
+    cont.ledger.assert_conserved()
+    # cards gone from the cloud index and every region shard
+    q = ModelQuery(task="t", min_accuracy=0.0)
+    assert all(r.card.owner != "bob" for r in cont.discovery.query(q))
+    for rid in cont.topology.regions:
+        shard = cont.topology.regions[rid].shard
+        assert all(r.card.owner != "bob" for r in shard.query(q))
+    # both planes refuse retired parties, on a dedicated counter
+    denied_before = cont.denied_fetches
+    _publish(cont, "bob", mid="bob/m2")
+    cont.discover_and_fetch(ModelQuery(task="t", min_accuracy=0.0),
+                            requester="bob")
+    assert cont.membership_refusals == 2
+    assert cont.denied_fetches == denied_before
+    cont.ledger.assert_conserved()
+
+
+def test_readmission_of_retired_party_is_refused():
+    cont = _micro_world()
+    cont.retire_party("bob")
+    cont.loop.run_to_quiescence()
+    with pytest.raises(ValueError, match="re-admission"):
+        cont.admit_party("bob")
+
+
+def test_add_region_wires_operator_edges_and_placement():
+    cont = _micro_world()
+    before = set(cont.edges)
+    cont.add_region("rgx00", n_edges=2)
+    cont.loop.run_to_quiescence()
+    assert "rgx00" in cont.topology.regions
+    assert "region:rgx00" in cont.ledger.operators
+    new_edges = set(cont.edges) - before
+    assert new_edges == {"edge:rgx00:00", "edge:rgx00:01"}
+    # the new region is a live placement target: some party homes there
+    homed = [f"p{i:03d}" for i in range(64)
+             if cont.topology.region_of(f"p{i:03d}").region_id == "rgx00"]
+    assert homed
+    _publish(cont, homed[0])
+    assert cont.nearest_edge(homed[0]).server_id in new_edges
+    cont.ledger.assert_conserved()
+
+
+def test_drain_region_migrates_models_and_escrows_operator():
+    cont = _micro_world()
+    cont.add_region("rgx00", n_edges=1)
+    cont.loop.run_to_quiescence()
+    homed = next(f"p{i:03d}" for i in range(64)
+                 if cont.topology.region_of(f"p{i:03d}").region_id == "rgx00")
+    stored = _publish(cont, homed)
+    vault_of = {c.model_id: v for c, v in cont.discovery.entries()}
+    assert vault_of[stored.model_id].startswith("edge:rgx00:")
+    cloud_before = cont.ledger.balance(OPERATOR)
+    op_balance = cont.ledger.balance("region:rgx00")
+
+    cont.drain_region("rgx00")
+    cont.loop.run_to_quiescence()
+    assert "rgx00" not in cont.topology.regions
+    assert not any(sid.startswith("edge:rgx00:") for sid in cont.edges)
+    # the dead operator's balance escrowed to the cloud operator
+    assert cont.ledger.balance("region:rgx00") == 0.0
+    assert cont.ledger.balance(OPERATOR) == pytest.approx(
+        cloud_before + op_balance)
+    cont.ledger.assert_conserved()
+    # the model migrated to the owner's new home edge and is still served
+    params, card, _r = cont.discover_and_fetch(
+        ModelQuery(task="t", min_accuracy=0.0), requester="zz-requester")
+    assert card.model_id == stored.model_id
+    np.testing.assert_array_equal(params["w"], np.ones(3, np.float32))
+    cont.ledger.assert_conserved()
+
+
+def test_drain_refuses_last_region_at_fire_time():
+    cont = _micro_world()
+    for rid in ["rg001", "rg002"]:
+        cont.drain_region(rid)
+        cont.loop.run_to_quiescence()
+    cont.drain_region("rg000")
+    with pytest.raises(ValueError, match="last"):
+        cont.loop.run_to_quiescence()
+
+
+def test_membership_survives_snapshot_mid_flight():
+    """Pending admit/retire events snapshot as durable payloads and fire
+    identically after restore; conservation holds after each one."""
+    cont = _micro_world()
+    _publish(cont, "bob")
+    cont.admit_party("newbie", delay=10.0)
+    cont.retire_party("bob", delay=20.0)
+    snap = snapshot_world(cont)
+    back, _ = restore_world(snap)
+    back.loop.run_to_quiescence()
+    back.ledger.assert_conserved()
+    assert "newbie" in back.members
+    assert "bob" in back.retired
+    assert back.ledger.balance("bob") == 0.0
+
+
+# -- cohort (device-resident) state -------------------------------------------
+
+
+def test_cohort_state_restores_bit_identically():
+    from repro.models.small import make_lr
+    from repro.runtime.population import PartyPopulation
+
+    def _pop():
+        rng = np.random.default_rng(3)
+        x = rng.normal(size=(4, 32, 6)).astype(np.float32)
+        y = rng.integers(0, 3, size=(4, 32)).astype(np.int32)
+        return PartyPopulation(make_lr(num_features=6, num_classes=3),
+                               x, y, task="t", lr=0.1, batch_size=8, seed=1)
+
+    pop = _pop()
+    pop.train_epochs(1)
+    cont = Continuum(ledger=IncentiveLedger())
+    cont.add_edge_server("e0")
+    snap = snapshot_world(cont, cohorts=[pop])
+
+    fresh = _pop()  # same construction, pre-training state
+    back, _ = restore_world(snap, cohorts=[fresh])
+    for a, b in zip(np.asarray(pop.state.params["w"]).ravel(),
+                    np.asarray(fresh.state.params["w"]).ravel()):
+        assert a == b
+    # the continuation must be bit-identical, incl. the RNG-driven schedule
+    la = pop.train_epochs(2)
+    lb = fresh.train_epochs(2)
+    assert la == lb
+    for pa, pb in zip(pop.all_party_params(), fresh.all_party_params()):
+        for leaf_a, leaf_b in zip(pa.values(), pb.values()):
+            np.testing.assert_array_equal(leaf_a, leaf_b)
+
+
+def test_cohort_count_mismatch_is_rejected():
+    cont = Continuum(ledger=IncentiveLedger())
+    cont.add_edge_server("e0")
+    snap = snapshot_world(cont)
+    with pytest.raises(SnapshotError, match="cohort"):
+        restore_world(snap, cohorts=[object()])
