@@ -11,6 +11,7 @@ output is both human-skimmable and machine-parsable.
   exchange_scale  — incentive-gated model-exchange economy, hetero cohorts
   chaos_scale     — exchange economy under churn/link-loss/byzantine faults
   hierarchy_scale — edge→region→cloud tiering: cache hit-rate + egress
+  serving_scale   — request-driven serving tier: qps + p50/p99 + placement
   durability_scale— full-world snapshot/restore + membership churn
   population_scale— scan-fused one-dispatch cycles vs per-step baseline
   roofline        — three-term roofline from dry-run artifacts (if present)
@@ -116,6 +117,19 @@ def run_hierarchy_scale():
     hmain(["--parties", "20000"] + _json_args())
 
 
+def run_serving_scale():
+    """Request-driven serving tier: sustained qps, latency, placement.
+
+    The section runs at 20k parties to keep the orchestrator sweep short;
+    the standalone CLI defaults to the 100k-party headline scale (which
+    is what the CI serving step gates).
+    """
+    from benchmarks.serving_scale import main as smain
+
+    smain(["--parties", "20000", "--regions", "16", "--duration", "120"]
+          + _json_args())
+
+
 def run_durability_scale():
     """Full-world snapshot/restore with membership churn, byte-identical.
 
@@ -162,6 +176,7 @@ def main():
     which = set(argv) or {"fig3", "figs456", "kernels", "traffic",
                           "continuum_scale", "exchange_scale",
                           "chaos_scale", "hierarchy_scale",
+                          "serving_scale",
                           "durability_scale", "population_scale",
                           "roofline"}
     print("name,us_per_call,derived")
@@ -180,6 +195,9 @@ def main():
     if "hierarchy_scale" in which:
         section("Hierarchical topology (regions, caches, egress)")
         run_hierarchy_scale()
+    if "serving_scale" in which:
+        section("Serving tier (request traffic, batching, placement)")
+        run_serving_scale()
     if "durability_scale" in which:
         section("Durability (snapshot/restore + membership churn)")
         run_durability_scale()

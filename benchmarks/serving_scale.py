@@ -1,0 +1,195 @@
+"""Serving scale benchmark: sustained request traffic at 100k parties.
+
+Drives the request-driven serving tier (``repro.runtime.serving``) over a
+hierarchical edge→region→cloud continuum at population scale: a slice of
+the parties publish models across ``--tasks`` learning tasks, then every
+party issues :class:`~repro.runtime.serving.PredictRequest` traffic spread
+over ``--duration`` simulated seconds.  Reported headline numbers:
+
+* **sustained qps** — served queries per simulated second across the
+  traffic window (the CI floor gates this at the smoke scale);
+* **simulated p50/p99 latency** — request arrival → prediction, including
+  slot queueing, bucketed prefill/decode compute, and any replica-install
+  wait on cold-start escalations;
+* **locality split** — replica hits vs region-shard hits vs cloud
+  escalations, plus the placement loop's hot-pushes/evictions;
+* **ledger conservation** — per-query micro-fees settle requester →
+  publisher with cloud/region fee splits and ``sum(balances) == minted``
+  is asserted after the run.
+
+The workload is pure Python/numpy (scripted accuracies, tiny param blobs)
+so the measurement isolates the serving/batching/placement layers — no
+jax math in the way.  ``--json`` merges headline numbers into a JSON file
+(used by the CI ``bench-smoke`` serving step).
+
+  PYTHONPATH=src python benchmarks/serving_scale.py [--parties 100000]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+try:
+    from benchmarks.bench_json import merge_json_section
+except ImportError:  # run as a script: benchmarks/ itself is on sys.path
+    from bench_json import merge_json_section
+
+from repro.core.incentives import IncentiveLedger
+from repro.core.vault import ModelCard
+from repro.runtime.loop import EventLoop
+from repro.runtime.serving import PredictRequest, ServingConfig, ServingTier
+from repro.runtime.topology import build_hierarchical_continuum
+from repro.runtime.trace import scripted_accuracy as _true_acc
+
+
+def bench_serving(n_parties=100000, regions=32, edges_per_region=4,
+                  n_tasks=32, duration_s=600.0, publish_every=10, seed=0):
+    """Serve one request per party; returns the headline metric dict."""
+    ids = [f"p{i:06d}" for i in range(n_parties)]
+    rng = np.random.default_rng(seed)
+
+    ledger = IncentiveLedger()
+    cont = build_hierarchical_continuum(
+        regions, edges_per_region, ledger=ledger,
+        loop=EventLoop(keep_log=False),
+    )
+
+    # market: every ``publish_every``-th party lists a model for its task
+    publishers = ids[::publish_every]
+    for j, pid in enumerate(publishers):
+        params = {"w": rng.standard_normal(16).astype(np.float32)}
+        cont.publish(pid, params, ModelCard(
+            model_id=f"{pid}/m", task=f"task{j % n_tasks:03d}", arch="toy",
+            owner=pid, num_params=16,
+            metrics={"accuracy": _true_acc(j, 0), "per_class": {}},
+        ))
+
+    cfg = ServingConfig(placement_every_s=max(duration_s / 10.0, 1.0))
+    tier = ServingTier(cont, cfg)
+    counters = {"ok": 0, "other": 0}
+
+    def completed(outcome):
+        counters["ok" if outcome.ok else "other"] += 1
+
+    # synchronous publishes advanced the sim clock (upload transfer time);
+    # the traffic window starts after the market is fully seeded
+    t0 = cont.clock.now() + 1.0
+    n = max(n_parties, 1)
+    for i, pid in enumerate(ids):
+        # every 4th request sets a floor only the better half of the
+        # market clears, so ranking (not just presence) is exercised
+        floor = 0.5 if i % 4 == 0 else 0.0
+        tier.submit(PredictRequest(
+            request_id=f"r{i:06d}", requester=pid,
+            task=f"task{i % n_tasks:03d}",
+            prompt_tokens=4 + (i * 7) % 120,
+            max_new_tokens=4 + (i % 4) * 4,
+            min_accuracy=floor,
+            at=t0 + duration_s * i / n,
+        ), completed)
+
+    wall0 = time.perf_counter()
+    cont.loop.run_to_quiescence()
+    wall = time.perf_counter() - wall0
+    ledger.assert_conserved()
+    rep = tier.report()
+    assert counters["ok"] == rep.served
+
+    total_hits = rep.replica_hits + rep.shard_hits + rep.escalations
+    return {
+        "parties": n_parties,
+        "regions": regions,
+        "edges_per_region": edges_per_region,
+        "tasks": n_tasks,
+        "duration_s": duration_s,
+        "models": len(publishers),
+        "wall_s": wall,
+        "events": cont.loop.events_processed,
+        "events_per_s": cont.loop.events_processed / max(wall, 1e-9),
+        "requests": rep.requests,
+        "served": rep.served,
+        "misses": rep.misses,
+        "replica_hits": rep.replica_hits,
+        "shard_hits": rep.shard_hits,
+        "escalations": rep.escalations,
+        "replica_hit_rate": rep.replica_hits / total_hits if total_hits else 0.0,
+        "hot_pushes": rep.hot_pushes,
+        "evictions": rep.evictions,
+        "p50_s": rep.p50_s,
+        "p99_s": rep.p99_s,
+        "sim_qps": rep.sim_qps,
+        "serve_bytes": cont.traffic.serve_bytes,
+        "conserved": int(rep.conserved),  # report() asserted conservation
+    }
+
+
+def main(argv=None):
+    """CLI entry point; prints CSV rows like the other benchmark sections."""
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--parties", type=int, default=100000)
+    ap.add_argument("--regions", type=int, default=32)
+    ap.add_argument("--edges-per-region", type=int, default=4)
+    ap.add_argument("--tasks", type=int, default=32,
+                    help="learning tasks the request traffic spreads over")
+    ap.add_argument("--duration", type=float, default=600.0,
+                    help="simulated seconds the request wave spreads over")
+    ap.add_argument("--publish-every", type=int, default=10,
+                    help="every Nth party publishes a model")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", type=str, default=None,
+                    help="merge headline numbers into this JSON file")
+    args = ap.parse_args(argv)
+    if args.parties < 1 or args.regions < 1 or args.edges_per_region < 1 \
+            or args.tasks < 1 or args.publish_every < 1:
+        ap.error("--parties, --regions, --edges-per-region, --tasks, and "
+                 "--publish-every must all be >= 1")
+    if args.duration <= 0:
+        ap.error("--duration must be > 0")
+
+    res = bench_serving(args.parties, args.regions, args.edges_per_region,
+                        args.tasks, args.duration, args.publish_every,
+                        args.seed)
+    print(f"serving_scale/run,{res['wall_s']*1e6:.0f},"
+          f"parties={res['parties']};regions={res['regions']};"
+          f"models={res['models']};events={res['events']};"
+          f"events_per_s={res['events_per_s']:.0f};"
+          f"served={res['served']};misses={res['misses']}", flush=True)
+    print(f"serving_scale/latency,0,"
+          f"p50_ms={res['p50_s']*1e3:.1f};p99_ms={res['p99_s']*1e3:.1f};"
+          f"sim_qps={res['sim_qps']:.1f}")
+    print(f"serving_scale/placement,0,"
+          f"replica_hits={res['replica_hits']};"
+          f"shard_hits={res['shard_hits']};"
+          f"escalations={res['escalations']};"
+          f"replica_hit_rate={res['replica_hit_rate']:.3f};"
+          f"hot_pushes={res['hot_pushes']};evictions={res['evictions']}")
+    print(f"serving_scale/economy,0,"
+          f"serve_bytes={res['serve_bytes']};conserved=1")
+    print(f"# {res['served']}/{res['requests']} served at "
+          f"{res['sim_qps']:.0f} qps sustained "
+          f"(p50 {res['p50_s']*1e3:.0f}ms, p99 {res['p99_s']*1e3:.0f}ms), "
+          f"replica hit rate {res['replica_hit_rate']:.1%}")
+    if res["wall_s"] < 180:
+        print(f"# {res['parties']} parties in {res['wall_s']:.1f}s wall "
+              f"(<180s target)")
+    else:
+        print(f"# WARNING: wall time {res['wall_s']:.1f}s exceeds 180s target")
+
+    if args.json:
+        merge_json_section(args.json, "serving_scale", {
+            "wall_s": res["wall_s"],
+            "parties": res["parties"],
+            "requests": res["requests"],
+            "served": res["served"],
+            "p50_s": res["p50_s"],
+            "p99_s": res["p99_s"],
+            "sim_qps": res["sim_qps"],
+            "replica_hit_rate": res["replica_hit_rate"],
+            "conserved": res["conserved"],
+        })
+
+
+if __name__ == "__main__":
+    main()

@@ -1,4 +1,40 @@
 """repro — production-grade JAX framework implementing the MDD
 (Model Discovery & Distillation) architecture for scalable ML on
-decentralized data over the edge-to-cloud continuum."""
+decentralized data over the edge-to-cloud continuum.
+
+The names in ``__all__`` are the stable top-level surface (see
+docs/ARCHITECTURE.md): the continuum facade with its ``Outcome`` envelope,
+the cohort exchange driver, world snapshot/restore, and the request-driven
+serving tier.  Everything importable from submodules but not listed here is
+internal and may change without notice.  Exports resolve lazily so that
+``import repro`` stays cheap (no JAX import at package-init time).
+"""
 __version__ = "0.1.0"
+
+__all__ = [
+    "Continuum", "Outcome", "OutcomeStatus",
+    "run_exchange",
+    "snapshot_world", "restore_world",
+    "serve_requests", "PredictRequest", "ServingConfig", "ServingReport",
+]
+
+_LAZY = {
+    "Continuum": "repro.core.continuum",
+    "Outcome": "repro.core.continuum",
+    "OutcomeStatus": "repro.core.continuum",
+    "run_exchange": "repro.runtime.exchange",
+    "snapshot_world": "repro.runtime.snapshot",
+    "restore_world": "repro.runtime.snapshot",
+    "serve_requests": "repro.runtime.serving",
+    "PredictRequest": "repro.runtime.serving",
+    "ServingConfig": "repro.runtime.serving",
+    "ServingReport": "repro.runtime.serving",
+}
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        import importlib
+
+        return getattr(importlib.import_module(_LAZY[name]), name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -36,7 +36,9 @@ from __future__ import annotations
 
 import bisect
 import dataclasses
+import enum
 import hashlib
+import warnings
 from typing import TYPE_CHECKING, Callable, Dict, List, Optional
 
 from repro.checkpoint.serde import params_to_bytes
@@ -95,6 +97,9 @@ class TrafficLog:
     total_time_s: float = 0.0
     cloud_egress_bytes: int = 0
     intra_region_bytes: int = 0
+    # request-plane token traffic (prompt + generated tokens) served by the
+    # serving tier; model blobs pulled for replicas count in the fields above
+    serve_bytes: int = 0
 
     def as_dict(self):
         """Plain-dict view for benchmark/report JSON."""
@@ -124,6 +129,132 @@ def _stable_bucket(party_id: str, n: int) -> int:
     """PYTHONHASHSEED-independent assignment (builtin hash() is salted)."""
     digest = hashlib.sha256(party_id.encode("utf-8")).digest()
     return int.from_bytes(digest[:8], "big") % n
+
+
+# -- the unified request/outcome envelope -------------------------------------
+
+class OutcomeStatus(enum.Enum):
+    """How one scheduled continuum operation ended.
+
+    ``OK``       the operation succeeded; ``Outcome.payload`` carries the
+                 result (the final card for a publish, the ``(params, card,
+                 hit)`` triple for a fetch, a prediction for a served query).
+    ``MISS``     a query nothing anywhere could satisfy (not a failure:
+                 nothing was paid, nothing needs refunding).
+    ``DENIED``   refused by the credit gate before any bytes moved.
+    ``REFUSED``  refused by the membership gate (the party had retired).
+    ``FAILED``   a started transfer was lost — ``Outcome.reason`` is one of
+                 ``{"drop", "corrupt", "fraud", "outage"}`` — and any
+                 payment was refunded (``Outcome.fee`` records it).
+    """
+
+    OK = "ok"
+    MISS = "miss"
+    DENIED = "denied"
+    REFUSED = "refused"
+    FAILED = "failed"
+
+
+@dataclasses.dataclass(frozen=True)
+class Outcome:
+    """One completion envelope for every async continuum operation.
+
+    Replaces the legacy ``on_done``/``on_fail``/``on_denied`` callback
+    sprawl: pass ``on_complete`` to :meth:`Continuum.publish_async`,
+    :meth:`Continuum.discover_and_fetch_async`, or the serving tier
+    (:mod:`repro.runtime.serving`) and receive exactly one ``Outcome`` at
+    completion time.  ``fee`` is the operation's settlement record —
+    ``paid``/``fee``/``region_cut`` for a gated transfer, plus
+    ``refunded`` when a failure reversed it, or ``minted`` for a publish
+    reward; empty for ungated operations.
+    """
+
+    status: OutcomeStatus
+    time: float  # simulated completion time
+    payload: object = None
+    reason: Optional[str] = None
+    fee: Dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def ok(self) -> bool:
+        """True when the operation succeeded (``status is OK``)."""
+        return self.status is OutcomeStatus.OK
+
+
+def _warn_legacy(method: str) -> None:
+    warnings.warn(
+        f"the on_done/on_fail/on_denied callbacks of {method} are "
+        f"deprecated; pass on_complete=(lambda outcome: ...) and branch on "
+        f"outcome.status instead",
+        DeprecationWarning, stacklevel=4,
+    )
+
+
+def _publish_completion(on_complete, on_done, on_fail):
+    """Normalize publish callbacks into one ``emit(status, now, ...)`` fn.
+
+    With ``on_complete``, every completion builds an :class:`Outcome`.
+    The legacy pair maps OK -> ``on_done(final_card, now)`` and
+    REFUSED/FAILED -> ``on_fail(now)`` — exactly the old behaviour, plus
+    a :class:`DeprecationWarning` at call time.
+    """
+    if on_complete is not None:
+        if on_done is not None or on_fail is not None:
+            raise ValueError("pass on_complete or the legacy "
+                             "on_done/on_fail callbacks, not both")
+
+        def emit(status, now, payload=None, reason=None, fee=None):
+            on_complete(Outcome(status, now, payload, reason, fee or {}))
+
+        return emit
+    if on_done is not None or on_fail is not None:
+        _warn_legacy("publish_async")
+
+    def emit(status, now, payload=None, reason=None, fee=None):
+        if status is OutcomeStatus.OK:
+            if on_done is not None:
+                on_done(payload, now)
+        elif on_fail is not None:
+            on_fail(now)
+
+    return emit
+
+
+def _fetch_completion(on_complete, on_done, on_denied, on_fail):
+    """Normalize fetch callbacks into one ``emit(status, now, ...)`` fn.
+
+    Legacy mapping (the pre-Outcome contract, preserved exactly):
+    OK -> ``on_done(hit, now)``; MISS -> ``on_done(None, now)``;
+    DENIED/REFUSED -> ``on_denied(now)`` if given else ``on_done(None,
+    now)``; FAILED -> ``on_fail(reason, now)`` if given else
+    ``on_done(None, now)``.
+    """
+    if on_complete is not None:
+        if (on_done is not None or on_denied is not None
+                or on_fail is not None):
+            raise ValueError("pass on_complete or the legacy "
+                             "on_done/on_denied/on_fail callbacks, not both")
+
+        def emit(status, now, payload=None, reason=None, fee=None):
+            on_complete(Outcome(status, now, payload, reason, fee or {}))
+
+        return emit
+    if on_done is not None or on_denied is not None or on_fail is not None:
+        _warn_legacy("discover_and_fetch_async")
+
+    def emit(status, now, payload=None, reason=None, fee=None):
+        if status is OutcomeStatus.OK:
+            if on_done is not None:
+                on_done(payload, now)
+        elif status is OutcomeStatus.FAILED and on_fail is not None:
+            on_fail(reason, now)
+        elif (status in (OutcomeStatus.DENIED, OutcomeStatus.REFUSED)
+                and on_denied is not None):
+            on_denied(now)
+        elif on_done is not None:
+            on_done(None, now)
+
+    return emit
 
 
 class Continuum:
@@ -240,17 +371,25 @@ class Continuum:
     # -- scheduled operations ------------------------------------------------
     def publish_async(self, party_id: str, params, card,
                       on_done: Optional[Callable] = None,
-                      on_fail: Optional[Callable] = None):
+                      on_fail: Optional[Callable] = None, *,
+                      on_complete: Optional[Callable] = None):
         """Device -> edge vault upload; card -> cloud index.
 
         The blob is stored (hashed, signed, versioned) at initiation; the
         card becomes *discoverable* only when the simulated device->edge and
         edge->cloud transfers complete.  Returns the final card immediately;
-        ``on_done(final_card, sim_time)`` fires at registration time.
+        ``on_complete(outcome)`` fires at completion time with one
+        :class:`Outcome` envelope — status ``OK`` (payload: the final
+        card, ``fee["minted"]``: the minted reward), ``FAILED`` (reason
+        ``"drop"``/``"outage"``), or ``REFUSED`` (membership gate).
 
-        Under a fault plan the transfer can be dropped (``on_fail(sim_time)``
-        fires at the time the loss is noticed; nothing reaches the edge —
-        the vault keeps its previous entry and the returned card is the
+        The legacy ``on_done(final_card, sim_time)`` / ``on_fail(sim_time)``
+        pair is deprecated (it maps onto the same envelope and warns); a
+        call may pass either style, never both.
+
+        Under a fault plan the transfer can be dropped (the failure fires
+        at the time the loss is noticed; nothing reaches the edge — the
+        vault keeps its previous entry and the returned card is the
         *unstored* one) or delayed, stragglers upload slower, and a
         byzantine publisher's card is inflated before it is stored.
 
@@ -261,15 +400,15 @@ class Continuum:
         schedule is lost exactly like a link drop.
 
         A retired party (see :meth:`retire_party`) is refused before any
-        bytes move: nothing is stored, ``on_fail`` fires, and the refusal
-        is counted in ``membership_refusals``.
+        bytes move: nothing is stored, the outcome is ``REFUSED``, and the
+        refusal is counted in ``membership_refusals``.
         """
+        emit = _publish_completion(on_complete, on_done, on_fail)
         if party_id in self.retired:
             self.membership_refusals += 1
 
             def publish_refused(now: float):
-                if on_fail is not None:
-                    on_fail(now)
+                emit(OutcomeStatus.REFUSED, now, reason="retired")
 
             self.loop.call_after(
                 0.0, publish_refused,
@@ -299,8 +438,7 @@ class Continuum:
             self.traffic.total_time_s += blob_t
 
             def publish_outage(now: float):
-                if on_fail is not None:
-                    on_fail(now)
+                emit(OutcomeStatus.FAILED, now, reason="outage")
 
             self.loop.call_after(
                 blob_t, publish_outage,
@@ -324,8 +462,7 @@ class Continuum:
             self.traffic.total_time_s += blob_t
 
             def publish_dropped(now: float):
-                if on_fail is not None:
-                    on_fail(now)
+                emit(OutcomeStatus.FAILED, now, reason="drop")
 
             self.loop.call_after(
                 blob_t, publish_dropped,
@@ -361,12 +498,13 @@ class Continuum:
 
         def card_arrived(now: float):
             self.discovery.register(final, edge.server_id)
+            fee = {}
             if self.ledger is not None:
-                self.ledger.on_publish(
+                minted = self.ledger.on_publish(
                     party_id, float(final.metrics.get("accuracy", 0.0))
                 )
-            if on_done is not None:
-                on_done(final, now)
+                fee = {"minted": minted}
+            emit(OutcomeStatus.OK, now, payload=final, fee=fee)
 
         if region is not None:
             self.traffic.intra_region_bytes += card_bytes
@@ -409,29 +547,35 @@ class Continuum:
         )
         return final
 
-    def discover_and_fetch_async(self, query, on_done: Callable,
+    def discover_and_fetch_async(self, query, on_done: Optional[Callable] = None,
                                  top_k: int = 3,
                                  requester: Optional[str] = None,
                                  on_denied: Optional[Callable] = None,
-                                 on_fail: Optional[Callable] = None):
+                                 on_fail: Optional[Callable] = None, *,
+                                 on_complete: Optional[Callable] = None):
         """Query cloud (cards only) then fetch the winning blob, as events.
 
-        ``on_done(hit, sim_time)`` receives ``(params, card, result)`` when
-        the download completes, or ``None`` if no card matched.  With a
-        ledger and a ``requester``, the fetch is credit-gated: an account
-        that cannot cover the fetch cost is refused before the query even
-        runs — ``on_denied(sim_time)`` fires if given, else
-        ``on_done(None, sim_time)`` — and a successful fetch pays the
-        publisher through the ledger.
+        ``on_complete(outcome)`` fires once at completion time with one
+        :class:`Outcome` envelope: ``OK`` (payload: the ``(params, card,
+        result)`` triple; ``fee``: the payment record), ``MISS`` (no card
+        matched), ``DENIED`` (credit gate), ``REFUSED`` (membership gate),
+        or ``FAILED`` (reason in {"drop", "corrupt", "fraud", "outage"};
+        ``fee`` records the refund).  The legacy
+        ``on_done``/``on_denied``/``on_fail`` triple is deprecated (it
+        maps onto the same envelope and warns); a call may pass either
+        style, never both.
+
+        With a ledger and a ``requester``, the fetch is credit-gated: an
+        account that cannot cover the fetch cost is refused before the
+        query even runs, and a successful fetch pays the publisher through
+        the ledger.
 
         Under a fault plan, a *paid* download can still fail: dropped or
         corrupted in flight, delivered but caught by verify-on-fetch with
         inflated claimed accuracy (fraud), or — hierarchical topologies
         only — lost because the requester's region subtree was dark when
         the download would have completed (outage).  In every failure case
-        the requester is refunded; ``on_fail(reason, sim_time)`` fires if
-        given (reason in {"drop", "corrupt", "fraud", "outage"}), else
-        ``on_done(None, sim_time)``.
+        the requester is refunded.
 
         With a topology attached the query resolves against the
         requester's region shard first (a hit is served in-region over the
@@ -442,52 +586,48 @@ class Continuum:
         (no ``requester``) have no home region and resolve directly at
         the cloud index with flat costing.
         """
+        emit = _fetch_completion(on_complete, on_done, on_denied, on_fail)
 
         def failed(reason: str, now: float, publisher: str,
                    region_operator: Optional[str] = None):
             gated = self.ledger is not None and requester is not None
+            fee = {}
             if gated:
                 self.ledger.on_refund(requester, publisher,
                                       region_operator=region_operator)
                 self.fault_stats.refunds += 1
-            if on_fail is not None:
-                on_fail(reason, now)
-            else:
-                on_done(None, now)
+                fee = self.ledger.fee_record(region_operator, refunded=True)
+            emit(OutcomeStatus.FAILED, now, reason=reason, fee=fee)
 
         def do_query(now: float):
             if requester is not None and requester in self.retired:
                 # retired parties are out of the exchange entirely: refused
                 # before the credit gate, counted separately from denials
                 self.membership_refusals += 1
-                if on_denied is not None:
-                    on_denied(now)
-                else:
-                    on_done(None, now)
+                emit(OutcomeStatus.REFUSED, now, reason="retired")
                 return
             gated = self.ledger is not None and requester is not None
             if gated and not self.ledger.can_fetch(requester):
                 self.ledger.on_denied(requester)
                 self.denied_fetches += 1
-                if on_denied is not None:
-                    on_denied(now)
-                else:
-                    on_done(None, now)
+                emit(OutcomeStatus.DENIED, now, reason="credit")
                 return
             if self.topology is not None and requester is not None:
-                self._regional_fetch(query, on_done, top_k, requester,
+                self._regional_fetch(query, emit, top_k, requester,
                                      failed, now, gated)
                 return
             results = self.discovery.query(query, top_k=top_k)
             if not results:
-                on_done(None, now)
+                emit(OutcomeStatus.MISS, now)
                 return
             best = results[0]
             # fetch first, pay after: an integrity failure in the vault
             # must not leave the requester charged for an undelivered model
             params, card = self.discovery.fetch(best)
+            fee = {}
             if gated:
                 self.ledger.on_fetch(requester, best.card.owner)
+                fee = self.ledger.fee_record(None)
             nbytes = self.edges[best.vault_id].vault.blob_size(card.model_id)
             dl_t, fault = self._fetch_fault(
                 DEVICE_TO_EDGE.transfer_time(nbytes), requester, card, now)
@@ -498,7 +638,8 @@ class Continuum:
             self.traffic.cloud_egress_bytes += nbytes
             self.traffic.total_time_s += dl_t
             self._schedule_fetch_outcome(dl_t, params, card, best, fault,
-                                         failed, requester, nbytes, on_done)
+                                         failed, requester, nbytes, emit,
+                                         fee=fee)
 
         self.loop.call_after(0.0, do_query, label=f"query task={query.task}",
                              payload={"op": "query", "task": query.task,
@@ -519,17 +660,18 @@ class Continuum:
         return dl_t, fault
 
     def _schedule_fetch_outcome(self, dl_t, params, card, hit, fault, failed,
-                                requester, nbytes, on_done, *,
-                                region=None, region_operator=None,
+                                requester, nbytes, emit, *,
+                                fee=None, region=None, region_operator=None,
                                 local=None):
         """Schedule one (already paid-for) download's outcome events.
 
         Shared by the flat and hierarchical fetch paths so refund/fault
         semantics cannot diverge between them: in-flight drop/corruption,
         delivery-time regional-outage loss, verify-on-fetch fraud,
-        region-cache seeding of escalated blobs, then ``on_done``.  Event
-        labels are identical in both topologies; regional payloads carry
-        extra ``region``/``local`` keys.
+        region-cache seeding of escalated blobs, then the ``OK`` emit
+        (``fee`` is the payment record attached to it).  Event labels are
+        identical in both topologies; regional payloads carry extra
+        ``region``/``local`` keys.
         """
         extra = {} if region is None else {"region": region.region_id}
         if fault is not None and fault.drop:
@@ -589,7 +731,8 @@ class Continuum:
                 return
             if region is not None and local is False:
                 region.cache_blob(params, card)
-            on_done((params, card, hit), now2)
+            emit(OutcomeStatus.OK, now2, payload=(params, card, hit),
+                 fee=fee or {})
 
         payload = {"op": "fetch", "requester": requester,
                    "model": card.model_id, "nbytes": nbytes,
@@ -603,7 +746,7 @@ class Continuum:
         )
 
     # -- hierarchical fetch path ---------------------------------------------
-    def _regional_fetch(self, query, on_done, top_k, requester, failed,
+    def _regional_fetch(self, query, emit, top_k, requester, failed,
                         now, gated):
         """Region-first resolution of one (already credit-gated) fetch.
 
@@ -633,15 +776,17 @@ class Continuum:
             results = self.discovery.query(query, top_k=top_k)
             if not results:
                 region.stats.cloud_misses += 1
-                on_done(None, now)
+                emit(OutcomeStatus.MISS, now)
                 return
             best = results[0]
             params, card = self.discovery.fetch(best)
             region_operator = None
             region.stats.escalations += 1
+        fee = {}
         if gated:
             self.ledger.on_fetch(requester, card.owner,
                                  region_operator=region_operator)
+            fee = self.ledger.fee_record(region_operator)
         if best.vault_id in self.edges:
             nbytes = self.edges[best.vault_id].vault.blob_size(card.model_id)
         else:  # served from the region cache
@@ -664,7 +809,7 @@ class Continuum:
                           score=best.score, region_id=region.region_id,
                           local=local)
         self._schedule_fetch_outcome(dl_t, params, card, hit, fault, failed,
-                                     requester, nbytes, on_done,
+                                     requester, nbytes, emit, fee=fee,
                                      region=region,
                                      region_operator=region_operator,
                                      local=local)
@@ -713,6 +858,27 @@ class Continuum:
         tol = (self.faults.verify_tolerance if self.faults is not None
                else 0.05)
         return claimed - float(measured) > tol, claimed, float(measured)
+
+    def verify_delivery(self, params, card):
+        """Re-measure a delivered model before trusting it (public hook).
+
+        The serving tier calls this before installing a replica; fetch
+        paths call it internally at delivery time.  Returns ``(fraud,
+        claimed, measured)`` — see :meth:`_check_fraud` for memoization
+        semantics.  A caller that gets ``fraud=True`` should hand the card
+        to :meth:`punish_fraud` and refund whoever paid.
+        """
+        return self._check_fraud(params, card)
+
+    def punish_fraud(self, card) -> None:
+        """Contain a card verify-on-fetch caught inflated (public hook).
+
+        Deregisters it from the cloud index and every region shard and
+        slashes its publisher once; safe to call from outside the fetch
+        path (the serving tier uses it when a replica install catches an
+        inflated card).
+        """
+        self._punish_fraud(card)
 
     def _punish_fraud(self, card):
         """Deregister the inflated card; slash its publisher once.
@@ -917,10 +1083,10 @@ class Continuum:
         """Schedule discover+fetch and run the event loop to quiescence."""
         box = {}
 
-        def done(hit, now):
-            box["hit"] = hit
+        def done(outcome):
+            box["hit"] = outcome.payload if outcome.ok else None
 
-        self.discover_and_fetch_async(query, done, top_k=top_k,
+        self.discover_and_fetch_async(query, on_complete=done, top_k=top_k,
                                       requester=requester)
         self.loop.run_to_quiescence()
         return box.get("hit")

@@ -150,6 +150,15 @@ class DiscoveryService:
             self.deregister(mid)
         return doomed
 
+    def lookup(self, model_id: str) -> Optional[Tuple[ModelCard, str]]:
+        """The indexed ``(card, serving vault id)`` for one model, or None.
+
+        Point lookup by id — no ranking, no stats.  The serving tier's
+        placement reviewer uses this to locate a hot model's blob without
+        re-running discovery.
+        """
+        return self._cards.get(model_id)
+
     def entries(self) -> List[Tuple[ModelCard, str]]:
         """Every indexed ``(card, serving vault id)``, model-id-sorted.
 

@@ -51,10 +51,13 @@ class LedgerEntry:
     published: int = 0
     downloads_served: int = 0
     fetches: int = 0
-    denied: int = 0  # fetch attempts refused for insufficient credit
-    refunds: int = 0  # failed fetches reversed (drop/corruption/fraud)
+    denied: int = 0  # fetch/serve attempts refused for insufficient credit
+    refunds: int = 0  # failed fetches/queries reversed (drop/corruption/fraud)
     frauds: int = 0  # times this account was caught publishing inflated cards
     mint_earned: float = 0.0  # cumulative publish rewards (slashed on fraud)
+    # serving tier (request plane): paid prediction queries issued / served
+    queries: int = 0
+    queries_served: int = 0
 
 
 class IncentiveLedger:
@@ -72,7 +75,7 @@ class IncentiveLedger:
     def __init__(self, publish_reward: float = 1.0, fetch_cost: float = 2.0,
                  quality_bonus: float = 5.0, stipend: float = 5.0,
                  service_fee: float = 0.2, operator: str = OPERATOR,
-                 region_fee_share: float = 0.5):
+                 region_fee_share: float = 0.5, serve_cost: float = 0.05):
         if not 0.0 <= region_fee_share <= 1.0:
             raise ValueError(
                 f"region_fee_share must be in [0, 1], got {region_fee_share}"
@@ -85,6 +88,10 @@ class IncentiveLedger:
         self.service_fee = service_fee
         self.operator = operator
         self.region_fee_share = region_fee_share
+        # per-query micro-fee settled by the serving tier: orders of
+        # magnitude below fetch_cost — a prediction rents the model for
+        # one query, a fetch buys the weights
+        self.serve_cost = serve_cost
         self.minted = 0.0  # all credits ever created (stipends + rewards)
         self.flagged: Set[str] = set()  # caught byzantine publishers
         # operator accounts (cloud + region shards): never stipended
@@ -111,21 +118,24 @@ class IncentiveLedger:
         self.operators.add(name)
         self._acct(name)
 
-    def on_publish(self, party: str, accuracy: float):
+    def on_publish(self, party: str, accuracy: float) -> float:
         """Mint the publish reward + accuracy-proportional quality bonus.
 
         Flagged accounts (caught publishing inflated cards) mint nothing:
         reputation death is what keeps a repeat byzantine publisher from
-        re-earning slashed rewards cycle after cycle.
+        re-earning slashed rewards cycle after cycle.  Returns the amount
+        minted (0.0 for flagged accounts) so callers can report the fee
+        side of a publish outcome.
         """
         acct = self._acct(party)
         acct.published += 1
         if party in self.flagged:
-            return
+            return 0.0
         reward = self.publish_reward + self.quality_bonus * max(accuracy, 0.0)
         acct.balance += reward
         acct.mint_earned += reward
         self.minted += reward
+        return reward
 
     def can_fetch(self, party: str) -> bool:
         """Can this account cover one fetch? (Opens it if new.)"""
@@ -135,12 +145,38 @@ class IncentiveLedger:
         """Count a fetch attempt refused for insufficient credit."""
         self._acct(party).denied += 1
 
-    def _fee_split(self, region_operator: Optional[str]):
-        """(total fee, region operator's cut) for one fetch payment."""
-        fee = self.fetch_cost * self.service_fee
+    def _fee_split(self, region_operator: Optional[str],
+                   cost: Optional[float] = None):
+        """(total fee, region operator's cut) for one payment of ``cost``.
+
+        ``cost`` defaults to ``fetch_cost``; the serving tier passes
+        ``serve_cost`` so query micro-fees split identically to fetch fees.
+        """
+        if cost is None:
+            cost = self.fetch_cost
+        fee = cost * self.service_fee
         region_cut = (fee * self.region_fee_share
                       if region_operator is not None else 0.0)
         return fee, region_cut
+
+    def fee_record(self, region_operator: Optional[str] = None, *,
+                   cost: Optional[float] = None,
+                   refunded: bool = False) -> Dict[str, float]:
+        """Describe one payment's settlement for an :class:`Outcome` envelope.
+
+        Pure reporting — touches no balances.  Returns ``paid`` (what the
+        requester transferred), ``fee`` (the operator slice of it) and
+        ``region_cut`` (the share forwarded to a region operator, 0.0 for
+        flat/cloud service); ``refunded`` adds a ``refunded`` key equal to
+        ``paid`` for payments that were reversed in full.
+        """
+        if cost is None:
+            cost = self.fetch_cost
+        fee, region_cut = self._fee_split(region_operator, cost)
+        rec = {"paid": cost, "fee": fee, "region_cut": region_cut}
+        if refunded:
+            rec["refunded"] = cost
+        return rec
 
     def on_fetch(self, requester: str, publisher: str,
                  region_operator: Optional[str] = None):
@@ -179,6 +215,52 @@ class IncentiveLedger:
         req.balance += self.fetch_cost
         req.refunds += 1
         self._acct(publisher).balance -= self.fetch_cost - fee
+        self._acct(self.operator).balance -= fee - region_cut
+        if region_operator is not None:
+            self._acct(region_operator).balance -= region_cut
+
+    # -- serving tier (request plane) ---------------------------------------
+    def can_serve(self, party: str) -> bool:
+        """Can this account cover one prediction query? (Opens it if new.)"""
+        return self._acct(party).balance >= self.serve_cost
+
+    def on_serve(self, requester: str, publisher: str,
+                 region_operator: Optional[str] = None):
+        """Zero-sum micro-fee for one served prediction query.
+
+        Mirrors :meth:`on_fetch` at ``serve_cost``: requester pays, the
+        replica's publisher earns the remainder, the operator(s) split the
+        service fee — with the region operator's cut flowing when the query
+        was answered by a region-hosted replica or shard resolution rather
+        than the cloud.  Conservation is untouched (no minting).
+        """
+        if not self.can_serve(requester):
+            self._acct(requester).denied += 1
+            raise PermissionError(f"{requester} has insufficient credits")
+        fee, region_cut = self._fee_split(region_operator, self.serve_cost)
+        req = self._acct(requester)
+        req.balance -= self.serve_cost
+        req.queries += 1
+        pub = self._acct(publisher)
+        pub.balance += self.serve_cost - fee
+        pub.queries_served += 1
+        self._acct(self.operator).balance += fee - region_cut
+        if region_operator is not None:
+            self._acct(region_operator).balance += region_cut
+
+    def on_serve_refund(self, requester: str, publisher: str,
+                        region_operator: Optional[str] = None):
+        """Reverse one paid query (region went dark, replica proved fraudulent).
+
+        Exact inverse of :meth:`on_serve`, same contract as
+        :meth:`on_refund`: pass the same ``region_operator`` the payment
+        used and the transfer nets to zero.
+        """
+        fee, region_cut = self._fee_split(region_operator, self.serve_cost)
+        req = self._acct(requester)
+        req.balance += self.serve_cost
+        req.refunds += 1
+        self._acct(publisher).balance -= self.serve_cost - fee
         self._acct(self.operator).balance -= fee - region_cut
         if region_operator is not None:
             self._acct(region_operator).balance -= region_cut
@@ -262,6 +344,9 @@ class IncentiveLedger:
             "frauds": sum(a.frauds for a in self.accounts.values()),
             "flagged": len(self.flagged),
         }
+        served = sum(a.queries_served for a in self.accounts.values())
+        if served:
+            out["queries_served"] = served
         if len(self.operators) > 1:
             out["region_operators"] = len(self.operators) - 1
             out["region_fee_total"] = region_total

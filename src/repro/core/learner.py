@@ -13,7 +13,7 @@ from typing import Optional
 import numpy as np
 
 from repro.common.tree import count_params
-from repro.core.continuum import Continuum
+from repro.core.continuum import Continuum, OutcomeStatus
 from repro.core.discovery import ModelQuery
 from repro.core.distill import distill
 from repro.core.evaluator import evaluate_classifier
@@ -108,8 +108,16 @@ class LearningParty:
         """
         assert self.continuum is not None
         card = self.make_card(eval_x, eval_y)
+
+        def completed(outcome):
+            if outcome.ok:
+                if on_done is not None:
+                    on_done(outcome.payload, outcome.time)
+            elif on_fail is not None:
+                on_fail(outcome.time)
+
         return self.continuum.publish_async(
-            self.party_id, self.params, card, on_done=on_done, on_fail=on_fail
+            self.party_id, self.params, card, on_complete=completed
         )
 
     def _default_query(self) -> ModelQuery:
@@ -172,22 +180,21 @@ class LearningParty:
         """
         assert self.continuum is not None
 
-        def fetched(hit, now):
-            if hit is None:
+        def completed(outcome):
+            if outcome.status in (OutcomeStatus.DENIED,
+                                  OutcomeStatus.REFUSED):
+                if on_denied is not None:
+                    on_denied(outcome.time)
+            elif outcome.ok:
+                teacher_params, _, _ = outcome.payload
+                self._distill_from(teacher_params, epochs, teacher_apply)
                 if on_done is not None:
-                    on_done(False, now)
+                    on_done(True, outcome.time)
                 return
-            teacher_params, _, _ = hit
-            self._distill_from(teacher_params, epochs, teacher_apply)
             if on_done is not None:
-                on_done(True, now)
-
-        def denied(now):
-            if on_denied is not None:
-                on_denied(now)
-            fetched(None, now)
+                on_done(False, outcome.time)
 
         self.continuum.discover_and_fetch_async(
-            query or self._default_query(), fetched,
-            requester=self.party_id, on_denied=denied,
+            query or self._default_query(), requester=self.party_id,
+            on_complete=completed,
         )

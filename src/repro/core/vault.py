@@ -190,6 +190,15 @@ class ModelVault:
             )
         self._entries[card.model_id] = VaultEntry(card, blob, signature)
 
+    def evict(self, model_id: str) -> bool:
+        """Drop a stored entry (replica decay in serving caches).
+
+        Returns True if the model was present.  Pure local storage
+        reclaim — any discovery index advertising this vault's copy must
+        be deregistered separately by the caller.
+        """
+        return self._entries.pop(model_id, None) is not None
+
     def cards(self) -> List[ModelCard]:
         """Every stored model's card (latest version each)."""
         return [e.card for e in self._entries.values()]

@@ -1,8 +1,11 @@
 """Batched serving driver: continuous-batching loop over prefill + decode.
 
-Requests arrive with different prompt lengths; the server left-pads to a
-bucket, prefills the batch, then decodes greedily until EOS/max-tokens.
-This is the same ``serve_step`` the dry-run lowers for the decode shapes.
+Requests arrive with different prompt lengths; batching is delegated to the
+serving tier's :class:`~repro.runtime.serving.SlotQueue` — the same bucketed
+slot queue the request-driven :class:`~repro.runtime.serving.RegionServer`
+uses — so the repo has exactly one batching implementation.  Each drained
+slot is left-padded to its bucket, prefilled, then decoded greedily until
+max-tokens; rows land back at their original request index.
 
 Example (CPU smoke):
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2_1_5b --smoke \
@@ -19,6 +22,7 @@ import numpy as np
 
 from repro.configs import get_config, get_smoke_config
 from repro.launch.steps import make_prefill_step, make_serve_step
+from repro.runtime.serving import SlotQueue
 
 
 def make_requests(cfg, n, seed=0, lo=4, hi=24):
@@ -40,6 +44,28 @@ def pad_batch(cfg, prompts, bucket):
     return batch
 
 
+def run_slot(cfg, prefill_fn, serve_fn, params, prompts, bucket, max_new):
+    """Prefill one drained slot and decode it greedily.
+
+    Returns ``(gen, logits, t_prefill, t_decode)`` where ``gen`` holds the
+    ``(len(prompts), max_new)`` generated token ids.
+    """
+    batch = pad_batch(cfg, prompts, bucket)
+    t0 = time.time()
+    logits, cache = prefill_fn(params, batch)
+    next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+    t_prefill = time.time() - t0
+
+    outs = [np.asarray(next_tok)[:, 0]]
+    t0 = time.time()
+    for _ in range(max_new - 1):
+        tok, logits, cache = serve_fn(params, cache, {"token": next_tok})
+        next_tok = tok[:, None]
+        outs.append(np.asarray(tok))
+    t_decode = time.time() - t0
+    return np.stack(outs, axis=1), logits, t_prefill, t_decode
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2_1_5b")
@@ -47,6 +73,7 @@ def main(argv=None):
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--bucket", type=int, default=32)
+    ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -60,29 +87,31 @@ def main(argv=None):
 
     params = model.init(jax.random.PRNGKey(args.seed))
     prompts = make_requests(cfg, args.requests, args.seed)
-    batch = pad_batch(cfg, prompts, args.bucket)
 
-    t0 = time.time()
-    logits, cache = prefill_fn(params, batch)
-    next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
-    t_prefill = time.time() - t0
+    queue = SlotQueue(buckets=(args.bucket,), max_batch=args.max_batch)
+    for i, p in enumerate(prompts):
+        queue.add(args.arch, len(p), i)
 
-    outs = [np.asarray(next_tok)[:, 0]]
-    t0 = time.time()
-    for _ in range(args.max_new - 1):
-        tok, logits, cache = serve_fn(params, cache, {"token": next_tok})
-        next_tok = tok[:, None]
-        outs.append(np.asarray(tok))
-    t_decode = time.time() - t0
+    gen = np.zeros((args.requests, args.max_new), np.int32)
+    t_prefill = t_decode = 0.0
+    n_slots = 0
+    while len(queue):
+        idxs = queue.drain(args.arch, args.bucket)
+        rows, logits, tp, td = run_slot(cfg, prefill_fn, serve_fn, params,
+                                        [prompts[i] for i in idxs],
+                                        args.bucket, args.max_new)
+        assert np.isfinite(np.asarray(logits, np.float32)).all()
+        gen[np.asarray(idxs)] = rows
+        t_prefill += tp
+        t_decode += td
+        n_slots += 1
 
-    gen = np.stack(outs, axis=1)  # (B, max_new)
     assert gen.shape == (args.requests, args.max_new)
-    assert np.isfinite(np.asarray(logits, np.float32)).all()
     for i, p in enumerate(prompts):
         print(f"req{i}: prompt_len={len(p)} -> {gen[i, :8].tolist()}...")
     tps = args.requests * args.max_new / max(t_decode, 1e-9)
-    print(f"prefill {t_prefill:.2f}s   decode {t_decode:.2f}s "
-          f"({tps:.1f} tok/s batch-aggregate)")
+    print(f"{n_slots} slot(s)   prefill {t_prefill:.2f}s   "
+          f"decode {t_decode:.2f}s ({tps:.1f} tok/s batch-aggregate)")
     return 0
 
 

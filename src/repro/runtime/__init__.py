@@ -24,6 +24,9 @@ __all__ = [
     "record", "replay", "assert_replay", "run_scenario",
     "SnapshotError", "snapshot_world", "restore_world", "snapshot_manifest",
     "SNAPSHOT_VERSION",
+    "PredictRequest", "Prediction", "RegionServer", "ServerStats",
+    "ServingConfig", "ServingReport", "ServingTier", "SlotQueue",
+    "pick_bucket", "serve_requests",
 ]
 
 _LAZY = {
@@ -58,6 +61,16 @@ _LAZY = {
     "restore_world": "repro.runtime.snapshot",
     "snapshot_manifest": "repro.runtime.snapshot",
     "SNAPSHOT_VERSION": "repro.runtime.snapshot",
+    "PredictRequest": "repro.runtime.serving",
+    "Prediction": "repro.runtime.serving",
+    "RegionServer": "repro.runtime.serving",
+    "ServerStats": "repro.runtime.serving",
+    "ServingConfig": "repro.runtime.serving",
+    "ServingReport": "repro.runtime.serving",
+    "ServingTier": "repro.runtime.serving",
+    "SlotQueue": "repro.runtime.serving",
+    "pick_bucket": "repro.runtime.serving",
+    "serve_requests": "repro.runtime.serving",
 }
 
 

@@ -37,7 +37,7 @@ from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
-from repro.core.continuum import Continuum
+from repro.core.continuum import Continuum, OutcomeStatus
 from repro.core.discovery import ModelQuery
 from repro.core.incentives import IncentiveLedger
 from repro.runtime.faults import FaultPlan
@@ -183,28 +183,25 @@ class CohortExchangeActor:
 
         for j, i in enumerate(online):
             def do_query(_now, i=int(i)):
-                def done(hit, _now2, i=i):
-                    if hit is None:
+                def completed(outcome, i=i):
+                    if outcome.ok:
+                        t_params, t_card, res = outcome.payload
+                        local = getattr(res, "local", None)
+                        if local is True:
+                            counters["local_hits"] += 1
+                        elif local is False:
+                            counters["escalated"] += 1
+                        teachers[i] = (t_params, t_card)
+                    elif outcome.status is OutcomeStatus.MISS:
                         counters["misses"] += 1
-                        return
-                    t_params, t_card, res = hit
-                    local = getattr(res, "local", None)
-                    if local is True:
-                        counters["local_hits"] += 1
-                    elif local is False:
-                        counters["escalated"] += 1
-                    teachers[i] = (t_params, t_card)
-
-                def denied(_now2):
-                    counters["denied"] += 1
-
-                def fetch_failed(_reason, _now2):
-                    counters["failed"] += 1
+                    elif outcome.status is OutcomeStatus.FAILED:
+                        counters["failed"] += 1
+                    else:  # credit-denied or membership-refused
+                        counters["denied"] += 1
 
                 cont.discover_and_fetch_async(
-                    make_query(i), done, top_k=cfg.top_k,
-                    requester=pop.party_ids[i], on_denied=denied,
-                    on_fail=fetch_failed,
+                    make_query(i), top_k=cfg.top_k,
+                    requester=pop.party_ids[i], on_complete=completed,
                 )
 
             self._loop.call_after(

@@ -56,25 +56,52 @@ class EventLoop:
         self.clock = clock or SimClock()
         self._heap: List = []  # (time, seq, label, callback, payload)
         self._seq = 0
+        self._cancelled: set = set()  # seqs of cancelled pending events
         self.keep_log = keep_log
         self.log: List[EventRecord] = []
         self.events_processed = 0
 
     # -- scheduling ----------------------------------------------------------
     def call_at(self, t: float, fn: Callable[[float], Any], label: str = "",
-                payload: Optional[Dict] = None) -> None:
-        """Schedule ``fn(now)`` at absolute simulated time ``t``."""
+                payload: Optional[Dict] = None) -> int:
+        """Schedule ``fn(now)`` at absolute simulated time ``t``.
+
+        Returns a handle (the event's sequence number) accepted by
+        :meth:`cancel`.
+        """
         if t < self.clock.now():
             raise ValueError(
                 f"cannot schedule in the past: {t} < {self.clock.now()}"
             )
-        heapq.heappush(self._heap, (t, self._seq, label, fn, payload))
+        handle = self._seq
+        heapq.heappush(self._heap, (t, handle, label, fn, payload))
         self._seq += 1
+        return handle
 
     def call_after(self, delay: float, fn: Callable[[float], Any],
-                   label: str = "", payload: Optional[Dict] = None) -> None:
-        """Schedule ``fn(now)`` after ``delay`` simulated seconds."""
-        self.call_at(self.clock.now() + max(delay, 0.0), fn, label, payload)
+                   label: str = "", payload: Optional[Dict] = None) -> int:
+        """Schedule ``fn(now)`` after ``delay`` simulated seconds.
+
+        Returns a cancellation handle, as :meth:`call_at`.
+        """
+        return self.call_at(self.clock.now() + max(delay, 0.0), fn, label,
+                            payload)
+
+    def cancel(self, handle: int) -> None:
+        """Cancel a pending event by its scheduling handle.
+
+        Lazy removal: the entry stays in the heap but is skipped (and never
+        logged) when it reaches the top.  Cancelling an event that already
+        fired is a no-op — the handle is simply never seen again.  The
+        serving tier uses this to collapse a slot's deadline-flush timer
+        when the slot fills early.
+        """
+        self._cancelled.add(handle)
+
+    def _skip_cancelled(self) -> None:
+        while self._heap and self._heap[0][1] in self._cancelled:
+            _, seq, _, _, _ = heapq.heappop(self._heap)
+            self._cancelled.discard(seq)
 
     def add_actor(self, actor: Actor, start_at: float = 0.0,
                   label: str = "") -> None:
@@ -95,10 +122,12 @@ class EventLoop:
         Returned in firing order.  Callbacks are *not* included — they are
         closures; a snapshot can only persist events whose payload carries
         enough information to reconstruct the callback (see
-        :mod:`repro.runtime.snapshot`).
+        :mod:`repro.runtime.snapshot`).  Cancelled-but-not-yet-skipped
+        entries are excluded: they will never fire.
         """
         return [(t, seq, label, payload)
-                for t, seq, label, _fn, payload in sorted(self._heap)]
+                for t, seq, label, _fn, payload in sorted(self._heap)
+                if seq not in self._cancelled]
 
     def restore_event(self, t: float, seq: int, label: str,
                       fn: Callable[[float], Any],
@@ -129,6 +158,7 @@ class EventLoop:
     # -- running -------------------------------------------------------------
     def step(self) -> bool:
         """Fire the single next event. Returns False when the queue is empty."""
+        self._skip_cancelled()
         if not self._heap:
             return False
         t, seq, label, fn, payload = heapq.heappop(self._heap)
@@ -141,7 +171,10 @@ class EventLoop:
 
     def run_until(self, t_end: float) -> None:
         """Run every event scheduled at or before ``t_end``."""
-        while self._heap and self._heap[0][0] <= t_end:
+        while True:
+            self._skip_cancelled()
+            if not self._heap or self._heap[0][0] > t_end:
+                break
             self.step()
         if self.clock.now() < t_end:
             self.clock.advance_to(t_end)
@@ -156,4 +189,4 @@ class EventLoop:
         return fired
 
     def __len__(self) -> int:
-        return len(self._heap)
+        return len(self._heap) - len(self._cancelled)

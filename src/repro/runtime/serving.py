@@ -1,0 +1,699 @@
+"""Request-driven serving tier: the continuum answers inference traffic.
+
+The exchange (training plane) moves *models*; this module adds the request
+plane the paper's model-as-commodity framing ultimately pays off in: parties
+issue :class:`PredictRequest`\\ s against discovered models and the continuum
+answers them as *served predictions*, without shipping weights to the
+device.  Everything runs on the same deterministic
+:class:`~repro.runtime.loop.EventLoop` as the exchange, so served traffic
+is replayable (and traceable) exactly like publishes and fetches.
+
+Request path (hierarchical topology)::
+
+    party ──PredictRequest──▶ RegionServer (its home region)
+                                 │ 1. serving replica index   (hit: "replica")
+                                 │ 2. region discovery shard  (hit: "shard")
+                                 │ 3. cloud discovery index   (hit: "cloud")
+                                 ▼              │
+                             SlotQueue          └─▶ replica install:
+                          (bucketed prefill/        blob rides the backbone
+                           decode slots)            down, verify-on-fetch
+                                 │                  gates it, then the
+                                 ▼                  waiting requests queue
+                          slot completes ──▶ Outcome(OK, Prediction, fee)
+
+Each :class:`RegionServer` batches its requests into fixed-shape slots — a
+:class:`SlotQueue` buckets prompts by padded length per model and a slot
+fires when it fills (``max_batch``) or its deadline (``max_wait_s``)
+expires, exactly the queue/slot bookkeeping ``launch/serve.py`` uses for
+real batched decoding (maxtext-style offline inference); slot compute time
+is simulated from per-token prefill/decode costs.
+
+Economics: every resolved query settles a per-query micro-fee
+(``IncentiveLedger.on_serve`` at ``serve_cost``) requester → model owner,
+with the service fee split cloud/region exactly like fetch fees — and
+``sum(balances) == minted`` stays intact because serving never mints.  A
+query lost to a dark region (FaultPlan regional outage) at any point after
+payment is refunded exactly (``on_serve_refund``), including in-flight
+slots whose region goes dark mid-decode.
+
+Popularity-driven placement closes the loop: the tier's periodic review
+replicates models whose per-window demand crosses ``hot_threshold`` into
+every region's serving vault (paid for in backbone egress), and replicas
+that see no demand for ``decay_windows`` consecutive reviews are evicted.
+Reviews re-arm only while requests are arriving, so an idle world still
+runs to quiescence — which also means decay needs ongoing traffic to
+observe idleness (cold replicas persist in a world with no requests at
+all, by design).
+
+Trust: a replica is verified (``Continuum.verify_delivery``) *before* it
+is installed and served from — a byzantine publisher's inflated card is
+caught at install time, the publisher is slashed (``punish_fraud``), and
+every request waiting on the install is refunded.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.checkpoint.serde import params_to_bytes
+from repro.core.continuum import EDGE_TO_CLOUD, Outcome, OutcomeStatus
+from repro.core.discovery import DiscoveryResult, DiscoveryService, ModelQuery
+from repro.core.vault import ModelVault
+
+
+def pick_bucket(buckets: Sequence[int], n: int) -> int:
+    """The smallest bucket that fits ``n`` tokens, else the largest.
+
+    Prompts longer than every bucket are truncated-to-fit by the batching
+    engine (they pad to the largest shape), matching the standalone
+    driver's behaviour.
+    """
+    for b in buckets:
+        if n <= b:
+            return b
+    return buckets[-1]
+
+
+class SlotQueue:
+    """Bucketed FIFO queues feeding fixed-shape prefill/decode slots.
+
+    Requests are keyed by ``(model, padded-length bucket)`` so one slot is
+    always a single model at a single shape — the precondition for real
+    batched prefill (one compiled program per bucket, no recompiles).
+    ``add`` returns the chosen bucket and the queue depth after insertion
+    so the caller can flush a slot the moment it fills; ``drain`` pops at
+    most ``max_batch`` requests in arrival order.
+    """
+
+    def __init__(self, buckets: Sequence[int], max_batch: int):
+        if not buckets:
+            raise ValueError("need at least one prompt bucket")
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        self.buckets = tuple(sorted(buckets))
+        self.max_batch = max_batch
+        self._queues: Dict[Tuple[str, int], List] = {}
+
+    def add(self, key: str, prompt_len: int, item) -> Tuple[int, int]:
+        """Queue one item; returns ``(bucket, depth after insertion)``."""
+        bucket = pick_bucket(self.buckets, prompt_len)
+        q = self._queues.setdefault((key, bucket), [])
+        q.append(item)
+        return bucket, len(q)
+
+    def depth(self, key: str, bucket: int) -> int:
+        """How many items are queued under ``(key, bucket)``."""
+        return len(self._queues.get((key, bucket), ()))
+
+    def drain(self, key: str, bucket: int) -> List:
+        """Pop up to ``max_batch`` items from one queue, arrival order."""
+        q = self._queues.get((key, bucket))
+        if not q:
+            return []
+        slot = q[:self.max_batch]
+        rest = q[self.max_batch:]
+        if rest:
+            self._queues[(key, bucket)] = rest
+        else:
+            del self._queues[(key, bucket)]
+        return slot
+
+    def pending(self) -> List[Tuple[str, int]]:
+        """Sorted ``(key, bucket)`` pairs with queued items."""
+        return sorted(k for k, q in self._queues.items() if q)
+
+    def __len__(self) -> int:
+        return sum(len(q) for q in self._queues.values())
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingConfig:
+    """Knobs for the serving tier (batching, simulated compute, placement).
+
+    Slot compute time is ``batch_overhead_s + prefill_s_per_token × bucket
+    + decode_s_per_token × max_new`` — a linear model of one bucketed
+    prefill plus greedy decode, the same shape the standalone driver
+    measures for real.  ``placement_every_s`` is the review cadence;
+    ``hot_threshold`` is the per-window demand (tier-wide) that triggers
+    replication; ``decay_windows`` is how many consecutive zero-demand
+    reviews a replica survives.
+    """
+
+    buckets: Tuple[int, ...] = (16, 32, 64, 128)
+    max_batch: int = 8
+    max_wait_s: float = 0.25
+    batch_overhead_s: float = 0.004
+    prefill_s_per_token: float = 0.0002
+    decode_s_per_token: float = 0.0015
+    token_bytes: int = 4
+    top_k: int = 3
+    placement_every_s: float = 60.0
+    hot_threshold: int = 16
+    decay_windows: int = 3
+
+
+@dataclasses.dataclass(frozen=True)
+class PredictRequest:
+    """One inference request a party issues against the serving tier."""
+
+    request_id: str
+    requester: str
+    task: str
+    prompt_tokens: int
+    max_new_tokens: int = 16
+    min_accuracy: float = 0.0
+    at: float = 0.0  # earliest simulated arrival time
+
+
+@dataclasses.dataclass(frozen=True)
+class Prediction:
+    """A served request's result: which model answered, from where, how fast.
+
+    ``source`` is the resolution path — ``"replica"`` (the region's
+    serving vault), ``"shard"`` (an in-region vault via the region's
+    discovery shard), or ``"cloud"`` (escalated; the answer was served
+    after a replica install).  ``queued_s`` is time spent waiting for a
+    slot; ``latency_s`` is arrival→completion.
+    """
+
+    request_id: str
+    model_id: str
+    version: int
+    region_id: Optional[str]
+    source: str
+    tokens: int
+    queued_s: float
+    latency_s: float
+
+
+@dataclasses.dataclass
+class ServerStats:
+    """One region server's counters (the tier report sums them)."""
+
+    requests: int = 0
+    served: int = 0
+    replica_hits: int = 0
+    shard_hits: int = 0
+    escalations: int = 0
+    misses: int = 0
+    denied: int = 0
+    refused: int = 0
+    failed: int = 0
+    outage_drops: int = 0
+    frauds: int = 0
+    refunds: int = 0
+    evictions: int = 0
+    hot_pushes: int = 0
+
+
+@dataclasses.dataclass
+class ServingReport:
+    """Tier-wide outcome of a serving run (see :func:`serve_requests`)."""
+
+    requests: int = 0
+    served: int = 0
+    replica_hits: int = 0
+    shard_hits: int = 0
+    escalations: int = 0
+    misses: int = 0
+    denied: int = 0
+    refused: int = 0
+    failed: int = 0
+    outage_drops: int = 0
+    frauds: int = 0
+    refunds: int = 0
+    evictions: int = 0
+    hot_pushes: int = 0
+    p50_s: float = 0.0
+    p99_s: float = 0.0
+    sim_qps: float = 0.0
+    conserved: bool = True
+
+    def as_dict(self) -> Dict:
+        """Plain-dict view for benchmark/report JSON."""
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class _Pending:
+    """One paid, resolved request waiting for (or riding in) a slot."""
+
+    req: PredictRequest
+    emit: Callable
+    card: object
+    source: str
+    region_operator: Optional[str]
+    gated: bool
+    fee: Dict
+    arrived: float
+
+
+class RegionServer:
+    """One region's serving endpoint: replica vault + batcher + settlement.
+
+    Resolution order for a request: the server's own **replica index**
+    (models placement has copied into the serving vault), then the
+    region's **discovery shard** (in-region edge vaults + cache), then
+    the **cloud index** — a cloud hit triggers a replica install and the
+    request waits for it.  The micro-fee is settled at resolution time
+    (the region operator earns its cut for replica/shard service) and
+    refunded exactly if the query is later lost to an outage or a
+    fraudulent replica.  A flat continuum runs a single server with no
+    region: every non-replica resolution is a cloud escalation.
+    """
+
+    def __init__(self, server_id: str, continuum, cfg: ServingConfig,
+                 region=None):
+        self.server_id = server_id
+        self.cont = continuum
+        self.cfg = cfg
+        self.region = region
+        self.replicas = ModelVault(vault_id=f"serve:{server_id}",
+                                   clock=continuum.clock)
+        self.index = DiscoveryService(clock=continuum.clock)
+        self.index.attach_vault(self.replicas)
+        self.queue = SlotQueue(cfg.buckets, cfg.max_batch)
+        self.stats = ServerStats()
+        # demand per model this placement window (reset at every review)
+        self.window_hits: Dict[str, int] = {}
+        self._idle: Dict[str, int] = {}  # consecutive zero-demand windows
+        self._timers: Dict[Tuple[str, int], int] = {}  # slot deadline handles
+        self._installing: Dict[str, List[_Pending]] = {}
+
+    # -- request intake ------------------------------------------------------
+    def _offline(self, now: float) -> bool:
+        return (self.region is not None and self.cont.faults is not None
+                and self.cont.faults.region_offline(self.region.region_id,
+                                                    now))
+
+    def handle(self, req: PredictRequest, emit, now: float) -> None:
+        """Resolve, charge, and enqueue one arrived request.
+
+        Terminal short-circuits (no payment, nothing queued): the
+        requester retired (``REFUSED``), the region dark at arrival
+        (``FAILED``/outage), no model anywhere satisfies the query
+        (``MISS``), or the credit gate refuses (``DENIED``).
+        """
+        self.stats.requests += 1
+        if req.requester in self.cont.retired:
+            self.stats.refused += 1
+            emit(OutcomeStatus.REFUSED, now, reason="retired")
+            return
+        if self._offline(now):
+            self.stats.failed += 1
+            self.stats.outage_drops += 1
+            emit(OutcomeStatus.FAILED, now, reason="outage")
+            return
+        source, best = self._resolve(
+            ModelQuery(task=req.task, min_accuracy=req.min_accuracy))
+        if best is None:
+            self.stats.misses += 1
+            emit(OutcomeStatus.MISS, now)
+            return
+        card = best.card
+        region_operator = (self.region.operator
+                           if self.region is not None and source != "cloud"
+                           else None)
+        gated = self.cont.ledger is not None
+        if gated and not self.cont.ledger.can_serve(req.requester):
+            self.cont.ledger.on_denied(req.requester)
+            self.stats.denied += 1
+            emit(OutcomeStatus.DENIED, now, reason="credit")
+            return
+        fee = {}
+        if gated:
+            # pay at resolution time (before batching): a slot lost to an
+            # outage mid-decode then refunds exactly what was charged
+            self.cont.ledger.on_serve(req.requester, card.owner,
+                                      region_operator=region_operator)
+            fee = self.cont.ledger.fee_record(
+                region_operator, cost=self.cont.ledger.serve_cost)
+        self.window_hits[card.model_id] = (
+            self.window_hits.get(card.model_id, 0) + 1)
+        if source == "replica":
+            self.stats.replica_hits += 1
+        elif source == "shard":
+            self.stats.shard_hits += 1
+        else:
+            self.stats.escalations += 1
+        entry = _Pending(req=req, emit=emit, card=card, source=source,
+                         region_operator=region_operator, gated=gated,
+                         fee=fee, arrived=now)
+        if source == "cloud":
+            self._escalate(best, entry, now)
+        else:
+            self._enqueue(entry, now)
+
+    def _resolve(self, query: ModelQuery):
+        """Nearest-first resolution: replica index → region shard → cloud."""
+        res = self.index.query(query, top_k=self.cfg.top_k)
+        if res:
+            return "replica", res[0]
+        if self.region is not None:
+            res = self.region.shard.query(query, top_k=self.cfg.top_k)
+            if res:
+                return "shard", res[0]
+        res = self.cont.discovery.query(query, top_k=self.cfg.top_k)
+        if res:
+            return "cloud", res[0]
+        return "miss", None
+
+    # -- replica install (escalation + hot-push) -----------------------------
+    def _escalate(self, best: DiscoveryResult, entry: _Pending,
+                  now: float) -> None:
+        waiting = self._installing.get(best.card.model_id)
+        if waiting is not None:  # install already in flight: join the wait
+            waiting.append(entry)
+            return
+        self._installing[best.card.model_id] = [entry]
+        self._install(best, now)
+
+    def _install(self, best: DiscoveryResult, now: float) -> None:
+        """Pull a replica blob down the backbone into the serving vault.
+
+        The caller must have seeded ``self._installing[model_id]`` (with
+        the requests waiting on the install, or ``[]`` for a hot-push).
+        Delivery is verified before the replica serves (see
+        :meth:`_replica_arrived`).
+        """
+        params, card = self.cont.discovery.fetch(best)
+        nbytes = len(params_to_bytes(params))
+        if self.region is not None:
+            dl_t = self.region.link_up.transfer_time(nbytes)
+        else:
+            dl_t = EDGE_TO_CLOUD.transfer_time(nbytes)
+        self.cont.traffic.downloads_bytes += nbytes
+        self.cont.traffic.cloud_egress_bytes += nbytes
+        self.cont.traffic.total_time_s += dl_t
+        self.cont.loop.call_after(
+            dl_t, lambda now2: self._replica_arrived(params, card, now2),
+            label=f"replica {card.model_id} -> {self.server_id}",
+            payload={"op": "serve_replica", "model": card.model_id,
+                     "nbytes": nbytes, "server": self.server_id},
+        )
+
+    def _replica_arrived(self, params, card, now: float) -> None:
+        waiting = self._installing.pop(card.model_id, [])
+        if self._offline(now):
+            # the region went dark while the blob was in flight: the
+            # replica is lost and every request waiting on it refunds
+            self.stats.outage_drops += len(waiting)
+            for e in waiting:
+                self._refund(e, "outage", now)
+            return
+        fraud, _claimed, _measured = self.cont.verify_delivery(params, card)
+        if fraud:
+            # byzantine replica caught before it ever serves a query
+            self.stats.frauds += 1
+            self.cont.punish_fraud(card)
+            for e in waiting:
+                self._refund(e, "fraud", now)
+            return
+        stored = self.replicas.store_copy(params, card)
+        self.index.register(stored, self.replicas.vault_id)
+        self._idle.pop(card.model_id, None)
+        for e in waiting:
+            self._enqueue(e, now)
+
+    def _refund(self, e: _Pending, reason: str, now: float) -> None:
+        fee = {}
+        if e.gated:
+            self.cont.ledger.on_serve_refund(
+                e.req.requester, e.card.owner,
+                region_operator=e.region_operator)
+            fee = self.cont.ledger.fee_record(
+                e.region_operator, cost=self.cont.ledger.serve_cost,
+                refunded=True)
+            self.stats.refunds += 1
+        self.stats.failed += 1
+        e.emit(OutcomeStatus.FAILED, now, reason=reason, fee=fee)
+
+    # -- batching ------------------------------------------------------------
+    def _enqueue(self, entry: _Pending, now: float) -> None:
+        mid = entry.card.model_id
+        bucket, depth = self.queue.add(mid, entry.req.prompt_tokens, entry)
+        key = (mid, bucket)
+        if depth >= self.cfg.max_batch:
+            # slot full: collapse the pending deadline and flush now
+            handle = self._timers.pop(key, None)
+            if handle is not None:
+                self.cont.loop.cancel(handle)
+            self.cont.loop.call_after(
+                0.0, lambda now2: self._flush(key, now2),
+                label=f"slot-full {mid}@{bucket}",
+                payload={"op": "slot_full", "model": mid, "bucket": bucket,
+                         "server": self.server_id},
+            )
+        elif key not in self._timers:
+            self._timers[key] = self.cont.loop.call_after(
+                self.cfg.max_wait_s,
+                lambda now2: self._flush(key, now2),
+                label=f"slot-deadline {mid}@{bucket}",
+                payload={"op": "slot_deadline", "model": mid,
+                         "bucket": bucket, "server": self.server_id},
+            )
+
+    def _flush(self, key: Tuple[str, int], now: float) -> None:
+        self._timers.pop(key, None)
+        mid, bucket = key
+        slot = self.queue.drain(mid, bucket)
+        if not slot:
+            return
+        leftover = self.queue.depth(mid, bucket)
+        if leftover >= self.cfg.max_batch:
+            self.cont.loop.call_after(
+                0.0, lambda now2: self._flush(key, now2),
+                label=f"slot-full {mid}@{bucket}",
+                payload={"op": "slot_full", "model": mid, "bucket": bucket,
+                         "server": self.server_id},
+            )
+        elif leftover:
+            self._timers[key] = self.cont.loop.call_after(
+                self.cfg.max_wait_s,
+                lambda now2: self._flush(key, now2),
+                label=f"slot-deadline {mid}@{bucket}",
+                payload={"op": "slot_deadline", "model": mid,
+                         "bucket": bucket, "server": self.server_id},
+            )
+        if self._offline(now):
+            self.stats.outage_drops += len(slot)
+            for e in slot:
+                self._refund(e, "outage", now)
+            return
+        compute_t = (self.cfg.batch_overhead_s
+                     + self.cfg.prefill_s_per_token * bucket
+                     + self.cfg.decode_s_per_token
+                     * max(e.req.max_new_tokens for e in slot))
+        self.cont.loop.call_after(
+            compute_t,
+            lambda now2: self._slot_done(slot, compute_t, now2),
+            label=f"slot {mid}@{bucket} x{len(slot)}",
+            payload={"op": "slot", "model": mid, "bucket": bucket,
+                     "batch": len(slot), "server": self.server_id},
+        )
+
+    def _slot_done(self, slot: List[_Pending], compute_t: float,
+                   now: float) -> None:
+        if self._offline(now):
+            # the region went dark mid-decode: the whole slot is lost
+            self.stats.outage_drops += len(slot)
+            for e in slot:
+                self._refund(e, "outage", now)
+            return
+        for e in slot:
+            tokens = e.req.prompt_tokens + e.req.max_new_tokens
+            self.cont.traffic.serve_bytes += tokens * self.cfg.token_bytes
+            self.stats.served += 1
+            pred = Prediction(
+                request_id=e.req.request_id,
+                model_id=e.card.model_id,
+                version=e.card.version,
+                region_id=(self.region.region_id
+                           if self.region is not None else None),
+                source=e.source,
+                tokens=tokens,
+                queued_s=now - compute_t - e.arrived,
+                latency_s=now - e.arrived,
+            )
+            e.emit(OutcomeStatus.OK, now, payload=pred, fee=e.fee)
+
+
+class ServingTier:
+    """The request plane over one continuum: a server per region.
+
+    Built on an attached :class:`~repro.runtime.topology.RegionalTopology`
+    it runs one :class:`RegionServer` per region (requests route to the
+    requester's home region by the same stable bucketing the exchange
+    uses); on a flat continuum it runs a single ``"cloud"`` server.
+    :meth:`submit` schedules a request's arrival; every completion is
+    delivered as one :class:`~repro.core.continuum.Outcome`.
+
+    The placement review (hot replication + replica decay) arms itself on
+    the first arrival and re-arms only while traffic keeps coming, so a
+    drained tier quiesces with the loop.
+    """
+
+    def __init__(self, continuum, cfg: Optional[ServingConfig] = None):
+        self.cont = continuum
+        self.cfg = cfg if cfg is not None else ServingConfig()
+        self.servers: Dict[str, RegionServer] = {}
+        if continuum.topology is not None:
+            for rid in continuum.topology.region_ids():
+                self.servers[rid] = RegionServer(
+                    rid, continuum, self.cfg,
+                    region=continuum.topology.regions[rid])
+        else:
+            self.servers["cloud"] = RegionServer("cloud", continuum, self.cfg)
+        self.requests = 0
+        self._latencies: List[float] = []
+        self._first_t: Optional[float] = None
+        self._last_t: Optional[float] = None
+        self._review_armed = False
+        self._activity = False
+
+    def server_for(self, requester: str) -> RegionServer:
+        """The requester's home server (its region, or the flat server)."""
+        if self.cont.topology is not None:
+            return self.servers[self.cont.topology.region_of(requester)
+                                .region_id]
+        return self.servers["cloud"]
+
+    def submit(self, req: PredictRequest,
+               on_complete: Optional[Callable] = None) -> None:
+        """Schedule one request's arrival at its home server.
+
+        The request arrives at ``max(req.at, now)``; ``on_complete``
+        (optional) receives exactly one :class:`Outcome` — ``OK`` with a
+        :class:`Prediction` payload and the micro-fee record, ``MISS``,
+        ``DENIED``, ``REFUSED``, or ``FAILED`` with the refund record.
+        """
+        now = self.cont.clock.now()
+        t = max(req.at, now)
+        self.requests += 1
+        server = self.server_for(req.requester)
+
+        def emit(status, now2, payload=None, reason=None, fee=None):
+            if status is OutcomeStatus.OK:
+                self._latencies.append(now2 - t)
+                self._last_t = (now2 if self._last_t is None
+                                else max(self._last_t, now2))
+            if on_complete is not None:
+                on_complete(Outcome(status, now2, payload, reason, fee or {}))
+
+        def arrive(now2: float):
+            if self._review_armed:
+                self._activity = True
+            else:
+                self._arm_review()
+            server.handle(req, emit, now2)
+
+        self.cont.loop.call_at(
+            t, arrive, label=f"serve-req {req.request_id}",
+            payload={"op": "serve_request", "request": req.request_id,
+                     "task": req.task, "requester": req.requester,
+                     "server": server.server_id},
+        )
+        self._first_t = (t if self._first_t is None
+                         else min(self._first_t, t))
+
+    # -- popularity-driven placement -----------------------------------------
+    def _arm_review(self) -> None:
+        self._review_armed = True
+        self._activity = False
+        self.cont.loop.call_after(
+            self.cfg.placement_every_s, self._review,
+            label="placement-review", payload={"op": "placement_review"},
+        )
+
+    def _review(self, now: float) -> None:
+        """One placement window: replicate the hot, age out the cold."""
+        self._review_armed = False
+        totals: Dict[str, int] = {}
+        for sid in sorted(self.servers):
+            for mid, n in self.servers[sid].window_hits.items():
+                totals[mid] = totals.get(mid, 0) + n
+        hot = sorted(m for m, n in totals.items()
+                     if n >= self.cfg.hot_threshold)
+        for mid in hot:
+            entry = self.cont.discovery.lookup(mid)
+            if entry is None:
+                continue  # retired or fraud-purged since it got hot
+            card, vault_id = entry
+            for sid in sorted(self.servers):
+                server = self.servers[sid]
+                if mid in server.replicas or mid in server._installing:
+                    continue
+                server.stats.hot_pushes += 1
+                server._installing[mid] = []  # install with no waiters
+                server._install(DiscoveryResult(card, vault_id, 0.0), now)
+        for sid in sorted(self.servers):
+            server = self.servers[sid]
+            for card in server.replicas.cards():
+                mid = card.model_id
+                if server.window_hits.get(mid, 0):
+                    server._idle[mid] = 0
+                    continue
+                idle = server._idle.get(mid, 0) + 1
+                if idle >= self.cfg.decay_windows:
+                    server.replicas.evict(mid)
+                    server.index.deregister(mid)
+                    server._idle.pop(mid, None)
+                    server.stats.evictions += 1
+                else:
+                    server._idle[mid] = idle
+            server.window_hits.clear()
+        if self._activity:
+            self._arm_review()
+
+    # -- reporting -----------------------------------------------------------
+    def report(self) -> ServingReport:
+        """Aggregate server counters + latency percentiles + conservation."""
+        rep = ServingReport(requests=self.requests)
+        for server in self.servers.values():
+            for f in dataclasses.fields(ServerStats):
+                if f.name == "requests":
+                    continue  # tier-level submit count is authoritative
+                setattr(rep, f.name,
+                        getattr(rep, f.name) + getattr(server.stats, f.name))
+        lat = sorted(self._latencies)
+        if lat:
+            rep.p50_s = lat[len(lat) // 2]
+            rep.p99_s = lat[min(len(lat) - 1, int(len(lat) * 0.99))]
+        if rep.served:
+            span = ((self._last_t - self._first_t)
+                    if self._first_t is not None and self._last_t is not None
+                    else 0.0)
+            rep.sim_qps = rep.served / span if span > 0 else float(rep.served)
+        if self.cont.ledger is not None:
+            try:
+                self.cont.ledger.assert_conserved()
+            except AssertionError:
+                rep.conserved = False
+        return rep
+
+
+def serve_requests(continuum, requests: Sequence[PredictRequest],
+                   cfg: Optional[ServingConfig] = None,
+                   on_complete: Optional[Callable] = None) -> ServingReport:
+    """Serve a batch of requests to quiescence; the stable entry point.
+
+    Builds a :class:`ServingTier` over the continuum, submits every
+    request (``on_complete``, if given, fires once per request with its
+    :class:`Outcome`), runs the shared event loop dry, and returns the
+    tier's :class:`ServingReport` — counters, simulated p50/p99 latency,
+    sustained simulated queries/sec, and whether the ledger stayed
+    conserved through micro-fees and refunds.
+    """
+    tier = ServingTier(continuum, cfg)
+    for req in requests:
+        tier.submit(req, on_complete)
+    continuum.loop.run_to_quiescence()
+    return tier.report()
+
+
+__all__ = [
+    "PredictRequest", "Prediction", "RegionServer", "ServerStats",
+    "ServingConfig", "ServingReport", "ServingTier", "SlotQueue",
+    "pick_bucket", "serve_requests",
+]

@@ -180,6 +180,14 @@ class RegionalTopology:
     def __len__(self) -> int:
         return len(self.regions)
 
+    def region_ids(self) -> List[str]:
+        """Sorted region ids — the deterministic placement order.
+
+        The serving tier instantiates one :class:`RegionServer` per entry,
+        so server iteration order is a pure function of the id set.
+        """
+        return list(self._region_order)
+
     def region_of(self, party_id: str) -> Region:
         """Deterministic assignment of a party to its home region."""
         idx = _stable_bucket(party_id, len(self._region_order))

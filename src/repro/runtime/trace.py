@@ -37,6 +37,13 @@ serialized form:
                             a fresh process (:mod:`repro.runtime.snapshot`)
                             with a byte-identical continuation — the
                             durability golden fixture
+  ``serving_microworld``    numpy-only request waves against the serving
+                            tier over a hierarchical continuum — shard
+                            hits, cloud escalations + replica installs,
+                            hot-push replication, replica decay, regional
+                            outage refunds, and byzantine replicas caught
+                            at install, all under the plan (golden fixture
+                            for the request plane)
 """
 from __future__ import annotations
 
@@ -203,7 +210,7 @@ def chaos_microworld(plan: FaultPlan, parties: int = 16, cycles: int = 2,
     byzantine inflation (which only alters the *card*) is caught exactly
     like a real re-evaluation would.
     """
-    from repro.core.continuum import Continuum
+    from repro.core.continuum import Continuum, OutcomeStatus
     from repro.core.discovery import ModelQuery
     from repro.core.incentives import IncentiveLedger
     from repro.core.vault import ModelCard
@@ -248,11 +255,13 @@ def chaos_microworld(plan: FaultPlan, parties: int = 16, cycles: int = 2,
                     metrics={"accuracy": acc, "per_class": {}},
                 )
 
-                def registered(final, _now, acc=acc):
-                    true_accs[(final.model_id, final.version)] = acc
+                def registered(outcome, acc=acc):
+                    if outcome.ok:
+                        final = outcome.payload
+                        true_accs[(final.model_id, final.version)] = acc
 
                 cont.publish_async(pid, params_of[pid], card,
-                                   on_done=registered)
+                                   on_complete=registered)
 
             loop.call_at(t_pub, do_publish, label=f"{pid} publish c{cycle}")
 
@@ -263,17 +272,20 @@ def chaos_microworld(plan: FaultPlan, parties: int = 16, cycles: int = 2,
             acc = true_acc(i, cycle)
 
             def do_query(now, pid=pid, acc=acc):
-                def done(hit, _now):
-                    counters["hits" if hit is not None else "misses"] += 1
+                def completed(outcome):
+                    if outcome.ok:
+                        counters["hits"] += 1
+                    elif outcome.status is OutcomeStatus.MISS:
+                        counters["misses"] += 1
+                    elif outcome.status is OutcomeStatus.FAILED:
+                        counters["failed"] += 1
+                    else:
+                        counters["denied"] += 1
 
                 cont.discover_and_fetch_async(
                     ModelQuery(task="chaos", min_accuracy=acc + 0.02,
                                exclude_owners=(pid,)),
-                    done, requester=pid,
-                    on_denied=lambda _now: counters.__setitem__(
-                        "denied", counters["denied"] + 1),
-                    on_fail=lambda _r, _now: counters.__setitem__(
-                        "failed", counters["failed"] + 1),
+                    requester=pid, on_complete=completed,
                 )
 
             loop.call_at(t_query, do_query, label=f"{pid} query c{cycle}")
@@ -302,6 +314,7 @@ def hierarchy_microworld(plan: FaultPlan, parties: int = 16, cycles: int = 2,
     through cached copies.  All values are pure Python/numpy, so the trace
     is byte-stable across platforms and recordable as a golden fixture.
     """
+    from repro.core.continuum import OutcomeStatus
     from repro.core.discovery import ModelQuery
     from repro.core.incentives import IncentiveLedger
     from repro.core.vault import ModelCard
@@ -337,21 +350,22 @@ def hierarchy_microworld(plan: FaultPlan, parties: int = 16, cycles: int = 2,
             acc = true_acc(i, cycle)
 
             def do_query(now, pid=pid, acc=acc):
-                def done(hit, _now):
-                    if hit is None:
+                def completed(outcome):
+                    if outcome.ok:
+                        counters["hits"] += 1
+                        counters["local" if outcome.payload[2].local
+                                 else "escalated"] += 1
+                    elif outcome.status is OutcomeStatus.MISS:
                         counters["misses"] += 1
-                        return
-                    counters["hits"] += 1
-                    counters["local" if hit[2].local else "escalated"] += 1
+                    elif outcome.status is OutcomeStatus.FAILED:
+                        counters["failed"] += 1
+                    else:
+                        counters["denied"] += 1
 
                 cont.discover_and_fetch_async(
                     ModelQuery(task="hier", min_accuracy=acc + 0.02,
                                exclude_owners=(pid,)),
-                    done, requester=pid,
-                    on_denied=lambda _now: counters.__setitem__(
-                        "denied", counters["denied"] + 1),
-                    on_fail=lambda _r, _now: counters.__setitem__(
-                        "failed", counters["failed"] + 1),
+                    requester=pid, on_complete=completed,
                 )
 
             loop.call_at(t_query, do_query, label=f"{pid} query")
@@ -371,11 +385,13 @@ def hierarchy_microworld(plan: FaultPlan, parties: int = 16, cycles: int = 2,
                     metrics={"accuracy": acc, "per_class": {}},
                 )
 
-                def registered(final, _now, acc=acc):
-                    true_accs[(final.model_id, final.version)] = acc
+                def registered(outcome, acc=acc):
+                    if outcome.ok:
+                        final = outcome.payload
+                        true_accs[(final.model_id, final.version)] = acc
 
                 cont.publish_async(pid, params_of[pid], card,
-                                   on_done=registered)
+                                   on_complete=registered)
 
             loop.call_at(t_pub, do_publish, label=f"{pid} publish c{cycle}")
 
@@ -484,6 +500,7 @@ def schedule_durable_cycle(cont, plan: FaultPlan, parties: int, cycle: int,
     3. two query waves, the second running against caches the first
        seeded.
     """
+    from repro.core.continuum import OutcomeStatus
     from repro.core.discovery import ModelQuery
     from repro.core.vault import ModelCard
 
@@ -538,17 +555,20 @@ def schedule_durable_cycle(cont, plan: FaultPlan, parties: int, cycle: int,
                 if pid in cont.retired:
                     counters["refused_query"] += 1
 
-                def done(hit, _now):
-                    counters["hits" if hit is not None else "misses"] += 1
+                def completed(outcome):
+                    if outcome.ok:
+                        counters["hits"] += 1
+                    elif outcome.status is OutcomeStatus.MISS:
+                        counters["misses"] += 1
+                    elif outcome.status is OutcomeStatus.FAILED:
+                        counters["failed"] += 1
+                    else:
+                        counters["denied"] += 1
 
                 cont.discover_and_fetch_async(
                     ModelQuery(task="durable", min_accuracy=acc + 0.02,
                                exclude_owners=(pid,)),
-                    done, requester=pid,
-                    on_denied=lambda _now: counters.__setitem__(
-                        "denied", counters["denied"] + 1),
-                    on_fail=lambda _r, _now: counters.__setitem__(
-                        "failed", counters["failed"] + 1),
+                    requester=pid, on_complete=completed,
                 )
 
             loop.call_at(t_query, do_query, label=f"{pid} query c{cycle}")
@@ -600,6 +620,123 @@ def durable_world(plan: FaultPlan, parties: int = 12, cycles: int = 3,
     assert cont.membership_refusals == (counters["refused_pub"]
                                         + counters["refused_query"])
     return cont.loop
+
+
+@scenario("serving_microworld")
+def serving_microworld(plan: FaultPlan, parties: int = 16,
+                       requests_per_wave: int = 24, waves: int = 4,
+                       regions: int = 3, edges_per_region: int = 2,
+                       wave_len_s: float = 30.0) -> EventLoop:
+    """Numpy-only request waves against the serving tier, under the plan.
+
+    One publish wave seeds the market (byzantine publishers included);
+    then ``waves`` waves of :class:`~repro.runtime.serving.PredictRequest`
+    traffic hit the tier.  The first wave resolves through region shards
+    and cloud escalations (installing replicas, verify-gated); placement
+    reviews run between waves, so popular models hot-push into every
+    region and the later waves hit replicas.  The second wave's accuracy
+    floor (0.96) is satisfiable only by byzantine-inflated claims, so it
+    forces cloud escalations whose replica installs are caught by
+    verify-on-fetch — publishers slashed, waiting requests refunded; the
+    last wave concentrates on the genuinely-best models so now-unqueried
+    replicas age toward eviction.  Regional outages drop in-flight
+    queries with exact refunds.  All values are pure
+    Python/numpy — the trace is byte-stable and recordable as a golden
+    fixture.
+    """
+    from repro.core.continuum import OutcomeStatus
+    from repro.core.incentives import IncentiveLedger
+    from repro.core.vault import ModelCard
+    from repro.runtime.serving import (PredictRequest, ServingConfig,
+                                       ServingTier)
+    from repro.runtime.topology import build_hierarchical_continuum
+
+    true_accs: Dict[tuple, float] = {}
+
+    def verifier(params, card):
+        return true_accs.get((card.model_id, card.version))
+
+    cont = build_hierarchical_continuum(
+        regions, edges_per_region, ledger=IncentiveLedger(), faults=plan,
+        verifier=verifier,
+    )
+    loop = cont.loop
+
+    ids = [f"p{i:03d}" for i in range(parties)]
+    params_of = {
+        pid: {"w": np.full((4 + i % 3, 3), float(i), np.float32),
+              "b": np.arange(3, dtype=np.float32) * float(i)}
+        for i, pid in enumerate(ids)
+    }
+
+    for i, pid in enumerate(ids):
+        t_pub = 1.0 + 1.7 * i
+        if not plan.party_online(pid, t_pub):
+            continue
+        acc = scripted_accuracy(i, 0)
+
+        def do_publish(now, pid=pid, acc=acc):
+            card = ModelCard(
+                model_id=f"{pid}/toy", task="serve", arch="toy",
+                owner=pid, num_params=15,
+                metrics={"accuracy": acc, "per_class": {}},
+            )
+
+            def registered(outcome, acc=acc):
+                if outcome.ok:
+                    final = outcome.payload
+                    true_accs[(final.model_id, final.version)] = acc
+
+            cont.publish_async(pid, params_of[pid], card,
+                               on_complete=registered)
+
+        loop.call_at(t_pub, do_publish, label=f"{pid} publish")
+
+    tier = ServingTier(cont, ServingConfig(
+        placement_every_s=20.0, hot_threshold=6, decay_windows=2,
+        max_wait_s=0.5, max_batch=4,
+    ))
+    counters = {"ok": 0, "miss": 0, "denied": 0, "failed": 0, "refused": 0}
+
+    def completed(outcome):
+        if outcome.ok:
+            counters["ok"] += 1
+        elif outcome.status is OutcomeStatus.MISS:
+            counters["miss"] += 1
+        elif outcome.status is OutcomeStatus.FAILED:
+            counters["failed"] += 1
+        elif outcome.status is OutcomeStatus.REFUSED:
+            counters["refused"] += 1
+        else:
+            counters["denied"] += 1
+
+    # request waves start after the publish wave has fully landed
+    t0 = 1.0 + 1.7 * parties + 30.0
+    req_no = 0
+    floors = [0.1, 0.96, 0.1, 0.6]
+    for w in range(waves):
+        t_wave = t0 + w * wave_len_s
+        floor = floors[w % len(floors)]
+        for k in range(requests_per_wave):
+            pid = ids[(w * 7 + k * 3) % parties]
+            tier.submit(PredictRequest(
+                request_id=f"r{req_no:04d}", requester=pid, task="serve",
+                prompt_tokens=4 + (k * 5) % 40,
+                max_new_tokens=4 + (k % 3) * 4,
+                min_accuracy=floor, at=t_wave + 0.37 * k,
+            ), completed)
+            req_no += 1
+
+    loop.run_to_quiescence()
+    cont.ledger.assert_conserved()
+    rep = tier.report()
+    assert counters["ok"] == rep.served
+    assert counters["miss"] == rep.misses
+    assert counters["denied"] == rep.denied
+    assert counters["failed"] == rep.failed
+    assert rep.served + rep.misses + rep.denied + rep.failed \
+        + rep.refused == req_no
+    return loop
 
 
 @scenario("chaos_exchange")

@@ -1,0 +1,363 @@
+"""Serving tier: request routing, batching, settlement, placement, trust.
+
+Covers the request plane end to end — cold-start escalation installing a
+verified replica, popularity decay evicting cold replicas, per-query fee
+conservation under outage refunds, byzantine replicas caught at install,
+the unified Outcome envelope (and its deprecated legacy-callback shims),
+and byte-identical replay of the ``serving_microworld`` golden fixture.
+"""
+import json
+import pathlib
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core.continuum import Continuum, Outcome, OutcomeStatus
+from repro.core.incentives import OPERATOR, IncentiveLedger
+from repro.core.vault import ModelCard
+from repro.runtime.faults import FaultPlan
+from repro.runtime.serving import (PredictRequest, ServingConfig, ServingTier,
+                                   SlotQueue, pick_bucket, serve_requests)
+from repro.runtime.topology import build_hierarchical_continuum
+from repro.runtime.trace import TraceRecording, assert_replay, trace_digest
+
+GOLDEN_DIR = pathlib.Path(__file__).parent / "golden"
+
+
+def _card(pid, task="serve", acc=0.8):
+    return ModelCard(model_id=f"{pid}/m", task=task, arch="toy", owner=pid,
+                     num_params=3, metrics={"accuracy": acc, "per_class": {}})
+
+
+def _params(i=1):
+    return {"w": np.full((3,), float(i), np.float32)}
+
+
+def _req(rid, requester, task="serve", at=0.0, **kw):
+    return PredictRequest(request_id=rid, requester=requester, task=task,
+                          prompt_tokens=kw.pop("prompt_tokens", 8), at=at,
+                          **kw)
+
+
+# -- SlotQueue ---------------------------------------------------------------
+
+def test_pick_bucket_smallest_fit_else_largest():
+    assert pick_bucket((16, 32, 64), 9) == 16
+    assert pick_bucket((16, 32, 64), 16) == 16
+    assert pick_bucket((16, 32, 64), 17) == 32
+    assert pick_bucket((16, 32, 64), 500) == 64  # oversize pads to largest
+
+
+def test_slot_queue_fifo_per_model_bucket():
+    q = SlotQueue(buckets=(16, 32), max_batch=2)
+    assert q.add("m1", 4, "a") == (16, 1)
+    assert q.add("m1", 30, "b") == (32, 1)  # different bucket, own queue
+    assert q.add("m1", 10, "c") == (16, 2)
+    assert q.add("m2", 10, "d") == (16, 1)  # different model, own queue
+    assert len(q) == 4
+    assert q.pending() == [("m1", 16), ("m1", 32), ("m2", 16)]
+    assert q.drain("m1", 16) == ["a", "c"]  # arrival order, capped
+    assert q.depth("m1", 16) == 0
+    assert q.drain("m1", 16) == []
+    assert q.drain("m1", 32) == ["b"]
+    assert len(q) == 1
+
+
+def test_slot_queue_drain_caps_at_max_batch():
+    q = SlotQueue(buckets=(8,), max_batch=3)
+    for i in range(7):
+        q.add("m", 4, i)
+    assert q.drain("m", 8) == [0, 1, 2]
+    assert q.drain("m", 8) == [3, 4, 5]
+    assert q.drain("m", 8) == [6]
+
+
+def test_slot_queue_validation():
+    with pytest.raises(ValueError):
+        SlotQueue(buckets=(), max_batch=4)
+    with pytest.raises(ValueError):
+        SlotQueue(buckets=(16,), max_batch=0)
+
+
+# -- request path ------------------------------------------------------------
+
+def test_cold_start_miss_escalates_then_serves_from_replica():
+    """First request for a model only the cloud knows escalates, installs a
+    replica in the requester's region, and later requests hit it locally."""
+    cont = build_hierarchical_continuum(2, 2, ledger=IncentiveLedger())
+    cont.publish("bob", _params(), _card("bob"))  # bob homes in rg000
+    tier = ServingTier(cont, ServingConfig())
+    outs = []
+    # alice homes in rg001: her region's shard has no card for the task
+    tier.submit(_req("r0", "alice", at=1.0), outs.append)
+    cont.loop.run_to_quiescence()
+    assert [o.status for o in outs] == [OutcomeStatus.OK]
+    assert outs[0].payload.source == "cloud"
+    server = tier.server_for("alice")
+    assert "bob/m" in server.replicas  # escalation installed the replica
+    tier.submit(_req("r1", "alice", at=cont.clock.now() + 1.0), outs.append)
+    cont.loop.run_to_quiescence()
+    assert outs[1].payload.source == "replica"
+    rep = tier.report()
+    assert (rep.escalations, rep.replica_hits, rep.served) == (1, 1, 2)
+    assert rep.conserved
+
+
+def test_unserveable_query_is_a_miss():
+    cont = build_hierarchical_continuum(1, 2, ledger=IncentiveLedger())
+    cont.publish("bob", _params(), _card("bob", acc=0.5))
+    outs = []
+    rep = serve_requests(cont, [_req("r0", "bob", min_accuracy=0.9)],
+                         on_complete=outs.append)
+    assert outs[0].status is OutcomeStatus.MISS
+    assert rep.misses == 1 and rep.served == 0
+    cont.ledger.assert_conserved()  # a miss charges nothing
+
+
+def test_retired_requester_refused():
+    cont = build_hierarchical_continuum(1, 2, ledger=IncentiveLedger())
+    cont.publish("bob", _params(), _card("bob"))
+    cont.retired.add("carol")
+    outs = []
+    rep = serve_requests(cont, [_req("r0", "carol")], on_complete=outs.append)
+    assert outs[0].status is OutcomeStatus.REFUSED
+    assert rep.refused == 1
+
+
+def test_broke_requester_denied_micro_fee():
+    cont = build_hierarchical_continuum(
+        1, 2, ledger=IncentiveLedger(stipend=0.0))
+    cont.publish("bob", _params(), _card("bob"))
+    outs = []
+    # no stipend and never published: zero balance < serve_cost
+    rep = serve_requests(cont, [_req("r0", "pauper")], on_complete=outs.append)
+    assert outs[0].status is OutcomeStatus.DENIED
+    assert rep.denied == 1
+    assert cont.ledger.accounts["pauper"].denied == 1
+    cont.ledger.assert_conserved()
+
+
+# -- settlement --------------------------------------------------------------
+
+def test_micro_fee_split_shard_hit_pays_region_operator():
+    cont = build_hierarchical_continuum(1, 2, ledger=IncentiveLedger())
+    led = cont.ledger
+    cont.publish("bob", _params(), _card("bob"))
+    cont.publish("carol", _params(2), _card("carol", task="other"))
+    before = {p: led.balance(p) for p in
+              ("bob", "carol", OPERATOR, "region:rg000")}
+    outs = []
+    rep = serve_requests(cont, [_req("r0", "carol")], on_complete=outs.append)
+    assert rep.served == 1 and rep.shard_hits == 1
+    cost = led.serve_cost
+    fee = cost * led.service_fee
+    region_cut = fee * led.region_fee_share
+    assert led.balance("carol") == pytest.approx(before["carol"] - cost)
+    assert led.balance("bob") == pytest.approx(before["bob"] + cost - fee)
+    assert led.balance(OPERATOR) == pytest.approx(
+        before[OPERATOR] + fee - region_cut)
+    assert led.balance("region:rg000") == pytest.approx(
+        before["region:rg000"] + region_cut)
+    assert outs[0].fee == {"paid": cost, "fee": fee, "region_cut": region_cut}
+    assert led.accounts["bob"].queries_served == 1
+    assert led.accounts["carol"].queries == 1
+    led.assert_conserved()
+
+
+def test_outage_refunds_conserve_ledger():
+    """Queries lost to dark regions refund exactly what they paid; the
+    ledger stays conserved through every micro-fee and refund."""
+    plan = FaultPlan(seed=4, region_outage_prob=0.5, region_slot_len_s=0.4)
+    cont = build_hierarchical_continuum(2, 2, ledger=IncentiveLedger(),
+                                        faults=plan)
+    ids = [f"p{i:02d}" for i in range(8)]
+    for i, pid in enumerate(ids):
+        cont.publish(pid, _params(i), _card(pid, acc=0.3 + 0.05 * i))
+    outs = []
+    reqs = [_req(f"r{k:03d}", ids[k % 8], at=0.2 * k, max_new_tokens=8)
+            for k in range(60)]
+    rep = serve_requests(cont, reqs, on_complete=outs.append)
+    assert rep.outage_drops > 0 and rep.refunds > 0
+    assert rep.served + rep.failed == rep.requests
+    assert rep.conserved
+    cont.ledger.assert_conserved()
+    # every paid-then-dropped query carries its exact refund record
+    refunded = [o for o in outs if o.status is OutcomeStatus.FAILED
+                and o.fee.get("refunded")]
+    assert len(refunded) == rep.refunds
+    assert all(o.fee["refunded"] == cont.ledger.serve_cost for o in refunded)
+
+
+def test_byzantine_replica_caught_before_serving():
+    """An inflated card's replica install is verify-gated: the fraud is
+    caught before a single query is answered, the publisher slashed, and
+    the waiting request refunded."""
+    true_accs = {}
+    plan = FaultPlan(seed=0, byzantine_frac=1.0, byzantine_inflation=0.5,
+                     verify_tolerance=0.1)
+    cont = Continuum(ledger=IncentiveLedger(), faults=plan,
+                     verifier=lambda p, c: true_accs.get((c.model_id,
+                                                          c.version)))
+    cont.add_edge_server("edge0")
+    card = cont.publish("alice", _params(), _card("alice", acc=0.5))
+    true_accs[(card.model_id, card.version)] = 0.5
+    assert card.metrics["accuracy"] > 0.5  # inflated on publish
+    cont.publish("bob", _params(2), _card("bob", task="other"))
+    outs = []
+    tier = ServingTier(cont, ServingConfig())
+    tier.submit(_req("r0", "bob", at=1.0), outs.append)
+    cont.loop.run_to_quiescence()
+    assert outs[0].status is OutcomeStatus.FAILED
+    assert outs[0].reason == "fraud"
+    assert outs[0].fee.get("refunded") == cont.ledger.serve_cost
+    assert "alice" in cont.ledger.flagged
+    assert cont.discovery.lookup("alice/m") is None  # purged from the index
+    rep = tier.report()
+    assert (rep.frauds, rep.refunds, rep.served) == (1, 1, 0)
+    assert rep.conserved
+    # with the fraud purged, the market has nothing left for the task
+    tier.submit(_req("r1", "bob", at=cont.clock.now() + 1.0), outs.append)
+    cont.loop.run_to_quiescence()
+    assert outs[1].status is OutcomeStatus.MISS
+
+
+# -- placement ---------------------------------------------------------------
+
+def test_cold_replica_decays_out_after_idle_windows():
+    """A replica that sees no demand for ``decay_windows`` consecutive
+    placement reviews is evicted (while other traffic keeps reviews
+    running)."""
+    from repro.core.discovery import ModelQuery
+    cont = build_hierarchical_continuum(1, 2, ledger=IncentiveLedger())
+    cont.publish("bob", _params(), _card("bob"))
+    cont.publish("carol", _params(2), _card("carol", task="bee"))
+    cfg = ServingConfig(placement_every_s=5.0, hot_threshold=999,
+                        decay_windows=2)
+    tier = ServingTier(cont, cfg)
+    server = tier.servers["rg000"]
+    # seed a replica of bob's model into the serving vault
+    best = cont.discovery.query(ModelQuery(task="serve"), top_k=1)[0]
+    stored = server.replicas.store_copy(*cont.discovery.fetch(best))
+    server.index.register(stored, server.replicas.vault_id)
+    assert "bob/m" in server.replicas
+    outs = []
+    # steady "bee" traffic keeps placement reviews armed; "serve" is idle
+    for k in range(20):
+        tier.submit(_req(f"r{k:03d}", "bob", task="bee", at=1.0 + k),
+                    outs.append)
+    cont.loop.run_to_quiescence()
+    rep = tier.report()
+    assert rep.evictions == 1
+    assert "bob/m" not in server.replicas
+    assert server.index.lookup("bob/m") is None
+    assert all(o.ok for o in outs)
+
+
+def test_hot_model_replicates_into_every_region():
+    cont = build_hierarchical_continuum(2, 2, ledger=IncentiveLedger())
+    cont.publish("bob", _params(), _card("bob"))
+    cfg = ServingConfig(placement_every_s=4.0, hot_threshold=3,
+                        decay_windows=99)
+    tier = ServingTier(cont, cfg)
+    outs = []
+    for k in range(12):  # all from bob's own region: shard hits, no install
+        tier.submit(_req(f"r{k:03d}", "bob", at=1.0 + 0.5 * k), outs.append)
+    cont.loop.run_to_quiescence()
+    rep = tier.report()
+    assert rep.hot_pushes >= len(tier.servers)  # pushed into every region
+    for server in tier.servers.values():
+        assert "bob/m" in server.replicas
+    assert rep.conserved
+
+
+# -- Outcome envelope + legacy shims -----------------------------------------
+
+def test_publish_async_on_complete_outcome():
+    cont = Continuum(ledger=IncentiveLedger())
+    cont.add_edge_server("edge0")
+    outs = []
+    cont.publish_async("alice", _params(), _card("alice"),
+                       on_complete=outs.append)
+    cont.loop.run_to_quiescence()
+    (o,) = outs
+    assert isinstance(o, Outcome) and o.ok
+    assert o.status is OutcomeStatus.OK
+    assert o.payload.model_id == "alice/m"
+    assert o.time > 0.0
+
+
+def test_fetch_async_on_complete_outcome_miss():
+    from repro.core.discovery import ModelQuery
+    cont = Continuum(ledger=IncentiveLedger())
+    cont.add_edge_server("edge0")
+    outs = []
+    cont.discover_and_fetch_async(ModelQuery(task="nope"),
+                                  on_complete=outs.append)
+    cont.loop.run_to_quiescence()
+    assert outs[0].status is OutcomeStatus.MISS
+    assert not outs[0].ok and outs[0].payload is None
+
+
+def test_legacy_callbacks_still_fire_with_deprecation_warning():
+    cont = Continuum(ledger=IncentiveLedger())
+    cont.add_edge_server("edge0")
+    done = []
+    with pytest.warns(DeprecationWarning):
+        cont.publish_async("alice", _params(), _card("alice"),
+                           on_done=lambda card, t: done.append((card, t)))
+    cont.loop.run_to_quiescence()
+    assert len(done) == 1 and done[0][0].model_id == "alice/m"
+
+
+def test_on_complete_and_legacy_are_mutually_exclusive_free():
+    """Passing only on_complete raises no deprecation warning."""
+    cont = Continuum(ledger=IncentiveLedger())
+    cont.add_edge_server("edge0")
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        cont.publish_async("alice", _params(), _card("alice"),
+                           on_complete=lambda o: None)
+        cont.loop.run_to_quiescence()
+
+
+# -- public surface + demo ---------------------------------------------------
+
+def test_stable_top_level_surface():
+    import repro
+    for name in repro.__all__:
+        assert getattr(repro, name) is not None
+    import repro.runtime as rt
+    for name in ("ServingTier", "SlotQueue", "serve_requests",
+                 "PredictRequest"):
+        assert getattr(rt, name) is not None
+    with pytest.raises(AttributeError):
+        repro.no_such_symbol
+
+
+def test_serve_batched_demo_runs():
+    import importlib
+    import sys
+    repo_root = str(pathlib.Path(__file__).resolve().parent.parent)
+    if repo_root not in sys.path:  # CI runs with PYTHONPATH=src only
+        sys.path.insert(0, repo_root)
+    demo = importlib.import_module("examples.serve_batched")
+    rep = demo.main()  # the demo asserts its own hot-push/replica story
+    assert rep.conserved
+
+
+# -- golden fixture ----------------------------------------------------------
+
+def test_golden_serving_trace_replays_byte_identical():
+    """The checked-in serving golden trace pins the full request plane:
+    arrival scheduling, slot batching and deadlines, replica installs,
+    placement reviews, and outage draws.  Any behavioural change shows up
+    here as a byte diff."""
+    rec = TraceRecording.load(GOLDEN_DIR / "serving_microworld.json")
+    assert rec.digest == trace_digest(rec.trace.encode())
+    ops = {json.loads(line)["p"]["op"]
+           for line in rec.trace.splitlines()
+           if json.loads(line)["p"] is not None}
+    assert {"serve_request", "slot", "slot_deadline", "serve_replica",
+            "placement_review", "publish", "card"} <= ops
+    assert_replay(rec)
