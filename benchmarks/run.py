@@ -12,6 +12,7 @@ output is both human-skimmable and machine-parsable.
   chaos_scale     — exchange economy under churn/link-loss/byzantine faults
   hierarchy_scale — edge→region→cloud tiering: cache hit-rate + egress
   serving_scale   — request-driven serving tier: qps + p50/p99 + placement
+  serving_overload— 4x regional spike: spillover + SLA refusals + restore
   durability_scale— full-world snapshot/restore + membership churn
   population_scale— scan-fused one-dispatch cycles vs per-step baseline
   roofline        — three-term roofline from dry-run artifacts (if present)
@@ -130,6 +131,18 @@ def run_serving_scale():
           + _json_args())
 
 
+def run_serving_overload():
+    """Regional demand spike: spillover, SLA refusals, mid-spike restore.
+
+    Runs the full default scale (4k parties, 8 regions) — the overload
+    benchmark is cheap enough that the orchestrator and the CI
+    bench-smoke step both drive the headline configuration.
+    """
+    from benchmarks.serving_overload import main as omain
+
+    omain(_json_args())
+
+
 def run_durability_scale():
     """Full-world snapshot/restore with membership churn, byte-identical.
 
@@ -176,7 +189,7 @@ def main():
     which = set(argv) or {"fig3", "figs456", "kernels", "traffic",
                           "continuum_scale", "exchange_scale",
                           "chaos_scale", "hierarchy_scale",
-                          "serving_scale",
+                          "serving_scale", "serving_overload",
                           "durability_scale", "population_scale",
                           "roofline"}
     print("name,us_per_call,derived")
@@ -198,6 +211,9 @@ def main():
     if "serving_scale" in which:
         section("Serving tier (request traffic, batching, placement)")
         run_serving_scale()
+    if "serving_overload" in which:
+        section("Serving overload (regional spike, spillover, SLA tiers)")
+        run_serving_overload()
     if "durability_scale" in which:
         section("Durability (snapshot/restore + membership churn)")
         run_durability_scale()

@@ -1,0 +1,289 @@
+"""Serving overload benchmark: 4x regional demand spike vs steady state.
+
+Drives the capacity-aware serving tier (``repro.runtime.serving``)
+through a regional overload: steady request traffic warms replicas of
+the hot model into every region, then one region's demand spikes to
+``--spike-factor`` times its steady rate, concentrated on a single
+``(model, bucket)`` key whose per-region capacity
+(``max_slots_per_key`` concurrent slots + a bounded ``SlotQueue``) is
+deliberately too small for the spike.  What has to happen — and what CI
+gates — is the overload *resolving* instead of melting down:
+
+* **spillover** — over-capacity queries route to the least-loaded other
+  region holding a verified replica (gossiped load reports rank the
+  candidates); ``spill_hit_rate`` is the fraction of spilled queries
+  that landed (the rest found the target saturated after the hop and
+  were refused with an exact refund);
+* **bounded refusal** — queries nothing can absorb get a clean
+  ``REFUSED`` Outcome with the fee exactly reversed;
+  ``no_unrefunded_drops`` gates that not one paid query vanished;
+* **served fraction** — spillover keeps ``served_frac`` >= 0.95 even
+  though the home region alone could not serve the spike;
+* **p99 under overload** — completion latency of the spike queries
+  themselves (queueing + spill hop included), gated separately from the
+  steady-state p99;
+* **durability** — the run is snapshotted *mid-spike* and restored, and
+  the concatenated trace must be byte-identical with an uninterrupted
+  reference run (in-flight slots, spill hops, and queued entries all
+  survive the boundary);
+* **conservation** — ``sum(balances) == minted`` after the run, SLA fee
+  multipliers and refunds included.
+
+``--json`` merges the headline numbers into a results file for
+``benchmarks/check_thresholds.py`` and ``scripts/append_bench.py``.
+
+  PYTHONPATH=src python benchmarks/serving_overload.py [--parties 4000]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+try:
+    from benchmarks.bench_json import merge_json_section
+except ImportError:  # run as a script: benchmarks/ itself is on sys.path
+    from bench_json import merge_json_section
+
+from repro.core.incentives import IncentiveLedger
+from repro.core.vault import ModelCard
+from repro.runtime.serving import PredictRequest, ServingConfig, ServingTier
+from repro.runtime.snapshot import restore_world, snapshot_world
+from repro.runtime.topology import build_hierarchical_continuum
+from repro.runtime.trace import scripted_accuracy as _true_acc
+from repro.runtime.trace import serialize_trace
+
+HOT_TASK = "task000"  # the task the spike piles onto
+SPIKE_PROMPT = 8  # fixed prompt so every spike query shares one bucket
+
+
+def _config(duration_s: float) -> ServingConfig:
+    """Deliberately tight per-key capacity so the spike overloads it.
+
+    One slot per key, two queries per batch, and a heavyweight decode
+    (0.03 s/token models a large model on modest region hardware) put a
+    key's service rate at ~4 queries/s — below the ~6.5/s the 4x spike
+    concentrates on the hot key, so the home region *must* spill.
+    """
+    return ServingConfig(
+        max_batch=2, max_wait_s=0.5, decode_s_per_token=0.03,
+        max_slots_per_key=1, max_queue_depth=4,
+        placement_every_s=duration_s / 8.0,
+    )
+
+
+def _build(regions, edges_per_region, n_parties, n_tasks, publish_every,
+           seed):
+    """Continuum + seeded model market; identical for both runs."""
+    ids = [f"p{i:06d}" for i in range(n_parties)]
+    rng = np.random.default_rng(seed)
+    cont = build_hierarchical_continuum(
+        regions, edges_per_region, ledger=IncentiveLedger())
+    for j, pid in enumerate(ids[::publish_every]):
+        params = {"w": rng.standard_normal(16).astype(np.float32)}
+        cont.publish(pid, params, ModelCard(
+            model_id=f"{pid}/m", task=f"task{j % n_tasks:03d}", arch="toy",
+            owner=pid, num_params=16,
+            metrics={"accuracy": _true_acc(j, 0), "per_class": {}},
+        ))
+    return cont, ids
+
+
+def _submit_traffic(cont, tier, ids, n_tasks, duration_s, spike_factor):
+    """Steady wave + the one-region spike; returns (spike_ids, t_mid).
+
+    A pure function of the build, so the interrupted and reference runs
+    schedule byte-identical workloads.  Steady: one request per party
+    spread over the window.  Spike: the parties of one region re-issue
+    ``spike_factor - 1`` times their steady share, concentrated on the
+    hot task in one bucket, inside the middle quarter of the window —
+    that region's demand runs at ``spike_factor``x steady for the
+    window's duration.
+    """
+    t0 = cont.clock.now() + 1.0
+    n = max(len(ids), 1)
+    for i, pid in enumerate(ids):
+        # every 4th request sets a floor only the better half of the
+        # market clears, so ranking (not just presence) is exercised
+        tier.submit(PredictRequest(
+            request_id=f"r{i:06d}", requester=pid,
+            task=f"task{i % n_tasks:03d}",
+            prompt_tokens=4 + (i * 7) % 120,
+            max_new_tokens=4 + (i % 4) * 4,
+            min_accuracy=0.5 if i % 4 == 0 else 0.0,
+            at=t0 + duration_s * i / n,
+            tier=i % 3,
+        ))
+
+    # the spike region: wherever the topology homes the first party
+    hot_region = cont.topology.region_of(ids[0]).region_id
+    locals_ = [pid for pid in ids
+               if cont.topology.region_of(pid).region_id == hot_region]
+    w0, w1 = t0 + 0.50 * duration_s, t0 + 0.75 * duration_s
+    n_spike = max(1, int((spike_factor - 1) * len(locals_)
+                         * (w1 - w0) / duration_s))
+    spike_ids = [f"s{j:06d}" for j in range(n_spike)]
+    for j, rid in enumerate(spike_ids):
+        tier.submit(PredictRequest(
+            request_id=rid, requester=locals_[j % len(locals_)],
+            task=HOT_TASK, prompt_tokens=SPIKE_PROMPT, max_new_tokens=16,
+            at=w0 + (w1 - w0) * j / n_spike,
+            tier=j % 3,
+        ))
+    return spike_ids, (w0 + w1) / 2.0
+
+
+def bench_overload(n_parties=4000, regions=8, edges_per_region=2,
+                   n_tasks=8, duration_s=240.0, spike_factor=4,
+                   publish_every=10, seed=0):
+    """Overloaded run with a mid-spike restore; returns the metric dict."""
+    # -- reference: same workload, never interrupted -------------------------
+    ref, ids = _build(regions, edges_per_region, n_parties, n_tasks,
+                      publish_every, seed)
+    rtier = ServingTier(ref, _config(duration_s), on_complete=lambda o: None)
+    _submit_traffic(ref, rtier, ids, n_tasks, duration_s, spike_factor)
+    ref.loop.run_to_quiescence()
+    ref_trace = serialize_trace(ref.loop.log)
+    ref_events = ref.loop.events_processed
+    del ref, rtier
+
+    # -- measured run: snapshot mid-spike, forced restore --------------------
+    outcomes = []
+    collect = outcomes.append
+    cont, ids = _build(regions, edges_per_region, n_parties, n_tasks,
+                       publish_every, seed)
+    tier = ServingTier(cont, _config(duration_s), on_complete=collect)
+    spike_ids, t_mid = _submit_traffic(cont, tier, ids, n_tasks,
+                                       duration_s, spike_factor)
+    n_requests = len(ids) + len(spike_ids)
+
+    wall0 = time.perf_counter()
+    cont.loop.run_until(t_mid)
+    frontier = cont.loop.frontier()
+    assert any(p.get("durable") == "serving" for _t, _s, _l, p in frontier), \
+        "snapshot point missed the overload: no serving events in flight"
+    pre_trace = serialize_trace(cont.loop.log)
+    t0 = time.perf_counter()
+    snap = snapshot_world(cont)
+    snapshot_s = time.perf_counter() - t0
+    del cont, tier
+    t0 = time.perf_counter()
+    cont, _extra = restore_world(snap, serving_on_complete=collect)
+    restore_s = time.perf_counter() - t0
+    cont.loop.run_to_quiescence()
+    wall = time.perf_counter() - wall0
+
+    cont.ledger.assert_conserved()
+    rep = cont.serving.report()
+    trace = pre_trace + serialize_trace(cont.loop.log)
+
+    assert len(outcomes) == n_requests, \
+        f"{n_requests - len(outcomes)} requests never completed"
+    unrefunded = sum(1 for o in outcomes
+                     if not o.ok and o.fee and "refunded" not in o.fee)
+    spike_set = set(spike_ids)
+    spike_lat = [o.payload.latency_s for o in outcomes
+                 if o.ok and o.payload.request_id in spike_set]
+
+    return {
+        "parties": n_parties,
+        "regions": regions,
+        "edges_per_region": edges_per_region,
+        "spike_factor": spike_factor,
+        "duration_s": duration_s,
+        "events": ref_events,
+        "wall_s": wall,
+        "snapshot_s": snapshot_s,
+        "restore_s": restore_s,
+        "requests": rep.requests,
+        "spike_requests": len(spike_ids),
+        "served": rep.served,
+        "served_frac": rep.served / max(rep.requests, 1),
+        "spill_out": rep.spill_out,
+        "spill_in": rep.spill_in,
+        "spill_hit_rate": rep.spill_in / max(rep.spill_out, 1),
+        "refused_capacity": rep.refused_capacity,
+        "refunds": rep.refunds,
+        "truncated_prompts": rep.truncated_prompts,
+        "p50_s": rep.p50_s,
+        "p99_s": rep.p99_s,
+        "p99_spike_s": (float(np.percentile(spike_lat, 99))
+                        if spike_lat else 0.0),
+        "spike_served": len(spike_lat),
+        "unrefunded_drops": unrefunded,
+        "no_unrefunded_drops": int(unrefunded == 0),
+        "byte_identical": int(trace == ref_trace),
+        "conserved": int(rep.conserved),  # report() asserted conservation
+    }
+
+
+def main(argv=None):
+    """CLI entry point; prints CSV rows like the other benchmark sections."""
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--parties", type=int, default=4000)
+    ap.add_argument("--regions", type=int, default=8)
+    ap.add_argument("--edges-per-region", type=int, default=2)
+    ap.add_argument("--tasks", type=int, default=8,
+                    help="learning tasks the steady traffic spreads over")
+    ap.add_argument("--duration", type=float, default=240.0,
+                    help="simulated seconds the steady wave spreads over")
+    ap.add_argument("--spike-factor", type=int, default=4,
+                    help="the spike region's demand multiple vs steady")
+    ap.add_argument("--publish-every", type=int, default=10,
+                    help="every Nth party publishes a model")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", type=str, default=None,
+                    help="merge headline numbers into this JSON file")
+    args = ap.parse_args(argv)
+    if args.parties < 1 or args.regions < 2 or args.edges_per_region < 1 \
+            or args.tasks < 1 or args.publish_every < 1:
+        ap.error("--parties, --edges-per-region, --tasks, and "
+                 "--publish-every must be >= 1; --regions >= 2 "
+                 "(spillover needs somewhere to go)")
+    if args.duration <= 0 or args.spike_factor < 2:
+        ap.error("--duration must be > 0 and --spike-factor >= 2")
+
+    res = bench_overload(args.parties, args.regions, args.edges_per_region,
+                         args.tasks, args.duration, args.spike_factor,
+                         args.publish_every, args.seed)
+    print(f"serving_overload/run,{res['wall_s']*1e6:.0f},"
+          f"parties={res['parties']};regions={res['regions']};"
+          f"spike={res['spike_factor']}x;events={res['events']};"
+          f"requests={res['requests']};served={res['served']};"
+          f"served_frac={res['served_frac']:.3f}", flush=True)
+    print(f"serving_overload/spillover,0,"
+          f"spill_out={res['spill_out']};spill_in={res['spill_in']};"
+          f"spill_hit_rate={res['spill_hit_rate']:.3f};"
+          f"refused_capacity={res['refused_capacity']};"
+          f"refunds={res['refunds']}")
+    print(f"serving_overload/latency,0,"
+          f"p50_ms={res['p50_s']*1e3:.1f};p99_ms={res['p99_s']*1e3:.1f};"
+          f"p99_spike_ms={res['p99_spike_s']*1e3:.1f};"
+          f"spike_served={res['spike_served']}/{res['spike_requests']}")
+    print(f"serving_overload/durability,{res['snapshot_s']*1e6:.0f},"
+          f"restore_s={res['restore_s']:.3f};"
+          f"byte_identical={res['byte_identical']};"
+          f"unrefunded_drops={res['unrefunded_drops']};conserved=1")
+    verdict = ("byte-identical mid-spike resume"
+               if res["byte_identical"] else "TRACE DIVERGED after restore")
+    print(f"# {res['spike_factor']}x spike: {res['served']}/{res['requests']}"
+          f" served ({res['served_frac']:.1%}), {res['spill_out']} spilled, "
+          f"{res['refused_capacity']} refused-with-refund, "
+          f"p99 under overload {res['p99_spike_s']*1e3:.0f}ms: {verdict}")
+    assert res["byte_identical"], "restored run diverged from reference"
+    assert res["no_unrefunded_drops"], "a paid query dropped without refund"
+
+    if args.json:
+        merge_json_section(args.json, "serving_overload", {
+            k: res[k] for k in
+            ("wall_s", "parties", "regions", "spike_factor", "requests",
+             "spike_requests", "served", "served_frac", "spill_out",
+             "spill_in", "spill_hit_rate", "refused_capacity", "p99_s",
+             "p99_spike_s", "no_unrefunded_drops", "byte_identical",
+             "conserved")
+        })
+
+
+if __name__ == "__main__":
+    main()

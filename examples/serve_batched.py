@@ -30,13 +30,13 @@ def main():
         )
         cont.publish(pid, params, card)
 
-    # synchronous publishes advanced the sim clock; traffic starts after
-    t0 = cont.clock.now() + 1.0
+    # serve_requests treats `at` as an offset from the clock at call time,
+    # so the spacing holds no matter how far the publishes advanced it
     requests = [
         PredictRequest(
             request_id=f"r{k:03d}", requester=parties[k % len(parties)],
             task="serve", prompt_tokens=8 + (k * 3) % 24,
-            max_new_tokens=8, min_accuracy=0.5, at=t0 + 0.5 * k,
+            max_new_tokens=8, min_accuracy=0.5, at=1.0 + 0.5 * k,
         )
         for k in range(48)
     ]

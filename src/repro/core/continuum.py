@@ -307,6 +307,9 @@ class Continuum:
         self.verifier = verifier  # property: assignment resets the memo
         self.fault_stats = FaultStats()
         self.topology: Optional["RegionalTopology"] = None
+        # the attached request plane (a ServingTier registers itself here
+        # so snapshot_world can serialize in-flight serving state)
+        self.serving = None
         # cards already slashed, by (model_id, version): concurrent in-flight
         # fetches of one fraudulent card must not slash the publisher twice
         self._frauded: set = set()

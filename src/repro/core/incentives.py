@@ -220,47 +220,58 @@ class IncentiveLedger:
             self._acct(region_operator).balance -= region_cut
 
     # -- serving tier (request plane) ---------------------------------------
-    def can_serve(self, party: str) -> bool:
-        """Can this account cover one prediction query? (Opens it if new.)"""
-        return self._acct(party).balance >= self.serve_cost
+    def can_serve(self, party: str, mult: float = 1.0) -> bool:
+        """Can this account cover one prediction query? (Opens it if new.)
+
+        ``mult`` is the SLA-tier fee multiplier: a tier-2 request must be
+        able to cover ``serve_cost * mult``, not just the base fee.
+        """
+        return self._acct(party).balance >= self.serve_cost * mult
 
     def on_serve(self, requester: str, publisher: str,
-                 region_operator: Optional[str] = None):
+                 region_operator: Optional[str] = None,
+                 mult: float = 1.0):
         """Zero-sum micro-fee for one served prediction query.
 
-        Mirrors :meth:`on_fetch` at ``serve_cost``: requester pays, the
-        replica's publisher earns the remainder, the operator(s) split the
-        service fee — with the region operator's cut flowing when the query
-        was answered by a region-hosted replica or shard resolution rather
-        than the cloud.  Conservation is untouched (no minting).
+        Mirrors :meth:`on_fetch` at ``serve_cost * mult``: requester pays,
+        the replica's publisher earns the remainder, the operator(s) split
+        the service fee — with the region operator's cut flowing when the
+        query was answered by a region-hosted replica or shard resolution
+        rather than the cloud.  ``mult`` is the SLA-tier fee multiplier
+        (priority tiers pay more for the right to jump the slot queue);
+        the fee split scales with it, so operators and publishers share
+        the premium pro rata.  Conservation is untouched (no minting).
         """
-        if not self.can_serve(requester):
+        if not self.can_serve(requester, mult):
             self._acct(requester).denied += 1
             raise PermissionError(f"{requester} has insufficient credits")
-        fee, region_cut = self._fee_split(region_operator, self.serve_cost)
+        cost = self.serve_cost * mult
+        fee, region_cut = self._fee_split(region_operator, cost)
         req = self._acct(requester)
-        req.balance -= self.serve_cost
+        req.balance -= cost
         req.queries += 1
         pub = self._acct(publisher)
-        pub.balance += self.serve_cost - fee
+        pub.balance += cost - fee
         pub.queries_served += 1
         self._acct(self.operator).balance += fee - region_cut
         if region_operator is not None:
             self._acct(region_operator).balance += region_cut
 
     def on_serve_refund(self, requester: str, publisher: str,
-                        region_operator: Optional[str] = None):
-        """Reverse one paid query (region went dark, replica proved fraudulent).
+                        region_operator: Optional[str] = None,
+                        mult: float = 1.0):
+        """Reverse one paid query (dark region, fraud, or capacity refusal).
 
         Exact inverse of :meth:`on_serve`, same contract as
-        :meth:`on_refund`: pass the same ``region_operator`` the payment
-        used and the transfer nets to zero.
+        :meth:`on_refund`: pass the same ``region_operator`` *and the same
+        ``mult``* the payment used and the transfer nets to zero.
         """
-        fee, region_cut = self._fee_split(region_operator, self.serve_cost)
+        cost = self.serve_cost * mult
+        fee, region_cut = self._fee_split(region_operator, cost)
         req = self._acct(requester)
-        req.balance += self.serve_cost
+        req.balance += cost
         req.refunds += 1
-        self._acct(publisher).balance -= self.serve_cost - fee
+        self._acct(publisher).balance -= cost - fee
         self._acct(self.operator).balance -= fee - region_cut
         if region_operator is not None:
             self._acct(region_operator).balance -= region_cut

@@ -15,12 +15,22 @@ Request path (hierarchical topology)::
                                  │ 2. region discovery shard  (hit: "shard")
                                  │ 3. cloud discovery index   (hit: "cloud")
                                  ▼              │
-                             SlotQueue          └─▶ replica install:
-                          (bucketed prefill/        blob rides the backbone
-                           decode slots)            down, verify-on-fetch
-                                 │                  gates it, then the
-                                 ▼                  waiting requests queue
-                          slot completes ──▶ Outcome(OK, Prediction, fee)
+                        capacity admission      └─▶ replica install:
+                        (per-(model, bucket)        blob rides the backbone
+                         slot + queue limits)       down, verify-on-fetch
+                          │           │             gates it, then the
+                 under capacity   over capacity     waiting requests queue
+                          │           │
+                          │     spillover: next-least-loaded region with a
+                          │     verified replica (gossiped load reports) —
+                          │     or a clean REFUSED + exact refund when no
+                          │     region has room at the request's SLA tier
+                          ▼
+                      SlotQueue (bucketed prefill/decode slots,
+                                 SLA-tier weighted, bounded bypass)
+                          │
+                          ▼
+                   slot completes ──▶ Outcome(OK, Prediction, fee)
 
 Each :class:`RegionServer` batches its requests into fixed-shape slots — a
 :class:`SlotQueue` buckets prompts by padded length per model and a slot
@@ -29,45 +39,85 @@ expires, exactly the queue/slot bookkeeping ``launch/serve.py`` uses for
 real batched decoding (maxtext-style offline inference); slot compute time
 is simulated from per-token prefill/decode costs.
 
+**Capacity + overload (per-replica limits).**  A replica only runs
+``max_slots_per_key`` concurrent slots per ``(model, bucket)`` and only
+queues ``max_queue_depth`` requests per key (scaled up by SLA tier); a
+flush that finds every slot busy defers until one completes.  A request
+arriving over capacity *spills* to the least-loaded other region holding
+a verified replica of the model — candidate ordering comes from the load
+reports the placement review gossips (stale-but-shared, the classic
+gossip trade), a live admission check at the chosen target gates the
+hop, and a spill that still finds the target saturated on arrival (the
+hop takes time) is refused with an exact refund.  With nowhere to spill
+the request gets a clean ``REFUSED`` Outcome — charged at resolution,
+refunded exactly — instead of unbounded queueing.
+
+**SLA tiers.**  Requests carry ``tier``; tier ``k`` pays
+``serve_cost * tier_fee_mult[k]`` through
+:meth:`~repro.core.incentives.IncentiveLedger.on_serve`, queues ahead of
+lower tiers in the :class:`SlotQueue` (weighted insertion), and gets
+``(1 + k)`` times the base queue-depth headroom before refusal.  Bypass
+is bounded: one queued request can be overtaken at most
+``tier_bypass_limit`` times, so low-tier traffic is delayed, never
+starved.
+
 Economics: every resolved query settles a per-query micro-fee
-(``IncentiveLedger.on_serve`` at ``serve_cost``) requester → model owner,
-with the service fee split cloud/region exactly like fetch fees — and
-``sum(balances) == minted`` stays intact because serving never mints.  A
-query lost to a dark region (FaultPlan regional outage) at any point after
-payment is refunded exactly (``on_serve_refund``), including in-flight
-slots whose region goes dark mid-decode.
+(``IncentiveLedger.on_serve`` at ``serve_cost`` times the tier
+multiplier) requester → model owner, with the service fee split
+cloud/region exactly like fetch fees — the *serving* region's operator
+earns the cut, so a spilled query pays the region that actually answered
+it — and ``sum(balances) == minted`` stays intact because serving never
+mints.  A query lost to a dark region (FaultPlan regional outage) at any
+point after payment is refunded exactly (``on_serve_refund``), including
+in-flight slots whose region goes dark mid-decode and spills whose
+target saturated during the hop.
 
 Popularity-driven placement closes the loop: the tier's periodic review
 replicates models whose per-window demand crosses ``hot_threshold`` into
 every region's serving vault (paid for in backbone egress), and replicas
 that see no demand for ``decay_windows`` consecutive reviews are evicted.
-Reviews re-arm only while requests are arriving, so an idle world still
-runs to quiescence — which also means decay needs ongoing traffic to
-observe idleness (cold replicas persist in a world with no requests at
-all, by design).
+The same review doubles as the load-gossip round: each server publishes a
+``load_report`` event (queue + slot occupancy per model) that lands in
+the tier's routing table and on
+:class:`~repro.runtime.topology.Region` ``.load``.  Reviews re-arm only
+while requests are arriving, so an idle world still runs to quiescence —
+which also means decay needs ongoing traffic to observe idleness (cold
+replicas persist in a world with no requests at all, by design).
 
 Trust: a replica is verified (``Continuum.verify_delivery``) *before* it
 is installed and served from — a byzantine publisher's inflated card is
 caught at install time, the publisher is slashed (``punish_fraud``), and
 every request waiting on the install is refunded.
+
+Durability: every event this module schedules carries a durable payload
+(``durable: "serving"``), and the tier registers itself on
+``continuum.serving`` — so :func:`~repro.runtime.snapshot.snapshot_world`
+can serialize a world mid-overload (queued requests, in-flight slots and
+replica installs, armed timers, gossip tables) and a restore resumes
+byte-identically.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
 
 from repro.checkpoint.serde import params_to_bytes
 from repro.core.continuum import EDGE_TO_CLOUD, Outcome, OutcomeStatus
 from repro.core.discovery import DiscoveryResult, DiscoveryService, ModelQuery
 from repro.core.vault import ModelVault
+from repro.runtime.topology import RegionLoad
 
 
 def pick_bucket(buckets: Sequence[int], n: int) -> int:
     """The smallest bucket that fits ``n`` tokens, else the largest.
 
-    Prompts longer than every bucket are truncated-to-fit by the batching
-    engine (they pad to the largest shape), matching the standalone
-    driver's behaviour.
+    Prompts longer than every bucket are **truncated** to the largest
+    bucket by the batching engine — the slot's fixed shape is the hard
+    ceiling on prefill, so the overflow tokens are dropped, not padded
+    away.  The server counts each such request in
+    ``ServerStats.truncated_prompts`` (surfaced by
+    ``ServingReport.as_dict``) and serves/charges for the truncated
+    length.
     """
     for b in buckets:
         if n <= b:
@@ -76,14 +126,19 @@ def pick_bucket(buckets: Sequence[int], n: int) -> int:
 
 
 class SlotQueue:
-    """Bucketed FIFO queues feeding fixed-shape prefill/decode slots.
+    """Bucketed queues feeding fixed-shape prefill/decode slots.
 
     Requests are keyed by ``(model, padded-length bucket)`` so one slot is
     always a single model at a single shape — the precondition for real
     batched prefill (one compiled program per bucket, no recompiles).
     ``add`` returns the chosen bucket and the queue depth after insertion
     so the caller can flush a slot the moment it fills; ``drain`` pops at
-    most ``max_batch`` requests in arrival order.
+    most ``max_batch`` requests in queue order.
+
+    Ordering is FIFO within an SLA tier; a higher-tier item jumps ahead of
+    lower-tier items at insertion, but any single queued item can be
+    overtaken at most ``bypass_limit`` times — a bounded bypass count, so
+    priority traffic reorders the queue without ever starving it.
     """
 
     def __init__(self, buckets: Sequence[int], max_batch: int):
@@ -93,13 +148,25 @@ class SlotQueue:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         self.buckets = tuple(sorted(buckets))
         self.max_batch = max_batch
-        self._queues: Dict[Tuple[str, int], List] = {}
+        # each entry is [item, tier, overtaken-count]
+        self._queues: Dict[Tuple[str, int], List[List]] = {}
 
-    def add(self, key: str, prompt_len: int, item) -> Tuple[int, int]:
-        """Queue one item; returns ``(bucket, depth after insertion)``."""
+    def add(self, key: str, prompt_len: int, item, tier: int = 0,
+            bypass_limit: int = 0) -> Tuple[int, int]:
+        """Queue one item; returns ``(bucket, depth after insertion)``.
+
+        ``tier`` orders the insertion point (higher jumps ahead of lower);
+        ``bypass_limit`` caps how many times any one queued item may be
+        overtaken.  The defaults are plain FIFO.
+        """
         bucket = pick_bucket(self.buckets, prompt_len)
         q = self._queues.setdefault((key, bucket), [])
-        q.append(item)
+        q.append([item, tier, 0])
+        i = len(q) - 1
+        while i > 0 and tier > q[i - 1][1] and q[i - 1][2] < bypass_limit:
+            q[i - 1][2] += 1
+            q[i], q[i - 1] = q[i - 1], q[i]
+            i -= 1
         return bucket, len(q)
 
     def depth(self, key: str, bucket: int) -> int:
@@ -107,7 +174,7 @@ class SlotQueue:
         return len(self._queues.get((key, bucket), ()))
 
     def drain(self, key: str, bucket: int) -> List:
-        """Pop up to ``max_batch`` items from one queue, arrival order."""
+        """Pop up to ``max_batch`` items from one queue, in queue order."""
         q = self._queues.get((key, bucket))
         if not q:
             return []
@@ -117,7 +184,7 @@ class SlotQueue:
             self._queues[(key, bucket)] = rest
         else:
             del self._queues[(key, bucket)]
-        return slot
+        return [e[0] for e in slot]
 
     def pending(self) -> List[Tuple[str, int]]:
         """Sorted ``(key, bucket)`` pairs with queued items."""
@@ -129,7 +196,7 @@ class SlotQueue:
 
 @dataclasses.dataclass(frozen=True)
 class ServingConfig:
-    """Knobs for the serving tier (batching, simulated compute, placement).
+    """Knobs for the serving tier (batching, compute, capacity, placement).
 
     Slot compute time is ``batch_overhead_s + prefill_s_per_token × bucket
     + decode_s_per_token × max_new`` — a linear model of one bucketed
@@ -138,6 +205,14 @@ class ServingConfig:
     ``hot_threshold`` is the per-window demand (tier-wide) that triggers
     replication; ``decay_windows`` is how many consecutive zero-demand
     reviews a replica survives.
+
+    Capacity: ``max_slots_per_key`` bounds concurrent in-flight slots per
+    ``(model, bucket)`` replica shape; ``max_queue_depth`` bounds the
+    queued requests per key at tier 0 — tier ``k`` gets ``(1 + k)`` times
+    that headroom.  ``tier_fee_mult[k]`` is the SLA fee multiplier for
+    tier ``k`` (out-of-range tiers clamp to the last entry);
+    ``tier_bypass_limit`` caps how often one queued request can be
+    overtaken by higher tiers (the no-starvation bound).
     """
 
     buckets: Tuple[int, ...] = (16, 32, 64, 128)
@@ -151,11 +226,23 @@ class ServingConfig:
     placement_every_s: float = 60.0
     hot_threshold: int = 16
     decay_windows: int = 3
+    max_slots_per_key: int = 4
+    max_queue_depth: int = 64
+    tier_fee_mult: Tuple[float, ...] = (1.0, 2.0, 4.0)
+    tier_bypass_limit: int = 8
 
 
 @dataclasses.dataclass(frozen=True)
 class PredictRequest:
-    """One inference request a party issues against the serving tier."""
+    """One inference request a party issues against the serving tier.
+
+    ``tier`` is the SLA tier (0 = economy): higher tiers pay
+    ``tier_fee_mult[tier]`` times the base micro-fee, jump the slot queue
+    (bounded bypass), and get more queue-depth headroom before a
+    capacity refusal.  ``at`` is an absolute simulated arrival time for
+    :meth:`ServingTier.submit`; :func:`serve_requests` treats it as an
+    offset from the clock at call time (see there).
+    """
 
     request_id: str
     requester: str
@@ -164,6 +251,7 @@ class PredictRequest:
     max_new_tokens: int = 16
     min_accuracy: float = 0.0
     at: float = 0.0  # earliest simulated arrival time
+    tier: int = 0  # SLA tier (0 = economy)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -172,9 +260,12 @@ class Prediction:
 
     ``source`` is the resolution path — ``"replica"`` (the region's
     serving vault), ``"shard"`` (an in-region vault via the region's
-    discovery shard), or ``"cloud"`` (escalated; the answer was served
-    after a replica install).  ``queued_s`` is time spent waiting for a
-    slot; ``latency_s`` is arrival→completion.
+    discovery shard), ``"cloud"`` (escalated; the answer was served after
+    a replica install), or ``"spill"`` (the home region was over capacity
+    and the query was served by another region's replica).
+    ``region_id`` is always the region that *served* the query —  for a
+    spill, the target.  ``queued_s`` is time spent waiting for a slot
+    (including any spill hop); ``latency_s`` is arrival→completion.
     """
 
     request_id: str
@@ -205,6 +296,10 @@ class ServerStats:
     refunds: int = 0
     evictions: int = 0
     hot_pushes: int = 0
+    spill_out: int = 0  # over-capacity requests routed to another region
+    spill_in: int = 0  # spilled requests that landed on this server
+    refused_capacity: int = 0  # clean capacity refusals (subset of refused)
+    truncated_prompts: int = 0  # prompts longer than the largest bucket
 
 
 @dataclasses.dataclass
@@ -225,6 +320,10 @@ class ServingReport:
     refunds: int = 0
     evictions: int = 0
     hot_pushes: int = 0
+    spill_out: int = 0
+    spill_in: int = 0
+    refused_capacity: int = 0
+    truncated_prompts: int = 0
     p50_s: float = 0.0
     p99_s: float = 0.0
     sim_qps: float = 0.0
@@ -247,6 +346,8 @@ class _Pending:
     gated: bool
     fee: Dict
     arrived: float
+    tier: int = 0
+    mult: float = 1.0
 
 
 class RegionServer:
@@ -256,11 +357,17 @@ class RegionServer:
     (models placement has copied into the serving vault), then the
     region's **discovery shard** (in-region edge vaults + cache), then
     the **cloud index** — a cloud hit triggers a replica install and the
-    request waits for it.  The micro-fee is settled at resolution time
-    (the region operator earns its cut for replica/shard service) and
-    refunded exactly if the query is later lost to an outage or a
-    fraudulent replica.  A flat continuum runs a single server with no
-    region: every non-replica resolution is a cloud escalation.
+    request waits for it.  Replica/shard hits then pass **capacity
+    admission**: over the tier-scaled queue-depth limit for the resolved
+    ``(model, bucket)`` the request spills to the least-loaded region
+    holding a replica (see :meth:`ServingTier.spill_target`) or is
+    refused cleanly with an exact refund.  The micro-fee is settled at
+    resolution time — by the tier's fee multiplier, to the operator of
+    the region that will *serve* the query — and refunded exactly if the
+    query is later lost to an outage, a fraudulent replica, or a spill
+    target that saturated during the hop.  A flat continuum runs a
+    single server with no region: every non-replica resolution is a
+    cloud escalation and there is nowhere to spill.
     """
 
     def __init__(self, server_id: str, continuum, cfg: ServingConfig,
@@ -269,6 +376,7 @@ class RegionServer:
         self.cont = continuum
         self.cfg = cfg
         self.region = region
+        self.tier: Optional["ServingTier"] = None  # back-ref, set by the tier
         self.replicas = ModelVault(vault_id=f"serve:{server_id}",
                                    clock=continuum.clock)
         self.index = DiscoveryService(clock=continuum.clock)
@@ -280,6 +388,12 @@ class RegionServer:
         self._idle: Dict[str, int] = {}  # consecutive zero-demand windows
         self._timers: Dict[Tuple[str, int], int] = {}  # slot deadline handles
         self._installing: Dict[str, List[_Pending]] = {}
+        # in-flight state keyed for snapshot/restore: slots by event handle,
+        # install blobs by model id, capacity-starved keys awaiting a slot
+        self._inflight: Dict[Tuple[str, int], int] = {}
+        self._starved: Set[Tuple[str, int]] = set()
+        self._slots: Dict[int, Tuple[Tuple[str, int], List[_Pending], float]] = {}
+        self._install_inflight: Dict[str, Tuple] = {}
 
     # -- request intake ------------------------------------------------------
     def _offline(self, now: float) -> bool:
@@ -287,13 +401,29 @@ class RegionServer:
                 and self.cont.faults.region_offline(self.region.region_id,
                                                     now))
 
+    def _fee_mult(self, tier: int) -> float:
+        """The SLA fee multiplier for a request tier (clamped)."""
+        k = max(0, min(tier, len(self.cfg.tier_fee_mult) - 1))
+        return self.cfg.tier_fee_mult[k]
+
+    def _depth_limit(self, tier: int) -> int:
+        """Queue-depth admission limit for a tier: base × (1 + tier)."""
+        k = max(0, min(tier, len(self.cfg.tier_fee_mult) - 1))
+        return self.cfg.max_queue_depth * (1 + k)
+
+    def _over_capacity(self, key: Tuple[str, int], tier: int) -> bool:
+        return self.queue.depth(*key) >= self._depth_limit(tier)
+
     def handle(self, req: PredictRequest, emit, now: float) -> None:
-        """Resolve, charge, and enqueue one arrived request.
+        """Resolve, admit (or spill/refuse), charge, and enqueue one request.
 
         Terminal short-circuits (no payment, nothing queued): the
         requester retired (``REFUSED``), the region dark at arrival
         (``FAILED``/outage), no model anywhere satisfies the query
-        (``MISS``), or the credit gate refuses (``DENIED``).
+        (``MISS``), or the credit gate refuses the tier-multiplied fee
+        (``DENIED``).  An over-capacity request that cannot spill is
+        charged and refunded in one breath (``REFUSED``/capacity with the
+        exact refund on the outcome) — bounded queues, no silent drops.
         """
         self.stats.requests += 1
         if req.requester in self.cont.retired:
@@ -312,23 +442,38 @@ class RegionServer:
             emit(OutcomeStatus.MISS, now)
             return
         card = best.card
+        mult = self._fee_mult(req.tier)
         region_operator = (self.region.operator
                            if self.region is not None and source != "cloud"
                            else None)
         gated = self.cont.ledger is not None
-        if gated and not self.cont.ledger.can_serve(req.requester):
+        if gated and not self.cont.ledger.can_serve(req.requester, mult):
             self.cont.ledger.on_denied(req.requester)
             self.stats.denied += 1
             emit(OutcomeStatus.DENIED, now, reason="credit")
             return
+        if source != "cloud":
+            key = (card.model_id,
+                   pick_bucket(self.cfg.buckets, req.prompt_tokens))
+            if self._over_capacity(key, req.tier):
+                target = (self.tier.spill_target(key[0], key[1], req.tier,
+                                                 self)
+                          if self.tier is not None else None)
+                if target is not None:
+                    self._spill(req, emit, card, target, mult, gated, now)
+                else:
+                    self._refuse_capacity(req, emit, card, region_operator,
+                                          mult, gated, now)
+                return
         fee = {}
         if gated:
             # pay at resolution time (before batching): a slot lost to an
             # outage mid-decode then refunds exactly what was charged
             self.cont.ledger.on_serve(req.requester, card.owner,
-                                      region_operator=region_operator)
+                                      region_operator=region_operator,
+                                      mult=mult)
             fee = self.cont.ledger.fee_record(
-                region_operator, cost=self.cont.ledger.serve_cost)
+                region_operator, cost=self.cont.ledger.serve_cost * mult)
         self.window_hits[card.model_id] = (
             self.window_hits.get(card.model_id, 0) + 1)
         if source == "replica":
@@ -339,7 +484,7 @@ class RegionServer:
             self.stats.escalations += 1
         entry = _Pending(req=req, emit=emit, card=card, source=source,
                          region_operator=region_operator, gated=gated,
-                         fee=fee, arrived=now)
+                         fee=fee, arrived=now, tier=req.tier, mult=mult)
         if source == "cloud":
             self._escalate(best, entry, now)
         else:
@@ -358,6 +503,106 @@ class RegionServer:
         if res:
             return "cloud", res[0]
         return "miss", None
+
+    # -- overload: spillover + bounded refusal -------------------------------
+    def _spill(self, req: PredictRequest, emit, card, target: "RegionServer",
+               mult: float, gated: bool, now: float) -> None:
+        """Route an over-capacity request to another region's replica.
+
+        The fee settles here (the *target* region's operator earns the
+        cut — payment follows service), then the prompt rides the
+        backbone: home region uplink + target region uplink, costed like
+        any other cross-region transfer.  Capacity is rechecked on
+        arrival; a target that saturated during the hop refunds exactly.
+        """
+        region_operator = (target.region.operator
+                           if target.region is not None else None)
+        fee = {}
+        if gated:
+            self.cont.ledger.on_serve(req.requester, card.owner,
+                                      region_operator=region_operator,
+                                      mult=mult)
+            fee = self.cont.ledger.fee_record(
+                region_operator, cost=self.cont.ledger.serve_cost * mult)
+        self.stats.spill_out += 1
+        entry = _Pending(req=req, emit=emit, card=card, source="spill",
+                         region_operator=region_operator, gated=gated,
+                         fee=fee, arrived=now, tier=req.tier, mult=mult)
+        nbytes = req.prompt_tokens * self.cfg.token_bytes
+        hop_t = 0.0
+        if self.region is not None:
+            hop_t += self.region.link_up.transfer_time(nbytes)
+        if target.region is not None:
+            hop_t += target.region.link_up.transfer_time(nbytes)
+        self.cont.traffic.cloud_egress_bytes += nbytes
+        self.cont.traffic.total_time_s += hop_t
+        tier = self.tier
+        handle = self.cont.loop.call_after(
+            hop_t, lambda now2: tier._fire_spill(handle, now2),
+            label=(f"spill {req.request_id} "
+                   f"{self.server_id}->{target.server_id}"),
+            payload={"op": "serve_spill", "durable": "serving",
+                     "request": req.request_id, "model": card.model_id,
+                     "from": self.server_id, "server": target.server_id},
+        )
+        tier._spills[handle] = (target.server_id, entry)
+
+    def _refuse_capacity(self, req: PredictRequest, emit, card,
+                         region_operator: Optional[str], mult: float,
+                         gated: bool, now: float) -> None:
+        """Bounded queueing: nowhere to spill at this tier's depth limit.
+
+        The request is charged at resolution like any admitted query and
+        refunded in the same breath — the ``REFUSED`` outcome carries the
+        exact refund record, and the queue never grows past its bound.
+        """
+        entry = _Pending(req=req, emit=emit, card=card, source="local",
+                         region_operator=region_operator, gated=gated,
+                         fee={}, arrived=now, tier=req.tier, mult=mult)
+        if gated:
+            self.cont.ledger.on_serve(req.requester, card.owner,
+                                      region_operator=region_operator,
+                                      mult=mult)
+        fee = self._refund_payment(entry)
+        self.stats.refused += 1
+        self.stats.refused_capacity += 1
+        emit(OutcomeStatus.REFUSED, now, reason="capacity", fee=fee)
+
+    def _spill_arrive(self, entry: _Pending, now: float) -> None:
+        """A spilled request lands: recheck capacity, then queue like a hit.
+
+        The gossip that routed it was stale and the hop took time, so the
+        target re-runs admission: dark region → outage refund; saturated
+        queue → ``REFUSED``/capacity with the exact refund; otherwise the
+        request queues here and the serve counts toward this region's
+        demand window (so replica decay sees spilled traffic).
+        """
+        self.stats.spill_in += 1
+        if self._offline(now):
+            self.stats.outage_drops += 1
+            self._refund(entry, "outage", now)
+            return
+        mid = entry.card.model_id
+        bucket = pick_bucket(self.cfg.buckets, entry.req.prompt_tokens)
+        if self._over_capacity((mid, bucket), entry.tier):
+            fee = self._refund_payment(entry)
+            self.stats.refused += 1
+            self.stats.refused_capacity += 1
+            entry.emit(OutcomeStatus.REFUSED, now, reason="capacity", fee=fee)
+            return
+        self.window_hits[mid] = self.window_hits.get(mid, 0) + 1
+        self._enqueue(entry, now)
+
+    def load_report(self) -> Dict:
+        """This server's queue/slot occupancy (the gossiped load report)."""
+        models: Dict[str, int] = {}
+        for (mid, _bucket), q in sorted(self.queue._queues.items()):
+            models[mid] = models.get(mid, 0) + len(q)
+        for (mid, _bucket), n in sorted(self._inflight.items()):
+            models[mid] = models.get(mid, 0) + n
+        return {"queued": len(self.queue),
+                "inflight": sum(self._inflight.values()),
+                "models": models}
 
     # -- replica install (escalation + hot-push) -----------------------------
     def _escalate(self, best: DiscoveryResult, entry: _Pending,
@@ -386,14 +631,17 @@ class RegionServer:
         self.cont.traffic.downloads_bytes += nbytes
         self.cont.traffic.cloud_egress_bytes += nbytes
         self.cont.traffic.total_time_s += dl_t
+        self._install_inflight[card.model_id] = (params, card)
         self.cont.loop.call_after(
             dl_t, lambda now2: self._replica_arrived(params, card, now2),
             label=f"replica {card.model_id} -> {self.server_id}",
-            payload={"op": "serve_replica", "model": card.model_id,
-                     "nbytes": nbytes, "server": self.server_id},
+            payload={"op": "serve_replica", "durable": "serving",
+                     "model": card.model_id, "nbytes": nbytes,
+                     "server": self.server_id},
         )
 
     def _replica_arrived(self, params, card, now: float) -> None:
+        self._install_inflight.pop(card.model_id, None)
         waiting = self._installing.pop(card.model_id, [])
         if self._offline(now):
             # the region went dark while the blob was in flight: the
@@ -416,23 +664,28 @@ class RegionServer:
         for e in waiting:
             self._enqueue(e, now)
 
+    def _refund_payment(self, e: _Pending) -> Dict:
+        """Reverse one paid query exactly (same operator, same multiplier)."""
+        if not e.gated:
+            return {}
+        led = self.cont.ledger
+        led.on_serve_refund(e.req.requester, e.card.owner,
+                            region_operator=e.region_operator, mult=e.mult)
+        self.stats.refunds += 1
+        return led.fee_record(e.region_operator,
+                              cost=led.serve_cost * e.mult, refunded=True)
+
     def _refund(self, e: _Pending, reason: str, now: float) -> None:
-        fee = {}
-        if e.gated:
-            self.cont.ledger.on_serve_refund(
-                e.req.requester, e.card.owner,
-                region_operator=e.region_operator)
-            fee = self.cont.ledger.fee_record(
-                e.region_operator, cost=self.cont.ledger.serve_cost,
-                refunded=True)
-            self.stats.refunds += 1
+        fee = self._refund_payment(e)
         self.stats.failed += 1
         e.emit(OutcomeStatus.FAILED, now, reason=reason, fee=fee)
 
     # -- batching ------------------------------------------------------------
     def _enqueue(self, entry: _Pending, now: float) -> None:
         mid = entry.card.model_id
-        bucket, depth = self.queue.add(mid, entry.req.prompt_tokens, entry)
+        bucket, depth = self.queue.add(
+            mid, entry.req.prompt_tokens, entry, tier=entry.tier,
+            bypass_limit=self.cfg.tier_bypass_limit)
         key = (mid, bucket)
         if depth >= self.cfg.max_batch:
             # slot full: collapse the pending deadline and flush now
@@ -442,7 +695,8 @@ class RegionServer:
             self.cont.loop.call_after(
                 0.0, lambda now2: self._flush(key, now2),
                 label=f"slot-full {mid}@{bucket}",
-                payload={"op": "slot_full", "model": mid, "bucket": bucket,
+                payload={"op": "slot_full", "durable": "serving",
+                         "model": mid, "bucket": bucket,
                          "server": self.server_id},
             )
         elif key not in self._timers:
@@ -450,13 +704,19 @@ class RegionServer:
                 self.cfg.max_wait_s,
                 lambda now2: self._flush(key, now2),
                 label=f"slot-deadline {mid}@{bucket}",
-                payload={"op": "slot_deadline", "model": mid,
-                         "bucket": bucket, "server": self.server_id},
+                payload={"op": "slot_deadline", "durable": "serving",
+                         "model": mid, "bucket": bucket,
+                         "server": self.server_id},
             )
 
     def _flush(self, key: Tuple[str, int], now: float) -> None:
         self._timers.pop(key, None)
         mid, bucket = key
+        if self._inflight.get(key, 0) >= self.cfg.max_slots_per_key:
+            # every concurrent slot for this replica shape is busy: defer
+            # the drain until one completes (_slot_done wakes us)
+            self._starved.add(key)
+            return
         slot = self.queue.drain(mid, bucket)
         if not slot:
             return
@@ -465,7 +725,8 @@ class RegionServer:
             self.cont.loop.call_after(
                 0.0, lambda now2: self._flush(key, now2),
                 label=f"slot-full {mid}@{bucket}",
-                payload={"op": "slot_full", "model": mid, "bucket": bucket,
+                payload={"op": "slot_full", "durable": "serving",
+                         "model": mid, "bucket": bucket,
                          "server": self.server_id},
             )
         elif leftover:
@@ -473,8 +734,9 @@ class RegionServer:
                 self.cfg.max_wait_s,
                 lambda now2: self._flush(key, now2),
                 label=f"slot-deadline {mid}@{bucket}",
-                payload={"op": "slot_deadline", "model": mid,
-                         "bucket": bucket, "server": self.server_id},
+                payload={"op": "slot_deadline", "durable": "serving",
+                         "model": mid, "bucket": bucket,
+                         "server": self.server_id},
             )
         if self._offline(now):
             self.stats.outage_drops += len(slot)
@@ -485,24 +747,59 @@ class RegionServer:
                      + self.cfg.prefill_s_per_token * bucket
                      + self.cfg.decode_s_per_token
                      * max(e.req.max_new_tokens for e in slot))
-        self.cont.loop.call_after(
+        self._inflight[key] = self._inflight.get(key, 0) + 1
+        handle = self.cont.loop.call_after(
             compute_t,
-            lambda now2: self._slot_done(slot, compute_t, now2),
+            lambda now2: self._fire_slot(handle, now2),
             label=f"slot {mid}@{bucket} x{len(slot)}",
-            payload={"op": "slot", "model": mid, "bucket": bucket,
-                     "batch": len(slot), "server": self.server_id},
+            payload={"op": "slot", "durable": "serving", "model": mid,
+                     "bucket": bucket, "batch": len(slot),
+                     "server": self.server_id},
         )
+        self._slots[handle] = (key, slot, compute_t)
 
-    def _slot_done(self, slot: List[_Pending], compute_t: float,
-                   now: float) -> None:
+    def _fire_slot(self, handle: int, now: float) -> None:
+        key, slot, compute_t = self._slots.pop(handle)
+        self._slot_done(key, slot, compute_t, now)
+
+    def _slot_done(self, key: Tuple[str, int], slot: List[_Pending],
+                   compute_t: float, now: float) -> None:
+        mid, bucket = key
+        left = self._inflight.get(key, 0) - 1
+        if left > 0:
+            self._inflight[key] = left
+        else:
+            self._inflight.pop(key, None)
+        if key in self._starved:
+            # a flush was deferred for capacity: the freed slot picks the
+            # queue back up immediately
+            self._starved.discard(key)
+            if self.queue.depth(mid, bucket):
+                handle = self._timers.pop(key, None)
+                if handle is not None:
+                    self.cont.loop.cancel(handle)
+                self.cont.loop.call_after(
+                    0.0, lambda now2: self._flush(key, now2),
+                    label=f"slot-ready {mid}@{bucket}",
+                    payload={"op": "slot_ready", "durable": "serving",
+                             "model": mid, "bucket": bucket,
+                             "server": self.server_id},
+                )
         if self._offline(now):
             # the region went dark mid-decode: the whole slot is lost
             self.stats.outage_drops += len(slot)
             for e in slot:
                 self._refund(e, "outage", now)
             return
+        largest = self.cfg.buckets[-1]
         for e in slot:
-            tokens = e.req.prompt_tokens + e.req.max_new_tokens
+            prompt = e.req.prompt_tokens
+            if prompt > largest:
+                # over-long prompts truncate to the largest bucket (the
+                # slot's fixed shape is the prefill ceiling)
+                prompt = largest
+                self.stats.truncated_prompts += 1
+            tokens = prompt + e.req.max_new_tokens
             self.cont.traffic.serve_bytes += tokens * self.cfg.token_bytes
             self.stats.served += 1
             pred = Prediction(
@@ -527,16 +824,26 @@ class ServingTier:
     requester's home region by the same stable bucketing the exchange
     uses); on a flat continuum it runs a single ``"cloud"`` server.
     :meth:`submit` schedules a request's arrival; every completion is
-    delivered as one :class:`~repro.core.continuum.Outcome`.
+    delivered as one :class:`~repro.core.continuum.Outcome` (to the
+    per-request callback, falling back to the tier-level ``on_complete``
+    — which is also how a restored tier re-binds the callbacks of
+    in-flight requests).
 
     The placement review (hot replication + replica decay) arms itself on
     the first arrival and re-arms only while traffic keeps coming, so a
-    drained tier quiesces with the loop.
+    drained tier quiesces with the loop.  Each review also gossips every
+    server's load report (see :meth:`spill_target`).
+
+    The tier registers itself on ``continuum.serving`` so
+    :func:`~repro.runtime.snapshot.snapshot_world` can serialize it; one
+    continuum carries at most one tier (the latest wins).
     """
 
-    def __init__(self, continuum, cfg: Optional[ServingConfig] = None):
+    def __init__(self, continuum, cfg: Optional[ServingConfig] = None,
+                 on_complete: Optional[Callable] = None):
         self.cont = continuum
         self.cfg = cfg if cfg is not None else ServingConfig()
+        self.on_complete = on_complete  # tier-level default callback
         self.servers: Dict[str, RegionServer] = {}
         if continuum.topology is not None:
             for rid in continuum.topology.region_ids():
@@ -545,12 +852,17 @@ class ServingTier:
                     region=continuum.topology.regions[rid])
         else:
             self.servers["cloud"] = RegionServer("cloud", continuum, self.cfg)
+        for server in self.servers.values():
+            server.tier = self
         self.requests = 0
+        self.load_reports: Dict[str, RegionLoad] = {}
+        self._spills: Dict[int, Tuple[str, _Pending]] = {}
         self._latencies: List[float] = []
         self._first_t: Optional[float] = None
         self._last_t: Optional[float] = None
         self._review_armed = False
         self._activity = False
+        continuum.serving = self
 
     def server_for(self, requester: str) -> RegionServer:
         """The requester's home server (its region, or the flat server)."""
@@ -559,27 +871,30 @@ class ServingTier:
                                 .region_id]
         return self.servers["cloud"]
 
-    def submit(self, req: PredictRequest,
-               on_complete: Optional[Callable] = None) -> None:
-        """Schedule one request's arrival at its home server.
+    def _make_emit(self, req: PredictRequest, t: float,
+                   on_complete: Optional[Callable] = None) -> Callable:
+        """Completion closure: tier latency bookkeeping + Outcome delivery.
 
-        The request arrives at ``max(req.at, now)``; ``on_complete``
-        (optional) receives exactly one :class:`Outcome` — ``OK`` with a
-        :class:`Prediction` payload and the micro-fee record, ``MISS``,
-        ``DENIED``, ``REFUSED``, or ``FAILED`` with the refund record.
+        ``t`` is the request's arrival time (the latency base).  Restore
+        paths rebuild emits through here with ``on_complete=None`` so
+        in-flight requests report through the tier-level callback.
         """
-        now = self.cont.clock.now()
-        t = max(req.at, now)
-        self.requests += 1
-        server = self.server_for(req.requester)
+        cb = on_complete if on_complete is not None else self.on_complete
 
         def emit(status, now2, payload=None, reason=None, fee=None):
             if status is OutcomeStatus.OK:
                 self._latencies.append(now2 - t)
                 self._last_t = (now2 if self._last_t is None
                                 else max(self._last_t, now2))
-            if on_complete is not None:
-                on_complete(Outcome(status, now2, payload, reason, fee or {}))
+            if cb is not None:
+                cb(Outcome(status, now2, payload, reason, fee or {}))
+
+        return emit
+
+    def _arrival(self, req: PredictRequest, server: RegionServer, t: float,
+                 on_complete: Optional[Callable] = None) -> Callable:
+        """The arrive callback :meth:`submit` schedules (restore re-binds)."""
+        emit = self._make_emit(req, t, on_complete)
 
         def arrive(now2: float):
             if self._review_armed:
@@ -588,14 +903,91 @@ class ServingTier:
                 self._arm_review()
             server.handle(req, emit, now2)
 
+        return arrive
+
+    def submit(self, req: PredictRequest,
+               on_complete: Optional[Callable] = None) -> None:
+        """Schedule one request's arrival at its home server.
+
+        The request arrives at ``max(req.at, now)``; ``on_complete``
+        (optional) receives exactly one :class:`Outcome` — ``OK`` with a
+        :class:`Prediction` payload and the micro-fee record, ``MISS``,
+        ``DENIED``, ``REFUSED`` (retired requester or over-capacity, the
+        latter with the exact refund attached), or ``FAILED`` with the
+        refund record.
+        """
+        now = self.cont.clock.now()
+        t = max(req.at, now)
+        self.requests += 1
+        server = self.server_for(req.requester)
         self.cont.loop.call_at(
-            t, arrive, label=f"serve-req {req.request_id}",
-            payload={"op": "serve_request", "request": req.request_id,
-                     "task": req.task, "requester": req.requester,
-                     "server": server.server_id},
+            t, self._arrival(req, server, t, on_complete),
+            label=f"serve-req {req.request_id}",
+            payload={"op": "serve_request", "durable": "serving",
+                     "request": req.request_id, "task": req.task,
+                     "requester": req.requester, "server": server.server_id,
+                     "req": dataclasses.asdict(req)},
         )
         self._first_t = (t if self._first_t is None
                          else min(self._first_t, t))
+
+    # -- load-aware spillover routing ----------------------------------------
+    def spill_target(self, model_id: str, bucket: int, tier: int,
+                     home: RegionServer) -> Optional[RegionServer]:
+        """The least-loaded other region that can take an over-capacity query.
+
+        Candidates must hold a verified replica of the model; ordering is
+        by the *gossiped* per-model load (ties break on server id, so
+        routing is deterministic), and a live admission check against the
+        candidate's current queue gates the pick — the request can still
+        find the target saturated after the hop, which refunds exactly.
+        Returns ``None`` when no region has room at this tier (the caller
+        refuses cleanly).
+        """
+        best = None
+        best_score = None
+        for sid in sorted(self.servers):
+            if sid == home.server_id:
+                continue
+            server = self.servers[sid]
+            if model_id not in server.replicas:
+                continue
+            if server._over_capacity((model_id, bucket), tier):
+                continue
+            rl = self.load_reports.get(sid)
+            score = rl.models.get(model_id, 0) if rl is not None else 0
+            if best_score is None or score < best_score:
+                best, best_score = server, score
+        return best
+
+    def _fire_spill(self, handle: int, now: float) -> None:
+        target_sid, entry = self._spills.pop(handle)
+        server = self.servers.get(target_sid)
+        if server is None:
+            # the target region drained while the request was in flight:
+            # refund exactly, like any other lost-in-transit query
+            fee = {}
+            if entry.gated:
+                led = self.cont.ledger
+                led.on_serve_refund(entry.req.requester, entry.card.owner,
+                                    region_operator=entry.region_operator,
+                                    mult=entry.mult)
+                fee = led.fee_record(entry.region_operator,
+                                     cost=led.serve_cost * entry.mult,
+                                     refunded=True)
+            entry.emit(OutcomeStatus.FAILED, now, reason="outage", fee=fee)
+            return
+        server._spill_arrive(entry, now)
+
+    def _apply_load_report(self, payload: Dict, now: float) -> None:
+        """Land one gossiped load report in the routing table (+ region)."""
+        rl = RegionLoad(time=now, queued=payload["queued"],
+                        inflight=payload["inflight"],
+                        models=dict(payload["models"]))
+        self.load_reports[payload["server"]] = rl
+        server = self.servers.get(payload["server"])
+        if server is not None and server.region is not None:
+            server.region.load = rl
 
     # -- popularity-driven placement -----------------------------------------
     def _arm_review(self) -> None:
@@ -603,11 +995,18 @@ class ServingTier:
         self._activity = False
         self.cont.loop.call_after(
             self.cfg.placement_every_s, self._review,
-            label="placement-review", payload={"op": "placement_review"},
+            label="placement-review",
+            payload={"op": "placement_review", "durable": "serving"},
         )
 
     def _review(self, now: float) -> None:
-        """One placement window: replicate the hot, age out the cold."""
+        """One placement window: replicate the hot, age out the cold.
+
+        Doubles as the gossip round: every server's load report is
+        published as a ``load_report`` event and applied to the tier's
+        routing table (and the owning :class:`Region`), so spillover
+        decisions run on the loads as of the last review.
+        """
         self._review_armed = False
         totals: Dict[str, int] = {}
         for sid in sorted(self.servers):
@@ -643,6 +1042,15 @@ class ServingTier:
                 else:
                     server._idle[mid] = idle
             server.window_hits.clear()
+        for sid in sorted(self.servers):
+            report = self.servers[sid].load_report()
+            payload = {"op": "load_report", "durable": "serving",
+                       "server": sid, **report}
+            self.cont.loop.call_after(
+                0.0,
+                lambda now2, p=payload: self._apply_load_report(p, now2),
+                label=f"load-report {sid}", payload=payload,
+            )
         if self._activity:
             self._arm_review()
 
@@ -684,10 +1092,20 @@ def serve_requests(continuum, requests: Sequence[PredictRequest],
     tier's :class:`ServingReport` — counters, simulated p50/p99 latency,
     sustained simulated queries/sec, and whether the ledger stayed
     conserved through micro-fees and refunds.
+
+    Arrival times are **relative**: each request arrives ``req.at``
+    seconds after the clock at call time.  (Synchronous publishes advance
+    the simulated clock by their upload transfer time, so absolute ``at``
+    stamps chosen before seeding a market would all clump at ``now`` —
+    the PR-8 footgun.  Re-basing here keeps the caller's intended spacing
+    no matter what the clock says.)  Use :meth:`ServingTier.submit`
+    directly for absolute-time scheduling.
     """
     tier = ServingTier(continuum, cfg)
+    base = continuum.clock.now()
     for req in requests:
-        tier.submit(req, on_complete)
+        tier.submit(dataclasses.replace(req, at=base + max(req.at, 0.0)),
+                    on_complete)
     continuum.loop.run_to_quiescence()
     return tier.report()
 

@@ -20,10 +20,17 @@ prove this against the PR-4 golden-trace machinery):
 * the :class:`~repro.runtime.topology.RegionalTopology`: region ids,
   links, edge membership, locality stats, and operator accounts,
 * ``TrafficLog`` / ``FaultStats`` counters, fraud/membership sets,
+* the attached :class:`~repro.runtime.serving.ServingTier`, if any —
+  per-server replica vaults, queued requests (with SLA tier + bypass
+  counts), in-flight slots and replica installs, armed slot timers,
+  gossiped load reports, and pending spills — so a world can snapshot
+  *mid-overload* and resume serving byte-identically (restored
+  in-flight requests report through ``restore_world``'s
+  ``serving_on_complete`` callback),
 * the :class:`~repro.runtime.loop.EventLoop` frontier — pending events
-  whose payloads are *durable* (self-describing, e.g. the membership
-  events) are persisted with their original sequence numbers and
-  rescheduled on restore; a snapshot with non-durable in-flight
+  whose payloads are *durable* (self-describing: the membership and
+  serving events) are persisted with their original sequence numbers
+  and rescheduled on restore; a snapshot with non-durable in-flight
   closures is refused (:class:`SnapshotError`) — snapshot at a cycle
   barrier instead,
 * the :class:`~repro.runtime.clock.SimClock` time and the loop's
@@ -91,6 +98,68 @@ def _discovery_manifest(svc) -> Dict:
             "stats": dict(svc.stats)}
 
 
+def _pending_manifest(e) -> Dict:
+    """One serving ``_Pending`` entry (the emit closure rebuilds on restore)."""
+    return {"req": dataclasses.asdict(e.req), "card": e.card.to_json(),
+            "source": e.source, "region_operator": e.region_operator,
+            "gated": e.gated, "fee": e.fee, "arrived": e.arrived,
+            "tier": e.tier, "mult": e.mult}
+
+
+def _serving_manifest(tier, pool: Dict[str, bytes]) -> Dict:
+    """The full serving tier: per-server queues, slots, installs, gossip."""
+    servers = []
+    for sid in sorted(tier.servers):
+        s = tier.servers[sid]
+        install_inflight = {}
+        for mid in sorted(s._install_inflight):
+            params, card = s._install_inflight[mid]
+            blob = params_to_bytes(params)
+            sha = hashlib.sha256(blob).hexdigest()
+            pool[sha] = blob
+            install_inflight[mid] = {"card": card.to_json(), "blob": sha}
+        servers.append({
+            "server_id": sid,
+            "stats": dataclasses.asdict(s.stats),
+            "window_hits": dict(s.window_hits),
+            "idle": dict(s._idle),
+            "replicas": _vault_manifest(s.replicas, pool),
+            "queues": [[mid, bucket,
+                        [[_pending_manifest(item), tr, ov]
+                         for item, tr, ov in q]]
+                       for (mid, bucket), q in sorted(s.queue._queues.items())],
+            "timers": [[mid, bucket, h]
+                       for (mid, bucket), h in sorted(s._timers.items())],
+            "inflight": [[mid, bucket, n]
+                         for (mid, bucket), n in sorted(s._inflight.items())],
+            "starved": sorted([mid, bucket] for mid, bucket in s._starved),
+            "installing": {mid: [_pending_manifest(e) for e in waiters]
+                           for mid, waiters in sorted(s._installing.items())},
+            "install_inflight": install_inflight,
+            # in-flight slots keyed by their event handle (== seq), so the
+            # restored "slot" frontier event finds its batch again
+            "slots": {str(h): {"model": key[0], "bucket": key[1],
+                               "compute_t": compute_t,
+                               "entries": [_pending_manifest(e)
+                                           for e in slot]}
+                      for h, (key, slot, compute_t) in sorted(s._slots.items())},
+        })
+    return {
+        "cfg": dataclasses.asdict(tier.cfg),
+        "requests": tier.requests,
+        "latencies": list(tier._latencies),
+        "first_t": tier._first_t,
+        "last_t": tier._last_t,
+        "review_armed": tier._review_armed,
+        "activity": tier._activity,
+        "load_reports": {sid: rl.as_dict()
+                         for sid, rl in sorted(tier.load_reports.items())},
+        "spills": {str(h): {"target": sid, "entry": _pending_manifest(e)}
+                   for h, (sid, e) in sorted(tier._spills.items())},
+        "servers": servers,
+    }
+
+
 def _ledger_manifest(ledger: IncentiveLedger) -> Dict:
     return {
         "config": {
@@ -125,7 +194,7 @@ def snapshot_world(cont: Continuum, cohorts: Sequence = (),
     Raises :class:`SnapshotError` if the event frontier holds any
     non-durable pending event — closures cannot cross a process
     boundary, so snapshot at a quiescent point (or with only durable
-    membership events pending).
+    membership/serving events pending).
     """
     loop = cont.loop
     frontier = []
@@ -213,6 +282,8 @@ def snapshot_world(cont: Continuum, cohorts: Sequence = (),
         "membership_refusals": cont.membership_refusals,
         "faults": (cont.faults.to_dict()
                    if cont.faults is not None else None),
+        "serving": (_serving_manifest(cont.serving, pool)
+                    if cont.serving is not None else None),
         "cohorts": cohort_meta,
         "extra": extra or {},
     }
@@ -304,8 +375,123 @@ def _restore_discovery(svc, m: Dict) -> None:
     svc.stats = dict(m["stats"])
 
 
-def restore_world(data: bytes, *, verifier=None,
-                  cohorts: Sequence = ()) -> Tuple[Continuum, Dict]:
+def _restore_pending(tier, pm: Dict):
+    """Rebuild one ``_Pending`` with its emit re-bound through the tier."""
+    from repro.runtime.serving import PredictRequest, _Pending
+
+    req = PredictRequest(**pm["req"])
+    return _Pending(req=req, emit=tier._make_emit(req, pm["arrived"]),
+                    card=ModelCard.from_json(pm["card"]),
+                    source=pm["source"],
+                    region_operator=pm["region_operator"],
+                    gated=pm["gated"], fee=pm["fee"],
+                    arrived=pm["arrived"], tier=pm["tier"],
+                    mult=pm["mult"])
+
+
+def _restore_serving(cont: Continuum, sm: Dict, pool: Dict[str, bytes],
+                     on_complete) -> None:
+    """Rebuild the serving tier (registers itself on ``cont.serving``).
+
+    ``on_complete`` becomes the tier-level callback every restored
+    in-flight request reports through — per-request callbacks are
+    closures and do not survive the archive.
+    """
+    from repro.runtime.serving import (ServerStats, ServingConfig,
+                                       ServingTier)
+    from repro.runtime.topology import RegionLoad
+
+    cfgd = dict(sm["cfg"])
+    for k in ("buckets", "tier_fee_mult"):
+        cfgd[k] = tuple(cfgd[k])
+    tier = ServingTier(cont, ServingConfig(**cfgd), on_complete=on_complete)
+    tier.requests = sm["requests"]
+    tier._latencies = list(sm["latencies"])
+    tier._first_t = sm["first_t"]
+    tier._last_t = sm["last_t"]
+    tier._review_armed = sm["review_armed"]
+    tier._activity = sm["activity"]
+    tier.load_reports = {sid: RegionLoad(**d)
+                         for sid, d in sm["load_reports"].items()}
+    for sid, rl in tier.load_reports.items():
+        server = tier.servers.get(sid)
+        if server is not None and server.region is not None:
+            server.region.load = rl
+    for srv in sm["servers"]:
+        if srv["server_id"] not in tier.servers:
+            raise SnapshotError(f"serving snapshot names server "
+                                f"{srv['server_id']!r} the restored "
+                                f"topology does not have")
+        server = tier.servers[srv["server_id"]]
+        server.stats = ServerStats(**srv["stats"])
+        server.window_hits = dict(srv["window_hits"])
+        server._idle = dict(srv["idle"])
+        _restore_vault(server.replicas, srv["replicas"], pool)
+        for entry in server.replicas.entries():
+            server.index.register(entry.card, server.replicas.vault_id)
+        for mid, bucket, q in srv["queues"]:
+            server.queue._queues[(mid, bucket)] = [
+                [_restore_pending(tier, pm), tr, ov] for pm, tr, ov in q]
+        server._timers = {(mid, bucket): h
+                          for mid, bucket, h in srv["timers"]}
+        server._inflight = {(mid, bucket): n
+                            for mid, bucket, n in srv["inflight"]}
+        server._starved = {(mid, bucket) for mid, bucket in srv["starved"]}
+        server._installing = {
+            mid: [_restore_pending(tier, pm) for pm in pms]
+            for mid, pms in srv["installing"].items()}
+        for mid, im in srv["install_inflight"].items():
+            blob = pool.get(im["blob"])
+            if blob is None:
+                raise SnapshotError(f"snapshot blob {im['blob'][:12]}... "
+                                    f"missing for in-flight install {mid}")
+            server._install_inflight[mid] = (
+                params_from_bytes(blob), ModelCard.from_json(im["card"]))
+        for h, slm in srv["slots"].items():
+            server._slots[int(h)] = (
+                (slm["model"], slm["bucket"]),
+                [_restore_pending(tier, pm) for pm in slm["entries"]],
+                slm["compute_t"])
+    tier._spills = {
+        int(h): (spm["target"], _restore_pending(tier, spm["entry"]))
+        for h, spm in sm["spills"].items()}
+
+
+def _serving_event_fn(tier, seq: int, t: float, payload: Dict):
+    """The callback for one restored durable serving frontier event.
+
+    Slot/spill events re-find their in-flight state through the side
+    tables ``_restore_serving`` prefilled, keyed by the event's original
+    sequence number (== its scheduling handle).
+    """
+    from repro.runtime.serving import PredictRequest
+
+    op = payload["op"]
+    if op == "serve_request":
+        req = PredictRequest(**payload["req"])
+        return tier._arrival(req, tier.servers[payload["server"]], t)
+    if op in ("slot_full", "slot_deadline", "slot_ready"):
+        server = tier.servers[payload["server"]]
+        key = (payload["model"], payload["bucket"])
+        return lambda now: server._flush(key, now)
+    if op == "slot":
+        server = tier.servers[payload["server"]]
+        return lambda now: server._fire_slot(seq, now)
+    if op == "serve_replica":
+        server = tier.servers[payload["server"]]
+        params, card = server._install_inflight[payload["model"]]
+        return lambda now: server._replica_arrived(params, card, now)
+    if op == "serve_spill":
+        return lambda now: tier._fire_spill(seq, now)
+    if op == "placement_review":
+        return tier._review
+    if op == "load_report":
+        return lambda now, p=payload: tier._apply_load_report(p, now)
+    raise SnapshotError(f"frontier event has unknown serving op {op!r}")
+
+
+def restore_world(data: bytes, *, verifier=None, cohorts: Sequence = (),
+                  serving_on_complete=None) -> Tuple[Continuum, Dict]:
     """Rebuild a continuum (and cohorts) from a snapshot archive.
 
     Returns ``(continuum, extra)`` where ``extra`` is the caller dict
@@ -314,7 +500,11 @@ def restore_world(data: bytes, *, verifier=None,
     ``cohorts`` are freshly-constructed
     :class:`~repro.runtime.population.PartyPopulation` instances (same
     shape/seed as at snapshot time) whose device state is restored
-    positionally.
+    positionally.  If the world carried a
+    :class:`~repro.runtime.serving.ServingTier` it is rebuilt (find it on
+    ``continuum.serving``) with ``serving_on_complete`` as the tier-level
+    Outcome callback — the per-request callbacks in flight at snapshot
+    time were closures and report through it instead.
 
     The restored world continues *byte-identically*: the event loop's
     sequence counters resume the pre-snapshot numbering, pending durable
@@ -385,17 +575,27 @@ def restore_world(data: bytes, *, verifier=None,
     cont.retired = set(m["retired"])
     cont.membership_refusals = m["membership_refusals"]
 
+    if m.get("serving"):
+        _restore_serving(cont, m["serving"], pool, serving_on_complete)
+
     loop.restore_progress(m["loop"]["seq"], m["loop"]["events_processed"])
     for t, seq, label, payload in m["frontier"]:
-        if payload.get("durable") != "membership":
+        kind = payload.get("durable")
+        if kind == "membership":
+            fn = (lambda now, p=payload: cont.membership_handler(p))
+        elif kind == "serving":
+            if cont.serving is None:
+                raise SnapshotError(
+                    f"frontier event {label!r} is a serving event but the "
+                    f"snapshot has no serving tier"
+                )
+            fn = _serving_event_fn(cont.serving, seq, t, payload)
+        else:
             raise SnapshotError(
                 f"frontier event {label!r} has unknown durable kind "
-                f"{payload.get('durable')!r}"
+                f"{kind!r}"
             )
-        loop.restore_event(
-            t, seq, label,
-            lambda now, p=payload: cont.membership_handler(p), payload,
-        )
+        loop.restore_event(t, seq, label, fn, payload)
 
     if len(cohorts) != len(m["cohorts"]):
         raise SnapshotError(f"snapshot has {len(m['cohorts'])} cohorts, "

@@ -90,6 +90,32 @@ class RegionStats:
         return dataclasses.asdict(self)
 
 
+@dataclasses.dataclass
+class RegionLoad:
+    """One region's last *gossiped* serving-load report.
+
+    The serving tier's placement review doubles as the gossip round: at
+    every review each :class:`~repro.runtime.serving.RegionServer`
+    publishes its queue/slot occupancy as a ``load_report`` event and the
+    applied report lands here (and in the tier's routing table).  Routing
+    decisions between reviews therefore run on *stale-but-shared* load —
+    the classic gossip trade — with a live admission check at the chosen
+    target gating actual spillover (see ``ServingTier.spill_target``).
+
+    ``models`` maps model id → queued + in-flight request count for that
+    model on the region's server at report time.
+    """
+
+    time: float = 0.0
+    queued: int = 0
+    inflight: int = 0
+    models: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+    def as_dict(self) -> Dict:
+        """Plain-dict view (snapshot manifests, benchmark JSON)."""
+        return dataclasses.asdict(self)
+
+
 class Region:
     """One regional aggregation point: a discovery shard + a model cache.
 
@@ -97,7 +123,9 @@ class Region:
     every remote card cached after a cloud escalation; the cache vault
     holds the remote blobs themselves.  ``operator`` is the region's
     ledger account (``region:<id>``) — it collects the regional share of
-    the service fee on every fetch the region serves locally.
+    the service fee on every fetch the region serves locally.  ``load``
+    is the region's last gossiped :class:`RegionLoad` serving report
+    (zeroed until a serving tier's first placement review).
     """
 
     def __init__(self, region_id: str, clock: Optional[SimClock] = None,
@@ -113,6 +141,7 @@ class Region:
         self.edge_ids: List[str] = []
         self.operator = f"region:{region_id}"
         self.stats = RegionStats()
+        self.load = RegionLoad()
 
     def cache_blob(self, params, card) -> None:
         """Insert a cloud-fetched model into the region cache + shard.
@@ -332,6 +361,6 @@ def build_hierarchical_continuum(
 
 __all__ = [
     "EDGE_TO_REGION", "REGION_TO_CLOUD", "DEVICE_TO_EDGE",
-    "Region", "RegionStats", "RegionalHit", "RegionalTopology",
-    "build_hierarchical_continuum",
+    "Region", "RegionLoad", "RegionStats", "RegionalHit",
+    "RegionalTopology", "build_hierarchical_continuum",
 ]

@@ -638,11 +638,15 @@ def serving_microworld(plan: FaultPlan, parties: int = 16,
     floor (0.96) is satisfiable only by byzantine-inflated claims, so it
     forces cloud escalations whose replica installs are caught by
     verify-on-fetch — publishers slashed, waiting requests refunded; the
-    last wave concentrates on the genuinely-best models so now-unqueried
-    replicas age toward eviction.  Regional outages drop in-flight
-    queries with exact refunds.  All values are pure
-    Python/numpy — the trace is byte-stable and recordable as a golden
-    fixture.
+    last wave is a single-requester *spike* (tight spacing, one home
+    region) against deliberately tiny capacity limits, so the trace pins
+    overload behaviour too: SLA-tiered queue jumps, spillover to the
+    regions the hot-push replicated into, capacity refusals with exact
+    refunds once every region saturates, and the load-report gossip the
+    reviews publish — while the other models age toward eviction.
+    Regional outages drop in-flight queries with exact refunds.  All
+    values are pure Python/numpy — the trace is byte-stable and
+    recordable as a golden fixture.
     """
     from repro.core.continuum import OutcomeStatus
     from repro.core.incentives import IncentiveLedger
@@ -695,6 +699,8 @@ def serving_microworld(plan: FaultPlan, parties: int = 16,
     tier = ServingTier(cont, ServingConfig(
         placement_every_s=20.0, hot_threshold=6, decay_windows=2,
         max_wait_s=0.5, max_batch=4,
+        # tiny capacity so the spike wave exercises spillover + refusal
+        max_slots_per_key=1, max_queue_depth=2, tier_bypass_limit=2,
     ))
     counters = {"ok": 0, "miss": 0, "denied": 0, "failed": 0, "refused": 0}
 
@@ -713,17 +719,25 @@ def serving_microworld(plan: FaultPlan, parties: int = 16,
     # request waves start after the publish wave has fully landed
     t0 = 1.0 + 1.7 * parties + 30.0
     req_no = 0
-    floors = [0.1, 0.96, 0.1, 0.6]
+    # the spike wave's floor matches the earlier waves so it lands on the
+    # hot-pushed model — the one every region holds a replica of
+    floors = [0.1, 0.96, 0.6, 0.1]
     for w in range(waves):
         t_wave = t0 + w * wave_len_s
         floor = floors[w % len(floors)]
+        # last wave: one requester hammers its home region faster than its
+        # (tiny) per-replica queue drains — spillover, then refusals
+        spike = w == waves - 1
         for k in range(requests_per_wave):
-            pid = ids[(w * 7 + k * 3) % parties]
+            pid = ids[1] if spike else ids[(w * 7 + k * 3) % parties]
             tier.submit(PredictRequest(
                 request_id=f"r{req_no:04d}", requester=pid, task="serve",
-                prompt_tokens=4 + (k * 5) % 40,
+                # the spike stays in one bucket so one (model, bucket)
+                # queue takes the whole burst
+                prompt_tokens=4 if spike else 4 + (k * 5) % 40,
                 max_new_tokens=4 + (k % 3) * 4,
-                min_accuracy=floor, at=t_wave + 0.37 * k,
+                min_accuracy=floor, at=t_wave + (0.05 if spike else 0.37) * k,
+                tier=k % 3,
             ), completed)
             req_no += 1
 
@@ -736,6 +750,10 @@ def serving_microworld(plan: FaultPlan, parties: int = 16,
     assert counters["failed"] == rep.failed
     assert rep.served + rep.misses + rep.denied + rep.failed \
         + rep.refused == req_no
+    # the spike must actually overload: spillover engaged, and every
+    # spill either landed somewhere or refunded exactly
+    assert rep.spill_out > 0 and rep.spill_out == rep.spill_in
+    assert rep.refunds >= rep.refused_capacity
     return loop
 
 

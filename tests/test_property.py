@@ -407,3 +407,65 @@ def test_adamw_descends_quadratic(seed):
         upd, state = opt.update(g, state, params)
         params = apply_updates(params, upd)
     assert float(loss(params)) < l0 * 0.5
+
+
+# -- serving: conservation under tiered overload, refusals, and outages --------
+
+
+@given(
+    seed=st.integers(0, 2**16),
+    outage=st.floats(0.0, 0.7),
+    slot_len=st.floats(0.3, 3.0),
+    depth=st.integers(1, 3),
+    tiers=st.lists(st.integers(0, 4), min_size=4, max_size=32),
+)
+@settings(**SETTINGS)
+def test_serving_conserves_ledger_under_overload_and_outages(
+        seed, outage, slot_len, depth, tiers):
+    """`sum(balances) == minted` through any interleaving of SLA-tiered
+    serves, over-capacity spills/refusals, refunds, and region outages —
+    and every paid-then-dropped request carries its exact refund."""
+    from repro.core.continuum import OutcomeStatus
+    from repro.core.incentives import IncentiveLedger
+    from repro.runtime.faults import FaultPlan
+    from repro.runtime.serving import (PredictRequest, ServingConfig,
+                                       ServingTier)
+    from repro.runtime.topology import build_hierarchical_continuum
+
+    plan = FaultPlan(seed=seed, region_outage_prob=outage,
+                     region_slot_len_s=slot_len)
+    cont = build_hierarchical_continuum(2, 2, ledger=IncentiveLedger(),
+                                        faults=plan)
+    for i in range(4):
+        card = ModelCard(model_id=f"pub{i}/m", task="serve", arch="toy",
+                         owner=f"pub{i}", num_params=3,
+                         metrics={"accuracy": 0.5 + 0.1 * i, "per_class": {}})
+        cont.publish(f"pub{i}", {"w": np.ones(3, np.float32)}, card)
+    cfg = ServingConfig(max_queue_depth=depth, max_slots_per_key=1,
+                        max_wait_s=0.4, max_batch=2, placement_every_s=3.0,
+                        hot_threshold=4)
+    tier = ServingTier(cont, cfg)
+    led = cont.ledger
+    base = cont.clock.now()
+
+    def check(o, tier_level):
+        # a paid request that failed or was refused refunds exactly what
+        # its SLA tier paid; unpaid terminal outcomes carry no fee at all
+        if o.status in (OutcomeStatus.FAILED, OutcomeStatus.REFUSED) and o.fee:
+            k = max(0, min(tier_level, len(cfg.tier_fee_mult) - 1))
+            assert o.fee["refunded"] == pytest.approx(
+                led.serve_cost * cfg.tier_fee_mult[k])
+
+    for k, t in enumerate(tiers):
+        tier.submit(PredictRequest(
+            request_id=f"r{k:03d}", requester=f"pub{k % 4}", task="serve",
+            prompt_tokens=4 + (k % 5) * 30, max_new_tokens=4,
+            at=base + 0.15 * k, tier=t,
+        ), lambda o, t=t: check(o, t))
+    cont.loop.run_to_quiescence()
+    led.assert_conserved()
+    rep = tier.report()
+    assert rep.conserved
+    assert (rep.served + rep.misses + rep.denied + rep.failed
+            + rep.refused == len(tiers))
+    assert rep.spill_out == rep.spill_in

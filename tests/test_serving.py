@@ -46,7 +46,7 @@ def test_pick_bucket_smallest_fit_else_largest():
     assert pick_bucket((16, 32, 64), 9) == 16
     assert pick_bucket((16, 32, 64), 16) == 16
     assert pick_bucket((16, 32, 64), 17) == 32
-    assert pick_bucket((16, 32, 64), 500) == 64  # oversize pads to largest
+    assert pick_bucket((16, 32, 64), 500) == 64  # oversize truncates to largest
 
 
 def test_slot_queue_fifo_per_model_bucket():
@@ -177,7 +177,10 @@ def test_outage_refunds_conserve_ledger():
     outs = []
     reqs = [_req(f"r{k:03d}", ids[k % 8], at=0.2 * k, max_new_tokens=8)
             for k in range(60)]
-    rep = serve_requests(cont, reqs, on_complete=outs.append)
+    # a batching window longer than the outage slot guarantees some slots
+    # flush (paid) inside a bright window and land in a dark one
+    cfg = ServingConfig(max_wait_s=1.0, max_batch=16)
+    rep = serve_requests(cont, reqs, cfg=cfg, on_complete=outs.append)
     assert rep.outage_drops > 0 and rep.refunds > 0
     assert rep.served + rep.failed == rep.requests
     assert rep.conserved
@@ -220,6 +223,187 @@ def test_byzantine_replica_caught_before_serving():
     tier.submit(_req("r1", "bob", at=cont.clock.now() + 1.0), outs.append)
     cont.loop.run_to_quiescence()
     assert outs[1].status is OutcomeStatus.MISS
+
+
+# -- capacity, SLA tiers, spillover ------------------------------------------
+
+def test_slot_queue_tier_bypass_is_bounded():
+    """Higher tiers jump the queue, but any one item is overtaken at most
+    ``bypass_limit`` times — priority reorders, never starves."""
+    q = SlotQueue(buckets=(16,), max_batch=8)
+    q.add("m", 4, "a0", tier=0, bypass_limit=2)
+    q.add("m", 4, "a1", tier=0, bypass_limit=2)
+    q.add("m", 4, "h0", tier=2, bypass_limit=2)  # overtakes a1, a0
+    q.add("m", 4, "h1", tier=2, bypass_limit=2)  # overtakes a1, a0 again
+    q.add("m", 4, "h2", tier=2, bypass_limit=2)  # a1 exhausted: stays last
+    assert q.drain("m", 16) == ["h0", "h1", "a0", "a1", "h2"]
+
+
+def test_sla_tier_pays_fee_multiplier():
+    cont = build_hierarchical_continuum(1, 2, ledger=IncentiveLedger())
+    led = cont.ledger
+    cont.publish("bob", _params(), _card("bob"))
+    cont.publish("carol", _params(2), _card("carol", task="other"))
+    before = led.balance("carol")
+    outs = []
+    rep = serve_requests(cont, [_req("r0", "carol", tier=2)],
+                         on_complete=outs.append)
+    assert rep.served == 1
+    cost = led.serve_cost * 4.0  # default tier_fee_mult[2]
+    assert led.balance("carol") == pytest.approx(before - cost)
+    assert outs[0].fee["paid"] == cost
+    led.assert_conserved()
+
+
+def _capacity_world(regions=1):
+    """A tiny world with one served model and deliberately tight capacity."""
+    cont = build_hierarchical_continuum(regions, 2, ledger=IncentiveLedger())
+    cont.publish("bob", _params(), _card("bob"))
+    cfg = ServingConfig(max_queue_depth=1, max_slots_per_key=1,
+                        max_batch=8, max_wait_s=5.0, placement_every_s=500.0)
+    return cont, ServingTier(cont, cfg)
+
+
+def test_over_capacity_refused_with_exact_refund():
+    """With nowhere to spill, over-capacity requests get a clean REFUSED
+    carrying the exact refund — never an unbounded queue."""
+    cont, tier = _capacity_world(regions=1)
+    outs = []
+    for k in range(4):
+        tier.submit(_req(f"r{k}", "bob", at=1.0 + 0.001 * k), outs.append)
+    cont.loop.run_to_quiescence()
+    statuses = [o.status for o in outs]
+    assert statuses.count(OutcomeStatus.OK) == 1  # depth limit 1: first only
+    refused = [o for o in outs if o.status is OutcomeStatus.REFUSED]
+    assert len(refused) == 3
+    assert all(o.reason == "capacity" for o in refused)
+    assert all(o.fee["refunded"] == cont.ledger.serve_cost for o in refused)
+    rep = tier.report()
+    assert rep.refused_capacity == 3 and rep.refunds == 3
+    assert rep.conserved
+    cont.ledger.assert_conserved()
+
+
+def test_higher_tier_gets_more_queue_headroom():
+    """Tier k gets (1 + k) x the base depth limit before refusal."""
+    cont, tier = _capacity_world(regions=1)
+    outs = {}
+    for k, t in enumerate((0, 0, 1)):
+        tier.submit(_req(f"r{k}", "bob", at=1.0 + 0.001 * k, tier=t),
+                    lambda o, k=k: outs.__setitem__(k, o))
+    cont.loop.run_to_quiescence()
+    assert outs[0].status is OutcomeStatus.OK  # queued at depth 0
+    assert outs[1].status is OutcomeStatus.REFUSED  # tier 0: limit 1
+    assert outs[2].status is OutcomeStatus.OK  # tier 1: limit 2, admitted
+
+
+def _seed_replica(cont, server, model_id="bob/m"):
+    from repro.core.discovery import ModelQuery
+    best = cont.discovery.query(ModelQuery(task="serve"), top_k=1)[0]
+    stored = server.replicas.store_copy(*cont.discovery.fetch(best))
+    server.index.register(stored, server.replicas.vault_id)
+    assert model_id in server.replicas
+
+
+def test_spillover_routes_to_replica_in_other_region():
+    """An over-capacity request spills to another region holding a verified
+    replica; the serving region's operator earns the fee cut."""
+    cont, tier = _capacity_world(regions=2)
+    for sid in tier.servers:
+        _seed_replica(cont, tier.servers[sid])
+    led = cont.ledger
+    home = tier.server_for("bob").server_id
+    other = next(s for s in tier.servers if s != home)
+    before_other = led.balance(f"region:{other}")
+    outs = []
+    for k in range(2):
+        tier.submit(_req(f"r{k}", "bob", at=1.0 + 0.001 * k), outs.append)
+    cont.loop.run_to_quiescence()
+    assert [o.status for o in outs] == [OutcomeStatus.OK, OutcomeStatus.OK]
+    spilled = outs[1].payload
+    assert spilled.source == "spill" and spilled.region_id == other
+    rep = tier.report()
+    assert rep.spill_out == 1 and rep.spill_in == 1
+    assert rep.refused == 0
+    region_cut = led.serve_cost * led.service_fee * led.region_fee_share
+    assert led.balance(f"region:{other}") == pytest.approx(
+        before_other + region_cut)
+    assert rep.conserved
+
+
+def test_spill_target_saturated_during_hop_refunds_exactly():
+    """Two spills race to the same target; the loser finds it saturated on
+    arrival and is refused with the exact refund."""
+    cont, tier = _capacity_world(regions=2)
+    for sid in tier.servers:
+        _seed_replica(cont, tier.servers[sid])
+    outs = []
+    for k in range(3):  # 1 queues at home, 2 spill to the same target
+        tier.submit(_req(f"r{k}", "bob", at=1.0 + 0.001 * k), outs.append)
+    cont.loop.run_to_quiescence()
+    statuses = [o.status for o in outs]
+    assert statuses.count(OutcomeStatus.OK) == 2
+    (refused,) = [o for o in outs if o.status is OutcomeStatus.REFUSED]
+    assert refused.reason == "capacity"
+    assert refused.fee["refunded"] == cont.ledger.serve_cost
+    rep = tier.report()
+    assert rep.spill_out == 2 and rep.spill_in == 2
+    assert rep.refused_capacity == 1 and rep.refunds == 1
+    assert rep.conserved
+
+
+def test_load_reports_gossip_into_routing_table():
+    """Placement reviews publish every server's load report; the tier's
+    routing table and each Region.load see them."""
+    cont = build_hierarchical_continuum(2, 2, ledger=IncentiveLedger())
+    cont.publish("bob", _params(), _card("bob"))
+    tier = ServingTier(cont, ServingConfig(placement_every_s=2.0))
+    outs = []
+    for k in range(6):
+        tier.submit(_req(f"r{k}", "bob", at=1.0 + k), outs.append)
+    cont.loop.run_to_quiescence()
+    assert set(tier.load_reports) == set(tier.servers)
+    for rid, region in cont.topology.regions.items():
+        assert region.load.time > 0.0
+        assert region.load is tier.load_reports[rid]
+
+
+def test_oversize_prompt_truncated_and_counted():
+    """Prompts longer than the largest bucket truncate to it — counted in
+    ServerStats and surfaced through ServingReport.as_dict."""
+    cont = build_hierarchical_continuum(1, 2, ledger=IncentiveLedger())
+    cont.publish("bob", _params(), _card("bob"))
+    outs = []
+    rep = serve_requests(cont, [_req("r0", "bob", prompt_tokens=500,
+                                     max_new_tokens=8)],
+                         on_complete=outs.append)
+    assert rep.served == 1 and rep.truncated_prompts == 1
+    assert rep.as_dict()["truncated_prompts"] == 1
+    # served (and billed in bytes) at the truncated length, not 500
+    assert outs[0].payload.tokens == 128 + 8
+
+
+def test_serve_requests_arrivals_are_relative_to_call_time():
+    """Regression for the arrival-clumping footgun: synchronous publishes
+    advance the sim clock, so absolute `at` stamps chosen beforehand all
+    landed at `clock.now()`.  serve_requests re-bases arrivals relative to
+    the clock at call time, preserving the caller's spacing."""
+    cont = build_hierarchical_continuum(1, 2, ledger=IncentiveLedger())
+    for i in range(6):  # sync publishes: the clock has moved past 0
+        cont.publish(f"p{i}", _params(i), _card(f"p{i}", acc=0.5 + 0.05 * i))
+    t_call = cont.clock.now()
+    # spacing finer than the clock advance: the old absolute-time code
+    # would clump every `at < t_call` arrival onto t_call
+    gap = t_call / 8.0
+    assert gap > 0.0
+    reqs = [_req(f"r{k}", f"p{k % 6}", at=gap * k) for k in range(5)]
+    rep = serve_requests(cont, reqs)
+    assert rep.served == 5
+    arrivals = [e.time for e in cont.loop.log
+                if e.payload and e.payload.get("op") == "serve_request"]
+    assert arrivals[0] == pytest.approx(t_call)
+    gaps = [b - a for a, b in zip(arrivals, arrivals[1:])]
+    assert all(g == pytest.approx(gap) for g in gaps)  # spacing preserved
 
 
 # -- placement ---------------------------------------------------------------
@@ -359,5 +543,6 @@ def test_golden_serving_trace_replays_byte_identical():
            for line in rec.trace.splitlines()
            if json.loads(line)["p"] is not None}
     assert {"serve_request", "slot", "slot_deadline", "serve_replica",
-            "placement_review", "publish", "card"} <= ops
+            "placement_review", "load_report", "serve_spill",
+            "publish", "card"} <= ops
     assert_replay(rec)

@@ -400,3 +400,91 @@ def test_cohort_count_mismatch_is_rejected():
     snap = snapshot_world(cont)
     with pytest.raises(SnapshotError, match="cohort"):
         restore_world(snap, cohorts=[object()])
+
+
+# -- serving tier durability ---------------------------------------------------
+
+
+def _serving_world():
+    """A deterministic 2-region serving world with traffic in flight.
+
+    Publishes are synchronous (no pending closures) and every serving
+    event carries a durable payload, so the world is snapshottable at any
+    instant — including mid-overload."""
+    from repro.runtime.serving import (PredictRequest, ServingConfig,
+                                       ServingTier)
+
+    cont = build_hierarchical_continuum(2, 2, ledger=IncentiveLedger(),
+                                        faults=FaultPlan(seed=7))
+    for i in range(4):
+        _publish(cont, f"pub{i}", acc=0.6 + 0.05 * i)
+    tier = ServingTier(cont, ServingConfig(
+        placement_every_s=5.0, hot_threshold=3, decay_windows=3,
+        max_wait_s=0.5, max_batch=2, max_queue_depth=2,
+        max_slots_per_key=1))
+    for k in range(24):
+        tier.submit(PredictRequest(
+            request_id=f"r{k:03d}", requester=f"pub{k % 4}", task="t",
+            prompt_tokens=4 + (k % 3) * 8, max_new_tokens=4,
+            at=1.0 + 0.3 * k, tier=k % 3))
+    return cont, tier
+
+
+def test_serving_snapshot_midflight_resumes_byte_identically():
+    """Snapshot a serving world mid-traffic (queued requests, armed slot
+    timers, pending reviews), restore, run dry: pre + post must equal the
+    uninterrupted run's trace byte for byte."""
+    ref, _tier = _serving_world()
+    ref.loop.run_to_quiescence()
+    ref_trace = serialize_trace(ref.loop.log)
+
+    cont, _tier = _serving_world()
+    cont.loop.run_until(4.0)  # mid-wave: the request plane is busy
+    frontier = cont.loop.frontier()
+    assert any(p.get("durable") == "serving" for _t, _s, _l, p in frontier)
+    pre = serialize_trace(cont.loop.log)
+    snap = snapshot_world(cont)
+    del cont
+
+    back, _ = restore_world(snap)
+    assert back.serving is not None
+    back.loop.run_to_quiescence()
+    back.ledger.assert_conserved()
+    assert pre + serialize_trace(back.loop.log) == ref_trace
+
+
+def test_serving_state_restores_identically():
+    import dataclasses as dc
+
+    cont, tier = _serving_world()
+    cont.loop.run_until(4.0)
+    back, _ = restore_world(snapshot_world(cont))
+    bt = back.serving
+    assert bt.requests == tier.requests
+    assert bt._latencies == tier._latencies
+    assert (bt._review_armed, bt._activity) == (tier._review_armed,
+                                                tier._activity)
+    for sid, server in tier.servers.items():
+        bs = bt.servers[sid]
+        assert dc.asdict(bs.stats) == dc.asdict(server.stats)
+        assert bs.window_hits == server.window_hits
+        assert bs.queue.pending() == server.queue.pending()
+        assert sorted(bs._timers) == sorted(server._timers)
+        assert bs._inflight == server._inflight
+        assert sorted(c.model_id for c in bs.replicas.cards()) == \
+            sorted(c.model_id for c in server.replicas.cards())
+
+
+def test_serving_restore_rebinds_on_complete():
+    """In-flight requests lost their per-request callbacks with the dead
+    process; after restore they report through serving_on_complete."""
+    from repro.core.continuum import Outcome
+
+    cont, _tier = _serving_world()
+    cont.loop.run_until(4.0)
+    snap = snapshot_world(cont)
+    outs = []
+    back, _ = restore_world(snap, serving_on_complete=outs.append)
+    back.loop.run_to_quiescence()
+    assert outs and all(isinstance(o, Outcome) for o in outs)
+    assert any(o.ok for o in outs)
