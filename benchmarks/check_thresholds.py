@@ -15,6 +15,12 @@ benchmark that stops reporting a number is a regression, not a pass.
 on demand (e.g. the 1M-party ``population_scale.py --million`` leg):
 when the key is present it is checked exactly like ``max``/``min``, and
 when absent it is reported as skipped rather than failed.
+
+The ``sections`` list names every top-level section the results file
+must contain.  Without it, a benchmark that stops writing its section
+(a dropped ``--json`` flag, a renamed section) would only fail if some
+``max``/``min`` entry happened to reference it — the section check makes
+the absence itself loud.
 """
 from __future__ import annotations
 
@@ -43,6 +49,11 @@ def main(argv=None):
 
     factor = float(spec.get("regression_factor", 2.0))
     failures = []
+    for sec in spec.get("sections", []):
+        if sec not in results:
+            failures.append(f"section '{sec}': missing from results")
+        else:
+            print(f"ok  section '{sec}' present")
     for group, optional in (("max", False), ("optional_max", True)):
         for key, limit in sorted(spec.get(group, {}).items()):
             got = lookup(results, key)

@@ -1,0 +1,213 @@
+"""Drift benchmark: exchange vs isolated training on real federated shards.
+
+The paper's headline claim — a model-centric exchange beats isolated edge
+training under heterogeneous decentralized data — measured in the regime
+the continuum literature says actually matters: non-IID shards *and*
+non-stationary tasks.  Both arms train the same heterogeneous LR/MLP
+cohorts on the same Dirichlet-skewed per-party shards of a synthetic
+federated LR task (:func:`repro.runtime.scenario.build_federated_cohorts`),
+and both suffer the same seeded concept drift (a label-shift permutation
+applied in place to training shards and the shared eval set) at the same
+cycle boundary:
+
+* **exchange arm** — incentive-gated MDD cycles on the event-driven
+  runtime (:func:`repro.runtime.exchange.run_exchange`) with a
+  :class:`~repro.runtime.scenario.ScenarioEngine` drift event scheduled
+  on the loop: at fire time the world's labels shift, every indexed card
+  of the task is staleness-re-ranked in discovery, and owners whose
+  decayed accuracy falls below the demotion threshold stop minting;
+* **isolated arm** — the same cohorts (rebuilt from the same seed) train
+  alone for the same number of cycles/epochs with no discovery, no
+  distillation, no market (:func:`~repro.runtime.scenario.isolated_baseline_accuracy`).
+
+The headline number is ``exchange_margin``: final-cycle mean accuracy of
+the exchange arm minus the isolated baseline, post-drift.  ``--json``
+merges the section into a results file for the CI drift-smoke step
+(``check_thresholds.py`` gates the margin, conservation, and the
+staleness/demotion counters).
+
+  PYTHONPATH=src python benchmarks/drift_scale.py [--parties 10000]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+try:
+    from benchmarks.bench_json import merge_json_section
+except ImportError:  # run as a script: benchmarks/ itself is on sys.path
+    from bench_json import merge_json_section
+
+from repro.core.continuum import Continuum
+from repro.core.incentives import IncentiveLedger
+from repro.data.federated_datasets import make_lr_synthetic
+from repro.runtime.exchange import ExchangeConfig, run_exchange
+from repro.runtime.scenario import (ScenarioEngine, apply_concept_drift,
+                                    build_federated_cohorts,
+                                    isolated_baseline_accuracy,
+                                    label_shift_map)
+
+
+def _make_dataset(seed):
+    """Pooled non-IID source task both arms shard identically."""
+    return make_lr_synthetic(num_clients=100, num_features=24,
+                             num_classes=8, alpha=1.0, beta=1.0,
+                             seed=seed, min_samples=50, max_samples=200)
+
+
+def _cycle_means(stats, cycles):
+    """Online-weighted mean accuracy per global cycle across cohorts."""
+    acc = np.zeros(cycles)
+    weight = np.zeros(cycles)
+    for s in stats:
+        acc[s.cycle] += s.mean_acc * s.online
+        weight[s.cycle] += s.online
+    return acc / np.maximum(weight, 1)
+
+
+def bench_drift(n_parties=10000, cycles=6, edges=16, seed=0,
+                alpha=0.3, mlp_frac=0.2, severity=0.5, demote_below=0.4):
+    drift_cycle = cycles // 2
+    dataset = _make_dataset(seed)
+    cfg = ExchangeConfig(cycles=cycles, distill_epochs=1)
+    mapping = label_shift_map(dataset.num_classes, severity,
+                              seed=seed + 100)
+
+    # -- exchange arm: drift scheduled as a durable event on the loop ------
+    cohorts, ex, ey = build_federated_cohorts(
+        dataset, n_parties, alpha=alpha, mlp_frac=mlp_frac, seed=seed)
+    ledger = IncentiveLedger()
+    cont = Continuum(ledger=ledger)
+    for e in range(edges):
+        cont.add_edge_server(f"edge{e:03d}")
+
+    def on_drift(payload):
+        apply_concept_drift(cohorts, ey, mapping)
+
+    engine = ScenarioEngine(cont, on_drift=on_drift)
+    # fire just after the drift cycle's train+eval (cycles begin at
+    # c * cycle_len_s): the drift cycle's cards carry pre-drift claims,
+    # the staleness sweep re-ranks them, and every later measurement —
+    # both arms — is on the shifted labels
+    engine.schedule_drift(dataset.name, severity=severity,
+                          delay=drift_cycle * cfg.cycle_len_s + 1.0,
+                          seed=seed + 100, demote_below=demote_below)
+
+    wall0 = time.perf_counter()
+    report = run_exchange(cohorts, ex, ey, cfg=cfg, continuum=cont)
+    wall_exchange = time.perf_counter() - wall0
+    exchange_by_cycle = _cycle_means(report.cycles, cycles)
+
+    # -- isolated arm: same cohorts, same drift schedule, no market --------
+    iso_cohorts, iso_x, iso_y = build_federated_cohorts(
+        dataset, n_parties, alpha=alpha, mlp_frac=mlp_frac, seed=seed)
+    wall0 = time.perf_counter()
+    iso_by_cycle = []
+    for c in range(cycles):
+        accs = isolated_baseline_accuracy(iso_cohorts, iso_x, iso_y,
+                                          cycles=1,
+                                          local_epochs=cfg.local_epochs)
+        iso_by_cycle.append(float(accs[0].mean()))
+        if c == drift_cycle:  # same boundary the exchange drift fires at
+            apply_concept_drift(iso_cohorts, iso_y, mapping)
+    wall_isolated = time.perf_counter() - wall0
+
+    exchange_acc = float(exchange_by_cycle[-1])
+    isolated_acc = float(iso_by_cycle[-1])
+    return {
+        "wall_s": wall_exchange + wall_isolated,
+        "wall_exchange_s": wall_exchange,
+        "wall_isolated_s": wall_isolated,
+        "parties": n_parties,
+        "cycles": cycles,
+        "drift_cycle": drift_cycle,
+        "severity": severity,
+        "exchange_by_cycle": [float(a) for a in exchange_by_cycle],
+        "isolated_by_cycle": iso_by_cycle,
+        "exchange_acc": exchange_acc,
+        "isolated_acc": isolated_acc,
+        "exchange_margin": exchange_acc - isolated_acc,
+        "fetches": report.total_fetches,
+        "cross_arch": report.total_cross_arch,
+        "cards": report.cards,
+        "events": report.events,
+        "drift_events": engine.stats["drifts"],
+        "restaled": engine.stats["restaled"],
+        "demotions": engine.stats["demoted"],
+        "demoted_now": len(ledger.demoted),
+        "conserved": 1,  # run_exchange asserts conservation before returning
+        "ledger": report.ledger,
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--parties", type=int, default=10000)
+    ap.add_argument("--cycles", type=int, default=6)
+    ap.add_argument("--edges", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--alpha", type=float, default=0.3,
+                    help="Dirichlet concentration for the party shards")
+    ap.add_argument("--mlp-frac", type=float, default=0.2)
+    ap.add_argument("--severity", type=float, default=0.5,
+                    help="drift severity: fraction of classes permuted")
+    ap.add_argument("--json", type=str, default=None,
+                    help="merge headline numbers into this JSON file")
+    args = ap.parse_args(argv)
+    if args.parties < 2 or args.cycles < 2 or args.edges < 1:
+        ap.error("--parties and --cycles must be >= 2, --edges >= 1")
+    if not 0.0 <= args.mlp_frac <= 1.0:
+        ap.error("--mlp-frac must be in [0, 1]")
+    if not 0.0 <= args.severity <= 1.0:
+        ap.error("--severity must be in [0, 1]")
+
+    res = bench_drift(args.parties, args.cycles, args.edges, args.seed,
+                      args.alpha, args.mlp_frac, args.severity)
+    print(f"drift_scale/run,{res['wall_s']*1e6:.0f},"
+          f"parties={res['parties']};cycles={res['cycles']};"
+          f"drift_cycle={res['drift_cycle']};severity={res['severity']};"
+          f"fetches={res['fetches']};cross_arch={res['cross_arch']};"
+          f"restaled={res['restaled']};demotions={res['demotions']}",
+          flush=True)
+    for c in range(res["cycles"]):
+        tag = " <- drift" if c == res["drift_cycle"] else ""
+        print(f"drift_scale/cycle{c},0,"
+              f"exchange_acc={res['exchange_by_cycle'][c]:.3f};"
+              f"isolated_acc={res['isolated_by_cycle'][c]:.3f}{tag}",
+              flush=True)
+    print(f"drift_scale/margin,0,"
+          f"exchange_acc={res['exchange_acc']:.3f};"
+          f"isolated_acc={res['isolated_acc']:.3f};"
+          f"margin={res['exchange_margin']:.3f}")
+    led = res["ledger"]
+    print(f"drift_scale/credits,0,minted={led.get('minted', 0):.1f};"
+          f"demoted={res['demoted_now']};conserved={res['conserved']}")
+
+    ok = res["exchange_margin"] > 0
+    print(f"# exchange {'beats' if ok else 'DOES NOT BEAT'} isolated "
+          f"post-drift by {res['exchange_margin']:+.3f} "
+          f"({res['exchange_acc']:.3f} vs {res['isolated_acc']:.3f})")
+
+    if args.json:
+        merge_json_section(args.json, "drift_scale", {
+            "wall_s": res["wall_s"],
+            "parties": res["parties"],
+            "cycles": res["cycles"],
+            "drift_cycle": res["drift_cycle"],
+            "severity": res["severity"],
+            "exchange_acc": res["exchange_acc"],
+            "isolated_acc": res["isolated_acc"],
+            "exchange_margin": res["exchange_margin"],
+            "fetches": res["fetches"],
+            "cross_arch": res["cross_arch"],
+            "drift_events": res["drift_events"],
+            "restaled": res["restaled"],
+            "demotions": res["demotions"],
+            "conserved": res["conserved"],
+        })
+
+
+if __name__ == "__main__":
+    main()

@@ -10,6 +10,7 @@ output is both human-skimmable and machine-parsable.
   continuum_scale — event-driven runtime: 10k parties, sublinear discovery
   exchange_scale  — incentive-gated model-exchange economy, hetero cohorts
   chaos_scale     — exchange economy under churn/link-loss/byzantine faults
+  drift_scale     — exchange vs isolated on non-IID shards under drift
   hierarchy_scale — edge→region→cloud tiering: cache hit-rate + egress
   serving_scale   — request-driven serving tier: qps + p50/p99 + placement
   serving_overload— 4x regional spike: spillover + SLA refusals + restore
@@ -107,6 +108,17 @@ def run_chaos_scale():
     cmain(_json_args())
 
 
+def run_drift_scale():
+    """Exchange vs isolated training on real federated shards under drift.
+
+    The section runs at 2000 parties to keep the orchestrator sweep
+    short; the standalone CLI defaults to the 10k-party headline scale.
+    """
+    from benchmarks.drift_scale import main as dmain
+
+    dmain(["--parties", "2000"] + _json_args())
+
+
 def run_hierarchy_scale():
     """Flat vs hierarchical topology: cache hit-rate + cloud-egress cut.
 
@@ -188,7 +200,7 @@ def main():
         argv = argv[:i] + argv[i + 2:]
     which = set(argv) or {"fig3", "figs456", "kernels", "traffic",
                           "continuum_scale", "exchange_scale",
-                          "chaos_scale", "hierarchy_scale",
+                          "chaos_scale", "drift_scale", "hierarchy_scale",
                           "serving_scale", "serving_overload",
                           "durability_scale", "population_scale",
                           "roofline"}
@@ -205,6 +217,9 @@ def main():
     if "chaos_scale" in which:
         section("Chaos continuum (churn, link faults, byzantine publishers)")
         run_chaos_scale()
+    if "drift_scale" in which:
+        section("Drift continuum (non-IID shards, concept drift, staleness)")
+        run_drift_scale()
     if "hierarchy_scale" in which:
         section("Hierarchical topology (regions, caches, egress)")
         run_hierarchy_scale()

@@ -310,6 +310,13 @@ class Continuum:
         # the attached request plane (a ServingTier registers itself here
         # so snapshot_world can serialize in-flight serving state)
         self.serving = None
+        # the attached scenario-dynamics engine (a ScenarioEngine registers
+        # itself here so restored scenario events find their handler)
+        self.scenario = None
+        # task lifecycle: tasks retired from the market by the scenario
+        # layer, plus a counter for publishes refused into them
+        self.retired_tasks: set = set()
+        self.task_refusals = 0
         # cards already slashed, by (model_id, version): concurrent in-flight
         # fetches of one fraudulent card must not slash the publisher twice
         self._frauded: set = set()
@@ -418,6 +425,21 @@ class Continuum:
                 label=f"publish-retired {card.model_id}",
                 payload={"op": "publish_retired", "party": party_id,
                          "model": card.model_id},
+            )
+            return card
+        if card.task in self.retired_tasks:
+            # the task left the market (scenario retirement): nothing is
+            # stored and nothing mints — the publisher learns via REFUSED
+            self.task_refusals += 1
+
+            def publish_task_refused(now: float):
+                emit(OutcomeStatus.REFUSED, now, reason="task_retired")
+
+            self.loop.call_after(
+                0.0, publish_task_refused,
+                label=f"publish-task-retired {card.model_id}",
+                payload={"op": "publish_task_retired", "party": party_id,
+                         "model": card.model_id, "task": card.task},
             )
             return card
         edge = self.nearest_edge(party_id)

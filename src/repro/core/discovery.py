@@ -69,6 +69,10 @@ class DiscoveryService:
         self._vaults: Dict[str, ModelVault] = {}
         self._clock = clock if clock is not None else SimClock()
         self.stats = {"queries": 0, "hits": 0, "fetches": 0, "scanned": 0}
+        # model_id -> accumulated staleness penalty, subtracted from every
+        # query score.  Penalties only ever *lower* a score, so the top-k
+        # pruning bound (2*acc + bonus_cap) stays a valid upper bound.
+        self._stale: Dict[str, float] = {}
 
     def __len__(self) -> int:
         return len(self._cards)
@@ -108,6 +112,9 @@ class DiscoveryService:
                 old_bucket.pop(i)
         self._cards[card.model_id] = (card, vault_id)
         bisect.insort(self._by_task.setdefault(card.task, []), self._acc_key(card))
+        # a (re-)listed card is fresh: any staleness penalty is cleared
+        # (restale() re-applies its penalty after registering)
+        self._stale.pop(card.model_id, None)
 
     def deregister(self, model_id: str) -> bool:
         """Drop a card from the registry (e.g. caught advertising inflated
@@ -115,12 +122,51 @@ class DiscoveryService:
         prev = self._cards.pop(model_id, None)
         if prev is None:
             return False
+        self._stale.pop(model_id, None)
         bucket = self._by_task[prev[0].task]
         key = self._acc_key(prev[0])
         i = bisect.bisect_left(bucket, key)
         if i < len(bucket) and bucket[i] == key:
             bucket.pop(i)
         return True
+
+    def restale(self, model_id: str, accuracy: float,
+                staleness: float = 0.0) -> Optional[ModelCard]:
+        """Re-rank a card against a drifted world: honest accuracy + penalty.
+
+        Concept drift makes a card's *claimed* accuracy stale; the scenario
+        layer re-measures it on the current data and calls this with the
+        new measurement.  The card re-registers under the re-measured
+        accuracy (so the accuracy-sorted bucket — and the ``min_accuracy``
+        early-exit — stay honest) and ``staleness`` accumulates as a score
+        penalty that keeps demoting the card in ranking even against
+        equally-accurate fresh cards.  Returns the re-indexed card, or
+        ``None`` if the model was not listed.
+        """
+        prev = self._cards.get(model_id)
+        if prev is None:
+            return None
+        card, vault_id = prev
+        metrics = dict(card.metrics)
+        metrics["accuracy"] = float(accuracy)
+        restaled = dataclasses.replace(card, metrics=metrics)
+        prior = self._stale.get(model_id, 0.0)  # register() clears it
+        self.register(restaled, vault_id)
+        if staleness:
+            self._stale[model_id] = prior + float(staleness)
+        return restaled
+
+    def deregister_task(self, task: str) -> List[str]:
+        """Drop every card listed under ``task`` (task retirement).
+
+        A retired task leaves the market: its whole index bucket empties
+        in one sweep.  Returns the model ids dropped, sorted.
+        """
+        doomed = sorted(mid for _neg, mid in self._by_task.get(task, ()))
+        for mid in doomed:
+            self.deregister(mid)
+        self._by_task.pop(task, None)
+        return doomed
 
     def deregister_owner(self, owner: str) -> List[str]:
         """Drop every card published by ``owner`` (party retirement).
@@ -205,6 +251,9 @@ class DiscoveryService:
         score += _FRESHNESS_CAP * (1.0 / (1.0 + age / 86400))
         # prefer smaller models at equal quality (cheaper to transfer/distill)
         score -= 1e-9 * card.num_params
+        # accumulated drift staleness (see restale): penalty-only, so the
+        # query pruning bounds above remain valid upper bounds
+        score -= self._stale.get(card.model_id, 0.0)
         return score
 
     def query(self, q: ModelQuery, top_k: int = 3) -> List[DiscoveryResult]:

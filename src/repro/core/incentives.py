@@ -94,6 +94,10 @@ class IncentiveLedger:
         self.serve_cost = serve_cost
         self.minted = 0.0  # all credits ever created (stipends + rewards)
         self.flagged: Set[str] = set()  # caught byzantine publishers
+        # staleness-demoted publishers: honest parties whose models decayed
+        # below the drift threshold — they keep their earnings (no slash,
+        # no flag) but stop minting until they publish is re-enabled
+        self.demoted: Set[str] = set()
         # operator accounts (cloud + region shards): never stipended
         self.operators: Set[str] = {operator}
         self._acct(operator)  # operator starts at zero, no stipend
@@ -129,7 +133,7 @@ class IncentiveLedger:
         """
         acct = self._acct(party)
         acct.published += 1
-        if party in self.flagged:
+        if party in self.flagged or party in self.demoted:
             return 0.0
         reward = self.publish_reward + self.quality_bonus * max(accuracy, 0.0)
         acct.balance += reward
@@ -293,6 +297,23 @@ class IncentiveLedger:
         self.flagged.add(publisher)
         return slashed
 
+    def demote(self, party: str) -> None:
+        """Gate a publisher's minting after its models went stale.
+
+        Unlike :meth:`on_fraud` nothing is burned or flagged — the party
+        was honest when it published; the world drifted underneath it.
+        Its balance stays, but further publishes mint nothing until
+        :meth:`promote` re-enables it (a fresh model that re-measures well
+        earns its minting back).  No balance moves, so conservation is
+        untouched.
+        """
+        self._acct(party)
+        self.demoted.add(party)
+
+    def promote(self, party: str) -> None:
+        """Lift a staleness demotion (the party re-published fresh models)."""
+        self.demoted.discard(party)
+
     def on_retire(self, party: str, beneficiary: str) -> float:
         """Escrow a retiring account's entire balance to ``beneficiary``.
 
@@ -354,6 +375,7 @@ class IncentiveLedger:
             "refunds": sum(a.refunds for a in self.accounts.values()),
             "frauds": sum(a.frauds for a in self.accounts.values()),
             "flagged": len(self.flagged),
+            "demoted": len(self.demoted),
         }
         served = sum(a.queries_served for a in self.accounts.values())
         if served:

@@ -575,6 +575,32 @@ class PartyPopulation:
         )
         return float(jnp.mean(loss))
 
+    def remap_labels(self, mapping, parties: Optional[Sequence[int]] = None
+                     ) -> int:
+        """Apply a concept-drift label permutation to the training data.
+
+        ``mapping`` is an int array of length ``num_classes``: every label
+        ``c`` in the affected parties' training sets becomes
+        ``mapping[c]`` in place (the drifted world relabels what the data
+        *means*; inputs are untouched).  ``parties`` limits the shift to a
+        subset of party indices (per-region drift); ``None`` drifts the
+        whole cohort, pad clones included, so padded rows keep training
+        on the same distribution as the party they clone.  The
+        device-resident label copy is refreshed, so the next fused cycle
+        trains on the drifted labels.  Returns the number of drifted
+        parties.
+        """
+        mapping = np.asarray(mapping, dtype=self.y.dtype)
+        if parties is None:
+            self.y = mapping[self.y]
+            drifted = self.num_parties
+        else:
+            idx = np.asarray(list(parties), dtype=np.int64)
+            self.y[idx] = mapping[self.y[idx]]
+            drifted = int(idx.size)
+        self._jy = self._put(jnp.asarray(self.y))
+        return drifted
+
     def evaluate(self, x_eval, y_eval) -> np.ndarray:
         """Per-party accuracy on a shared eval set; one fused dispatch.
 

@@ -1,0 +1,340 @@
+"""Scenario dynamics: concept drift, task lifecycle, and model staleness.
+
+Every benchmark before this layer ran static tasks on synthetic logits.
+This module makes the non-stationary, non-IID regime — the one the paper's
+exchange-beats-isolated claim is actually about — a first-class, seeded,
+replayable part of the simulation:
+
+* **real federated data**: :func:`federated_party_shards` draws per-party
+  training shards from a :class:`~repro.data.federated_datasets.FederatedDataset`
+  via Dirichlet label-skew partitioning
+  (:func:`~repro.data.partition.dirichlet_partition`), and
+  :func:`build_federated_cohorts` wraps them into heterogeneous LR/MLP
+  :class:`~repro.runtime.population.PartyPopulation` cohorts ready for
+  :func:`~repro.runtime.exchange.run_exchange`;
+* **concept drift**: :func:`label_shift_map` builds a seeded label
+  permutation and :func:`apply_concept_drift` applies it *in place* to
+  cohort training data and the shared eval set — the world's labels
+  change meaning mid-run;
+* **scenario events**: :class:`ScenarioEngine` schedules drift, task
+  retirement, and task arrival as *durable* events on the shared
+  :class:`~repro.runtime.loop.EventLoop` (payload-only, like membership
+  events), so a world snapshotted with scenario events pending on the
+  frontier restores and resumes byte-identically;
+* **staleness**: when drift fires, every indexed card of the drifted task
+  is re-measured (or decay-modelled) and re-ranked through
+  :meth:`~repro.core.discovery.DiscoveryService.restale` — stale cards
+  sink in discovery rank — and owners whose models fell below the
+  event's ``demote_below`` threshold stop minting publish rewards
+  (:meth:`~repro.core.incentives.IncentiveLedger.demote`; no burn, no
+  flag, conservation untouched).
+
+All scenario decisions are pure functions of (payload, world state): no
+wall clock, no mutable RNG in handlers — the drift microworld's golden
+trace (``tests/golden/drift_microworld.json``) replays byte-for-byte.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+class ScenarioEngine:
+    """Schedules + executes durable scenario events on a continuum.
+
+    Registers itself as ``cont.scenario`` (mirroring the serving tier) so
+    :func:`~repro.runtime.snapshot.restore_world` can re-bind restored
+    scenario frontier events to :meth:`handle`.  ``on_drift`` is an
+    optional callback ``(payload) -> None`` fired before re-ranking: the
+    benchmark uses it to mutate cohort training labels and the shared
+    eval set (closures do not survive a snapshot — re-bind it after
+    restore, exactly like the continuum ``verifier``).  ``remeasure`` is
+    an optional ``(card) -> accuracy | None`` hook; when absent (or
+    returning ``None``) a drifted card's new accuracy is modelled as
+    ``old_accuracy * (1 - severity)``.
+    """
+
+    def __init__(self, cont, on_drift: Optional[Callable] = None,
+                 remeasure: Optional[Callable] = None):
+        self.cont = cont
+        self.on_drift = on_drift
+        self.remeasure = remeasure
+        self.stats: Dict[str, int] = {
+            "drifts": 0, "restaled": 0, "demoted": 0,
+            "retired_tasks": 0, "arrived_tasks": 0,
+        }
+        cont.scenario = self
+
+    # -- scheduling ----------------------------------------------------------
+    def _schedule(self, op: str, fields: Dict, delay: float,
+                  label: str) -> Dict:
+        """Schedule one scenario event with a durable payload."""
+        payload = {"op": op, "durable": "scenario", **fields}
+        self.cont.loop.call_after(
+            delay, lambda now: self.handle(payload),
+            label=label, payload=payload,
+        )
+        return payload
+
+    def schedule_drift(self, task: str, *, severity: float,
+                       delay: float = 0.0, seed: int = 0,
+                       demote_below: Optional[float] = None) -> Dict:
+        """Schedule a concept-drift event for ``task``.
+
+        At fire time the ``on_drift`` hook (if any) mutates the world's
+        data, then every indexed card of the task is re-measured and
+        re-ranked with a ``severity`` staleness penalty; owners whose
+        re-measured accuracy falls below ``demote_below`` stop minting.
+        ``seed`` parameterizes the drift's label permutation — it rides
+        the payload so a restored event drifts identically.
+        """
+        fields: Dict = {"task": task, "severity": float(severity),
+                        "seed": int(seed)}
+        if demote_below is not None:
+            fields["demote_below"] = float(demote_below)
+        return self._schedule("drift", fields, delay, f"drift {task}")
+
+    def schedule_task_retirement(self, task: str,
+                                 delay: float = 0.0) -> Dict:
+        """Schedule ``task``'s retirement from the market.
+
+        At fire time every card listed under the task leaves the cloud
+        index and every region shard, and future publishes into the task
+        are refused (``Continuum.task_refusals``) without minting.
+        """
+        return self._schedule("retire_task", {"task": task}, delay,
+                              f"retire-task {task}")
+
+    def schedule_task_arrival(self, task: str, delay: float = 0.0) -> Dict:
+        """Schedule ``task``'s (re-)arrival: publishes into it are allowed.
+
+        Arrival is pure gating — the market learns about the task when
+        the first publish lands.  Re-arrival of a retired task re-opens
+        it (a new season of the same task).
+        """
+        return self._schedule("arrive_task", {"task": task}, delay,
+                              f"arrive-task {task}")
+
+    # -- execution (also the restore path) -----------------------------------
+    def handle(self, payload: Dict) -> None:
+        """Execute one durable scenario payload.
+
+        Pure function of the payload plus current world state, so a
+        restored frontier event has exactly the effect the pre-snapshot
+        schedule would have had.
+        """
+        op = payload["op"]
+        if op == "drift":
+            self._apply_drift(payload)
+        elif op == "retire_task":
+            self._apply_retire_task(payload)
+        elif op == "arrive_task":
+            self._apply_arrive_task(payload)
+        else:
+            raise ValueError(f"unknown scenario op {op!r}")
+
+    def _new_accuracy(self, card, decay: float) -> float:
+        """A drifted card's accuracy on the current data (hook or model)."""
+        if self.remeasure is not None:
+            measured = self.remeasure(card)
+            if measured is not None:
+                return float(measured)
+        return float(card.metrics.get("accuracy", 0.0)) * decay
+
+    def _apply_drift(self, payload: Dict) -> None:
+        cont = self.cont
+        self.stats["drifts"] += 1
+        if self.on_drift is not None:
+            self.on_drift(payload)
+            # the eval data changed meaning: memoized verify-on-fetch
+            # measurements are stale — reassigning the verifier clears them
+            cont.verifier = cont.verifier
+        task = payload["task"]
+        severity = float(payload["severity"])
+        demote_below = payload.get("demote_below")
+        decay = 1.0 - severity
+        stale_owners = set()
+        # deterministic sweep: entries() is model-id sorted, and restale
+        # replaces in place, so iterating the materialized list is safe
+        for card, _vid in cont.discovery.entries():
+            if card.task != task:
+                continue
+            new_acc = self._new_accuracy(card, decay)
+            cont.discovery.restale(card.model_id, new_acc, severity)
+            self.stats["restaled"] += 1
+            if demote_below is not None and new_acc < demote_below:
+                stale_owners.add(card.owner)
+        if cont.topology is not None:
+            # region shards rank independently: restale their copies too
+            for rid in sorted(cont.topology.regions):
+                shard = cont.topology.regions[rid].shard
+                for card, _vid in shard.entries():
+                    if card.task != task:
+                        continue
+                    shard.restale(card.model_id,
+                                  self._new_accuracy(card, decay), severity)
+        if cont.ledger is not None:
+            for owner in sorted(stale_owners):
+                if owner not in cont.ledger.demoted:
+                    cont.ledger.demote(owner)
+                    self.stats["demoted"] += 1
+
+    def _apply_retire_task(self, payload: Dict) -> None:
+        cont = self.cont
+        task = payload["task"]
+        self.stats["retired_tasks"] += 1
+        cont.retired_tasks.add(task)
+        cont.discovery.deregister_task(task)
+        if cont.topology is not None:
+            for rid in sorted(cont.topology.regions):
+                cont.topology.regions[rid].shard.deregister_task(task)
+
+    def _apply_arrive_task(self, payload: Dict) -> None:
+        self.stats["arrived_tasks"] += 1
+        self.cont.retired_tasks.discard(payload["task"])
+
+
+# -- real federated data -> exchange cohorts ----------------------------------
+
+def federated_party_shards(dataset, n_parties: int, *, alpha: float = 0.5,
+                           samples_per_party: int = 64,
+                           seed: int = 0) -> Tuple[np.ndarray, np.ndarray]:
+    """Rectangular per-party training shards with Dirichlet label skew.
+
+    Pools every client's training split of ``dataset`` (a
+    :class:`~repro.data.federated_datasets.FederatedDataset`), partitions
+    the pool over ``n_parties`` with
+    :func:`~repro.data.partition.dirichlet_partition` (smaller ``alpha``
+    = more skew), and resamples each party's shard to exactly
+    ``samples_per_party`` rows (seeded; with replacement only when the
+    shard is smaller) so the result stacks into the rectangular
+    ``(n_parties, samples_per_party, ...)`` arrays
+    :class:`~repro.runtime.population.PartyPopulation` wants.  Pure
+    function of ``(dataset, n_parties, alpha, samples_per_party, seed)``.
+    """
+    from repro.data.partition import dirichlet_partition
+
+    cids = sorted(dataset.clients)
+    xs = np.concatenate([dataset.clients[c].x_train for c in cids])
+    ys = np.concatenate([dataset.clients[c].y_train for c in cids])
+    parts = dirichlet_partition(ys, n_parties, alpha=alpha, seed=seed)
+    rng = np.random.default_rng(seed + 1)
+    n = samples_per_party
+    x_out = np.zeros((n_parties, n) + xs.shape[1:], xs.dtype)
+    y_out = np.zeros((n_parties, n), np.int32)
+    for i, pid in enumerate(sorted(parts)):
+        idx = parts[pid]
+        if idx.size == 0:  # extreme skew: fall back to a uniform draw
+            idx = np.arange(len(ys))
+        take = rng.choice(idx, size=n, replace=idx.size < n)
+        x_out[i] = xs[take]
+        y_out[i] = ys[take]
+    return x_out, y_out
+
+
+def build_federated_cohorts(dataset, n_parties: int, *, alpha: float = 0.5,
+                            samples_per_party: int = 64,
+                            mlp_frac: float = 0.5, lr: float = 0.1,
+                            batch_size: int = 16, seed: int = 0,
+                            max_eval_per_client: int = 20):
+    """Heterogeneous LR/MLP cohorts trained on real federated shards.
+
+    Returns ``(cohorts, eval_x, eval_y)`` ready for
+    :func:`~repro.runtime.exchange.run_exchange`: the party axis is split
+    ``(1 - mlp_frac)`` LR / ``mlp_frac`` MLP (same feature and logit
+    spaces, different parameterizations — the paper's cross-architecture
+    exchange), each party training on its own Dirichlet-skewed shard of
+    ``dataset``; the eval set is the dataset's merged test split
+    (flattened features, shared by every party and the verify-on-fetch
+    hook).  ``eval_y`` is returned as a mutable int array so
+    :func:`apply_concept_drift` can shift it in place mid-run.
+    """
+    from repro.models.small import make_lr, make_mlp
+    from repro.runtime.population import PartyPopulation
+
+    x, y = federated_party_shards(dataset, n_parties, alpha=alpha,
+                                  samples_per_party=samples_per_party,
+                                  seed=seed)
+    x = x.reshape(x.shape[0], x.shape[1], -1).astype(np.float32)
+    feat = x.shape[-1]
+    n_mlp = int(n_parties * mlp_frac)
+    n_lr = n_parties - n_mlp
+    ids = [f"party{i:05d}" for i in range(n_parties)]
+    cohorts = []
+    if n_lr:
+        cohorts.append(PartyPopulation(
+            make_lr(num_features=feat, num_classes=dataset.num_classes),
+            x[:n_lr], y[:n_lr], task=dataset.name, lr=lr,
+            batch_size=batch_size, seed=seed, party_ids=ids[:n_lr]))
+    if n_mlp:
+        cohorts.append(PartyPopulation(
+            make_mlp(num_features=feat, num_classes=dataset.num_classes),
+            x[n_lr:], y[n_lr:], task=dataset.name, lr=lr,
+            batch_size=batch_size, seed=seed + 1, party_ids=ids[n_lr:]))
+    ex, ey = dataset.merged_test(max_per_client=max_eval_per_client)
+    eval_x = np.asarray(ex).reshape(len(ex), -1).astype(np.float32)
+    eval_y = np.asarray(ey).astype(np.int32)
+    return cohorts, eval_x, eval_y
+
+
+def label_shift_map(num_classes: int, severity: float = 1.0,
+                    seed: int = 0) -> np.ndarray:
+    """A seeded label permutation modelling one concept-drift step.
+
+    Picks ``max(2, round(severity * num_classes))`` classes (seeded,
+    without replacement) and rotates their labels cyclically; every other
+    class keeps its meaning.  ``severity=1.0`` permutes every class;
+    ``severity=0.0`` still moves two (a drift event that moves nothing
+    is not a drift).  Returns an int mapping array of length
+    ``num_classes`` for :func:`apply_concept_drift` /
+    :meth:`~repro.runtime.population.PartyPopulation.remap_labels`.
+    """
+    severity = min(max(float(severity), 0.0), 1.0)
+    k = max(2, int(round(num_classes * severity)))
+    k = min(k, num_classes)
+    rng = np.random.default_rng(seed)
+    chosen = np.sort(rng.choice(num_classes, size=k, replace=False))
+    mapping = np.arange(num_classes)
+    mapping[chosen] = np.roll(chosen, -1)
+    return mapping
+
+
+def apply_concept_drift(cohorts: Sequence, eval_y: np.ndarray,
+                        mapping: np.ndarray) -> int:
+    """Shift the world's labels in place: cohorts + shared eval set.
+
+    Applies ``mapping`` (from :func:`label_shift_map`) to every cohort's
+    training labels via
+    :meth:`~repro.runtime.population.PartyPopulation.remap_labels` and to
+    ``eval_y`` *in place* — exchange actors and the verify-on-fetch hook
+    hold references to the same array, so the drifted ground truth is
+    visible everywhere at once.  Returns the number of drifted parties.
+    """
+    mapping = np.asarray(mapping)
+    drifted = 0
+    for pop in cohorts:
+        drifted += pop.remap_labels(mapping)
+    eval_y[:] = mapping[eval_y].astype(eval_y.dtype)
+    return drifted
+
+
+def isolated_baseline_accuracy(cohorts: Sequence, eval_x, eval_y,
+                               *, cycles: int,
+                               local_epochs: int = 1) -> List[np.ndarray]:
+    """Per-cycle mean accuracies of *isolated* training (no exchange).
+
+    The paper's baseline arm: every party trains alone on its own shard
+    for the same number of cycles/epochs the exchange arm gets, with no
+    discovery, no distillation, no market.  Returns one per-party
+    accuracy array per cycle, measured on the (possibly drifting —
+    callers mutate ``eval_y`` between cycles) shared eval set.
+    """
+    out = []
+    for _ in range(cycles):
+        for pop in cohorts:
+            pop.train_epochs(local_epochs)
+        accs = np.concatenate([pop.evaluate(eval_x, eval_y)
+                               for pop in cohorts])
+        out.append(accs)
+    return out

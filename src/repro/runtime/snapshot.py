@@ -28,8 +28,8 @@ prove this against the PR-4 golden-trace machinery):
   in-flight requests report through ``restore_world``'s
   ``serving_on_complete`` callback),
 * the :class:`~repro.runtime.loop.EventLoop` frontier — pending events
-  whose payloads are *durable* (self-describing: the membership and
-  serving events) are persisted with their original sequence numbers
+  whose payloads are *durable* (self-describing: the membership,
+  serving, and scenario events) are persisted with their original sequence numbers
   and rescheduled on restore; a snapshot with non-durable in-flight
   closures is refused (:class:`SnapshotError`) — snapshot at a cycle
   barrier instead,
@@ -95,7 +95,10 @@ def _vault_manifest(vault: ModelVault, pool: Dict[str, bytes]) -> List[Dict]:
 def _discovery_manifest(svc) -> Dict:
     return {"cards": [[card.to_json(), vault_id]
                       for card, vault_id in svc.entries()],
-            "stats": dict(svc.stats)}
+            "stats": dict(svc.stats),
+            # accumulated drift-staleness score penalties (see
+            # DiscoveryService.restale); absent in pre-drift archives
+            "stale": {mid: svc._stale[mid] for mid in sorted(svc._stale)}}
 
 
 def _pending_manifest(e) -> Dict:
@@ -177,6 +180,7 @@ def _ledger_manifest(ledger: IncentiveLedger) -> Dict:
                      for name, entry in ledger.accounts.items()],
         "minted": ledger.minted,
         "flagged": sorted(ledger.flagged),
+        "demoted": sorted(ledger.demoted),
         "operators": sorted(ledger.operators),
     }
 
@@ -280,10 +284,14 @@ def snapshot_world(cont: Continuum, cohorts: Sequence = (),
         "members": sorted(cont.members),
         "retired": sorted(cont.retired),
         "membership_refusals": cont.membership_refusals,
+        "retired_tasks": sorted(cont.retired_tasks),
+        "task_refusals": cont.task_refusals,
         "faults": (cont.faults.to_dict()
                    if cont.faults is not None else None),
         "serving": (_serving_manifest(cont.serving, pool)
                     if cont.serving is not None else None),
+        "scenario": ({"stats": dict(cont.scenario.stats)}
+                     if cont.scenario is not None else None),
         "cohorts": cohort_meta,
         "extra": extra or {},
     }
@@ -355,6 +363,7 @@ def _restore_ledger(m: Dict) -> IncentiveLedger:
         ledger.accounts[name] = LedgerEntry(**fields)
     ledger.minted = m["minted"]
     ledger.flagged = set(m["flagged"])
+    ledger.demoted = set(m.get("demoted", []))  # pre-drift archives: empty
     return ledger
 
 
@@ -373,6 +382,7 @@ def _restore_discovery(svc, m: Dict) -> None:
     for card_json, vault_id in m["cards"]:
         svc.register(ModelCard.from_json(card_json), vault_id)
     svc.stats = dict(m["stats"])
+    svc._stale.update(m.get("stale", {}))  # pre-drift archives: empty
 
 
 def _restore_pending(tier, pm: Dict):
@@ -574,15 +584,29 @@ def restore_world(data: bytes, *, verifier=None, cohorts: Sequence = (),
     cont.members = set(m["members"])
     cont.retired = set(m["retired"])
     cont.membership_refusals = m["membership_refusals"]
+    cont.retired_tasks = set(m.get("retired_tasks", []))
+    cont.task_refusals = m.get("task_refusals", 0)
 
     if m.get("serving"):
         _restore_serving(cont, m["serving"], pool, serving_on_complete)
+
+    if m.get("scenario"):
+        from repro.runtime.scenario import ScenarioEngine
+
+        engine = ScenarioEngine(cont)  # registers itself on cont.scenario
+        engine.stats.update(m["scenario"]["stats"])
 
     loop.restore_progress(m["loop"]["seq"], m["loop"]["events_processed"])
     for t, seq, label, payload in m["frontier"]:
         kind = payload.get("durable")
         if kind == "membership":
             fn = (lambda now, p=payload: cont.membership_handler(p))
+        elif kind == "scenario":
+            if cont.scenario is None:
+                from repro.runtime.scenario import ScenarioEngine
+
+                ScenarioEngine(cont)
+            fn = (lambda now, p=payload: cont.scenario.handle(p))
         elif kind == "serving":
             if cont.serving is None:
                 raise SnapshotError(

@@ -384,6 +384,141 @@ def test_ledger_conservation_with_region_fee_splits(ops, refund_mask, regions):
         assert led.accounts[opname].mint_earned == 0.0
 
 
+# -- scenario dynamics: conservation + determinism under drift -----------------
+
+_drift_ops = st.lists(
+    st.one_of(
+        st.tuples(st.just("publish"), _ledger_parties, st.floats(0, 1)),
+        st.tuples(st.just("fetch"), _ledger_parties, _ledger_parties),
+        st.tuples(st.just("fraud"), _ledger_parties, st.just(None)),
+        st.tuples(st.just("demote"), _ledger_parties, st.just(None)),
+        st.tuples(st.just("promote"), _ledger_parties, st.just(None)),
+        st.tuples(st.just("retire"), _ledger_parties, _ledger_parties),
+    ),
+    min_size=1,
+    max_size=40,
+)
+
+
+@given(ops=_drift_ops)
+@settings(**SETTINGS)
+def test_ledger_conservation_under_drift_demotion_and_retirement(ops):
+    """sum(balances) == minted through any interleaving of publishes,
+    fetches, fraud slashings, staleness demotions/promotions, and
+    retirements — demotion must never move a balance, only gate minting."""
+    from repro.core.incentives import IncentiveLedger
+
+    led = IncentiveLedger()
+    retired = set()
+    for op, x, y in ops:
+        if op == "publish":
+            minted_before = led.minted
+            led.on_publish(x, y)
+            if x in led.demoted or x in led.flagged:
+                assert led.minted == minted_before  # gated, no mint
+        elif op == "fetch" and x != y:
+            if led.can_fetch(x):
+                led.on_fetch(x, y)
+            else:
+                led.on_denied(x)
+        elif op == "fraud":
+            led.on_fraud(x)
+        elif op == "demote":
+            total = led.minted
+            led.demote(x)
+            assert led.minted == total and x not in led.flagged
+        elif op == "promote":
+            led.promote(x)
+            assert x not in led.demoted
+        elif op == "retire" and x != y and x not in retired:
+            led.on_retire(x, y)
+            retired.add(x)
+        led.assert_conserved()
+
+
+@given(plan_kw=_hier_plans)
+@settings(max_examples=10, deadline=None)
+def test_drift_scenario_conserves_ledger_under_random_fault_plans(plan_kw):
+    """The drift microworld restales, demotes, retires a task, and refuses
+    publishes into it under the plan; the scenario itself asserts
+    conservation and that its counters match the continuum's."""
+    from repro.runtime.faults import FaultPlan
+    from repro.runtime.trace import run_scenario
+
+    plan = FaultPlan(**plan_kw)
+    blob = run_scenario("drift_microworld", plan, parties=8, cycles=3)
+    assert blob  # events actually fired
+
+
+@given(plan_kw=_hier_plans)
+@settings(max_examples=10, deadline=None)
+def test_drift_scenario_deterministic_under_random_fault_plans(plan_kw):
+    """Same seed + same plan => byte-identical drift event trace."""
+    from repro.runtime.faults import FaultPlan
+    from repro.runtime.trace import run_scenario
+
+    plan = FaultPlan(**plan_kw)
+    a = run_scenario("drift_microworld", plan, parties=8, cycles=3)
+    b = run_scenario("drift_microworld", plan, parties=8, cycles=3)
+    assert a == b
+
+
+# -- Dirichlet partition: exactly-once assignment, alpha -> inf is IID ---------
+
+
+@given(
+    seed=st.integers(0, 2**16),
+    num_clients=st.integers(1, 8),
+    num_classes=st.integers(2, 6),
+    n=st.integers(10, 300),
+    alpha=st.sampled_from([0.05, 0.5, 5.0, 1e6]),
+)
+@settings(**SETTINGS)
+def test_dirichlet_partition_assigns_every_sample_exactly_once(
+        seed, num_clients, num_classes, n, alpha):
+    from repro.data.partition import dirichlet_partition
+
+    rng = np.random.RandomState(seed)
+    y = rng.randint(0, num_classes, size=n)
+    parts = dirichlet_partition(y, num_clients, alpha=alpha, seed=seed)
+    assert len(parts) == num_clients
+    all_idx = np.concatenate([np.asarray(v, np.int64)
+                              for v in parts.values()])
+    # a partition: every sample index appears exactly once
+    np.testing.assert_array_equal(np.sort(all_idx), np.arange(n))
+    # determinism under the seed
+    again = dirichlet_partition(y, num_clients, alpha=alpha, seed=seed)
+    for cid in parts:
+        np.testing.assert_array_equal(parts[cid], again[cid])
+
+
+@given(seed=st.integers(0, 2**16))
+@settings(max_examples=10, deadline=None)
+def test_dirichlet_alpha_to_infinity_approaches_iid(seed):
+    """As alpha -> inf the per-client class mix converges to the global
+    mix (IID); at tiny alpha it is far from it (label skew)."""
+    from repro.data.partition import dirichlet_partition
+
+    rng = np.random.RandomState(seed)
+    num_classes, per_class, clients = 4, 400, 4
+    y = rng.permutation(np.repeat(np.arange(num_classes), per_class))
+    global_mix = np.full(num_classes, 1.0 / num_classes)
+
+    def max_dev(alpha):
+        parts = dirichlet_partition(y, clients, alpha=alpha, seed=seed)
+        devs = []
+        for idx in parts.values():
+            if len(idx) == 0:
+                continue
+            mix = np.bincount(y[idx], minlength=num_classes) / len(idx)
+            devs.append(np.abs(mix - global_mix).max())
+        return max(devs)
+
+    assert max_dev(1e6) < 0.05  # near-IID
+    # heavy skew at tiny alpha: some client's mix is far from global
+    assert max_dev(0.01) > 0.2
+
+
 # -- optimizer: adamw decreases a convex quadratic -----------------------------
 
 

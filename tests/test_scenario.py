@@ -1,0 +1,333 @@
+"""Scenario dynamics: concept drift, staleness-aware discovery, task
+lifecycle, and the drift_microworld golden trace.
+
+The claims under test are the paper's non-stationary ones: when the data
+a task's models were trained on drifts, the cards indexed for that task
+must *lose* discovery rank against fresh models (staleness-decayed index
+scoring), their demoted owners must stop minting publish rewards without
+breaking ledger conservation, and a retired task must refuse publishes
+and miss queries — all as durable, replayable events.
+"""
+import json
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.core.continuum import Continuum, OutcomeStatus
+from repro.core.discovery import ModelQuery
+from repro.core.incentives import IncentiveLedger
+from repro.core.vault import ModelCard
+from repro.runtime.faults import FaultPlan
+from repro.runtime.scenario import (ScenarioEngine, apply_concept_drift,
+                                    build_federated_cohorts,
+                                    federated_party_shards, label_shift_map)
+from repro.runtime.topology import build_hierarchical_continuum
+from repro.runtime.trace import (TraceRecording, assert_replay, record,
+                                 trace_digest)
+
+GOLDEN = pathlib.Path(__file__).parent / "golden" / "drift_microworld.json"
+
+
+def _flat_world():
+    cont = Continuum(ledger=IncentiveLedger(), faults=FaultPlan(seed=0))
+    for e in range(2):
+        cont.add_edge_server(f"edge{e:02d}")
+    ScenarioEngine(cont)
+    return cont
+
+
+def _hier_world():
+    cont = build_hierarchical_continuum(3, 2, ledger=IncentiveLedger(),
+                                        faults=FaultPlan(seed=0))
+    ScenarioEngine(cont)
+    return cont
+
+
+def _publish(cont, pid, acc=0.8, mid=None, task="t"):
+    card = ModelCard(model_id=mid or f"{pid}/m", task=task, arch="toy",
+                     owner=pid, num_params=3,
+                     metrics={"accuracy": acc, "per_class": {}})
+    return cont.publish(pid, {"w": np.ones(3, np.float32)}, card)
+
+
+# -- golden trace -------------------------------------------------------------
+
+def test_golden_drift_trace_replays_byte_identical():
+    """The checked-in drift trace pins the whole scenario layer: drift
+    scheduling, restaling, demotion, task retirement refusals, and the
+    fee/refund bookkeeping around them.  Any behavioural change shows up
+    as a byte diff against the fixture."""
+    rec = TraceRecording.load(GOLDEN)
+    assert rec.digest == trace_digest(rec.trace.encode())
+    ops = {json.loads(line)["p"]["op"]
+           for line in rec.trace.splitlines()
+           if json.loads(line)["p"] is not None}
+    # the fixture exercises the scenario plane, both task markets, and
+    # the retired-task publish gate
+    assert {"drift", "retire_task", "publish", "fetch",
+            "publish_task_retired"} <= ops
+    assert_replay(rec)
+
+
+def test_drift_microworld_end_state_under_fixture_plan():
+    """Under the golden plan the microworld demonstrably restales, demotes,
+    and refuses: stale cards carry penalties, demoted owners are gated,
+    publishes into the retired task were refused — with conservation."""
+    from repro.runtime.trace import (build_drift_world, durable_cycle_len,
+                                     run_drift_cycle, schedule_drift_cycle)
+
+    rec = TraceRecording.load(GOLDEN)
+    plan = FaultPlan.from_dict(dict(rec.plan))
+    clen = durable_cycle_len(12)
+    cont = build_drift_world(plan)
+    for c in range(3):
+        schedule_drift_cycle(cont, plan, 12, c, 3, clen)
+        if c == 2:
+            # just past the final boundary drift (t = 2*clen + 0.3) but
+            # before cycle-2 republishes: the re-ranked cards carry live
+            # staleness penalties (a fresh register() clears its own)
+            cont.loop.run_until(c * clen + 0.5)
+            assert cont.discovery._stale
+        run_drift_cycle(cont, c, clen)
+    cont.loop.run_to_quiescence()
+    stats = cont.scenario.stats
+    assert stats["drifts"] == 2 and stats["retired_tasks"] == 1
+    assert stats["restaled"] > 0
+    assert stats["demoted"] == len(cont.ledger.demoted) > 0
+    assert cont.task_refusals > 0
+    # every demoted owner's models stopped minting but kept publishing
+    for owner in cont.ledger.demoted:
+        assert cont.ledger.accounts[owner].published > 0
+    cont.ledger.assert_conserved()
+
+
+def test_drift_microworld_rerecords_identically():
+    """Recording the scenario twice from the same plan is byte-stable
+    (no hidden wall-clock or RNG state in the scenario layer)."""
+    plan = FaultPlan(seed=3, drop_prob=0.05, churn=0.1)
+    a = record("drift_microworld", plan, parties=8, cycles=3)
+    b = record("drift_microworld", plan, parties=8, cycles=3)
+    assert a.digest == b.digest
+
+
+# -- staleness-aware discovery ------------------------------------------------
+
+def test_stale_card_loses_rank_to_equally_accurate_fresh_card():
+    """After drift, a restaled card must rank *below* a fresh card with
+    the same listed accuracy — the staleness penalty, not just the decayed
+    accuracy, demotes it."""
+    cont = _flat_world()
+    _publish(cont, "alice", acc=0.8, mid="m_stale")
+    cont.loop.run_to_quiescence()
+
+    cont.scenario.schedule_drift("t", severity=0.5, delay=1.0)
+    cont.loop.run_to_quiescence()
+    # stale card now listed at 0.4 with a 0.5 penalty
+    listed = {c.model_id: c.metrics["accuracy"]
+              for c, _ in cont.discovery.entries()}
+    assert listed["m_stale"] == pytest.approx(0.4)
+
+    _publish(cont, "bob", acc=0.4, mid="m_fresh")
+    cont.loop.run_to_quiescence()
+    res = cont.discovery.query(ModelQuery(task="t"), top_k=2)
+    assert [r.card.model_id for r in res] == ["m_fresh", "m_stale"]
+    assert res[0].score > res[1].score
+
+
+def test_fresh_republish_clears_staleness_penalty():
+    """Republishing a new version is a fresh measurement: the penalty is
+    cleared and the model competes on its new accuracy alone."""
+    cont = _flat_world()
+    _publish(cont, "alice", acc=0.8, mid="m1")
+    cont.loop.run_to_quiescence()
+    cont.scenario.schedule_drift("t", severity=0.5, delay=1.0)
+    cont.loop.run_to_quiescence()
+    assert cont.discovery._stale["m1"] == pytest.approx(0.5)
+
+    _publish(cont, "alice", acc=0.7, mid="m1")  # version 2: retrained
+    cont.loop.run_to_quiescence()
+    assert "m1" not in cont.discovery._stale
+    res = cont.discovery.query(ModelQuery(task="t"), top_k=1)
+    assert res[0].card.metrics["accuracy"] == pytest.approx(0.7)
+
+
+def test_staleness_accumulates_across_drifts():
+    cont = _flat_world()
+    _publish(cont, "alice", acc=0.9, mid="m1")
+    cont.loop.run_to_quiescence()
+    cont.scenario.schedule_drift("t", severity=0.2, delay=1.0)
+    cont.scenario.schedule_drift("t", severity=0.1, delay=2.0)
+    cont.loop.run_to_quiescence()
+    assert cont.discovery._stale["m1"] == pytest.approx(0.3)
+    # accuracy decayed multiplicatively through both events
+    (card, _vid), = cont.discovery.entries()
+    assert card.metrics["accuracy"] == pytest.approx(0.9 * 0.8 * 0.9)
+
+
+def test_region_shards_restale_with_the_cloud_index():
+    """Drift must demote stale cards in *region-local* ranking too, or
+    region-first discovery would keep serving them."""
+    cont = _hier_world()
+    pid = "edge:rg000:00"
+    _publish(cont, pid, acc=0.8, mid="m1")
+    cont.loop.run_to_quiescence()
+    shard = cont.topology.regions["rg000"].shard
+    assert shard.entries()[0][0].metrics["accuracy"] == pytest.approx(0.8)
+    cont.scenario.schedule_drift("t", severity=0.5, delay=1.0)
+    cont.loop.run_to_quiescence()
+    assert shard.entries()[0][0].metrics["accuracy"] == pytest.approx(0.4)
+    assert shard._stale["m1"] == pytest.approx(0.5)
+
+
+# -- demotion gates minting ---------------------------------------------------
+
+def test_drift_demotes_owners_below_threshold_and_gates_minting():
+    cont = _flat_world()
+    _publish(cont, "alice", acc=0.4, mid="mA")   # decays to 0.2 < 0.3
+    _publish(cont, "bob", acc=0.9, mid="mB")     # decays to 0.45 >= 0.3
+    cont.loop.run_to_quiescence()
+    cont.scenario.schedule_drift("t", severity=0.5, delay=1.0,
+                                 demote_below=0.3)
+    cont.loop.run_to_quiescence()
+    assert cont.ledger.demoted == {"alice"}
+    assert cont.scenario.stats["demoted"] == 1
+
+    minted_before = cont.ledger.minted
+    published_before = cont.ledger.accounts["alice"].published
+    _publish(cont, "alice", acc=0.95, mid="mA2")
+    cont.loop.run_to_quiescence()
+    # the publish landed (counted, indexed) but minted nothing
+    assert cont.ledger.accounts["alice"].published == published_before + 1
+    assert cont.ledger.minted == minted_before
+    cont.ledger.assert_conserved()
+
+    # promotion lifts the gate: the next publish mints again
+    cont.ledger.promote("alice")
+    _publish(cont, "alice", acc=0.95, mid="mA3")
+    cont.loop.run_to_quiescence()
+    assert cont.ledger.minted > minted_before
+    cont.ledger.assert_conserved()
+
+
+def test_demotion_is_not_a_flag_and_conserves():
+    """Demotion must not burn, escrow, or flag — distribution() accounting
+    and conservation stay intact."""
+    ledger = IncentiveLedger()
+    ledger.on_publish("p1", accuracy=0.9)
+    minted, balance = ledger.minted, ledger.balance("p1")
+    ledger.demote("p1")
+    assert "p1" not in ledger.flagged
+    assert (ledger.minted, ledger.balance("p1")) == (minted, balance)
+    assert ledger.distribution()["demoted"] == 1
+    ledger.assert_conserved()
+    ledger.promote("p1")
+    assert ledger.distribution()["demoted"] == 0
+
+
+# -- task lifecycle -----------------------------------------------------------
+
+def test_retired_task_refuses_publishes_and_misses_queries():
+    cont = _flat_world()
+    _publish(cont, "alice", acc=0.8, mid="m1")
+    cont.loop.run_to_quiescence()
+    cont.scenario.schedule_task_retirement("t", delay=1.0)
+    cont.loop.run_to_quiescence()
+    assert "t" in cont.retired_tasks
+    assert cont.discovery.entries() == []
+
+    outcomes = []
+    card = ModelCard(model_id="m2", task="t", arch="toy", owner="bob",
+                     num_params=3, metrics={"accuracy": 0.9, "per_class": {}})
+    cont.publish_async("bob", {"w": np.ones(3, np.float32)}, card,
+                       on_complete=outcomes.append)
+    cont.discover_and_fetch_async(ModelQuery(task="t"), requester="carol",
+                                  on_complete=outcomes.append)
+    cont.loop.run_to_quiescence()
+    statuses = {o.status for o in outcomes}
+    assert statuses == {OutcomeStatus.REFUSED, OutcomeStatus.MISS}
+    refused, = [o for o in outcomes if o.status is OutcomeStatus.REFUSED]
+    assert refused.reason == "task_retired"
+    assert cont.task_refusals == 1
+    # the refused publish earned bob nothing (the publish never landed)
+    assert ("bob" not in cont.ledger.accounts
+            or cont.ledger.accounts["bob"].mint_earned == 0.0)
+    cont.ledger.assert_conserved()
+
+    # arrival re-opens the task: publishes land and mint again
+    cont.scenario.schedule_task_arrival("t", delay=1.0)
+    cont.loop.run_to_quiescence()
+    assert "t" not in cont.retired_tasks
+    _publish(cont, "bob", acc=0.9, mid="m2")
+    cont.loop.run_to_quiescence()
+    assert cont.ledger.accounts["bob"].mint_earned > 0.0
+    cont.ledger.assert_conserved()
+
+
+def test_retire_task_empties_region_shards_too():
+    cont = _hier_world()
+    _publish(cont, "edge:rg000:00", acc=0.8, mid="m1")
+    _publish(cont, "edge:rg001:00", acc=0.7, mid="m2", task="other")
+    cont.loop.run_to_quiescence()
+    cont.scenario.schedule_task_retirement("t", delay=1.0)
+    cont.loop.run_to_quiescence()
+    for rid in cont.topology.regions:
+        shard = cont.topology.regions[rid].shard
+        assert all(c.task != "t" for c, _ in shard.entries())
+    # the other task is untouched
+    assert [c.model_id for c, _ in cont.discovery.entries()] == ["m2"]
+
+
+def test_scenario_engine_rejects_unknown_op():
+    cont = _flat_world()
+    with pytest.raises(ValueError):
+        cont.scenario.handle({"op": "meteor_strike", "durable": "scenario"})
+
+
+# -- concept drift over real federated cohorts --------------------------------
+
+def test_label_shift_map_is_a_seeded_permutation():
+    m = label_shift_map(10, severity=0.5, seed=4)
+    assert sorted(m) == list(range(10))          # a permutation
+    assert not np.array_equal(m, np.arange(10))  # that actually moves labels
+    assert np.array_equal(m, label_shift_map(10, severity=0.5, seed=4))
+    assert not np.array_equal(m, label_shift_map(10, severity=0.5, seed=5))
+    # full severity moves (almost) everything, zero severity still moves 2
+    assert (label_shift_map(10, 0.0, seed=0) != np.arange(10)).sum() == 2
+
+
+def test_apply_concept_drift_shifts_cohorts_and_eval_in_place():
+    from repro.data.federated_datasets import make_lr_synthetic
+
+    ds = make_lr_synthetic(num_clients=6, num_features=12, num_classes=5,
+                           seed=0, min_samples=30, max_samples=60)
+    cohorts, ex, ey = build_federated_cohorts(ds, 4, samples_per_party=24,
+                                              seed=0)
+    ey_ref = ey  # the reference exchange actors / verifiers would hold
+    y0 = [pop.y.copy() for pop in cohorts]
+    mapping = label_shift_map(5, severity=1.0, seed=1)
+    drifted = apply_concept_drift(cohorts, ey, mapping)
+    assert drifted == 4
+    for pop, before in zip(cohorts, y0):
+        assert np.array_equal(pop.y, mapping[before])
+        # device copy refreshed: evaluate() consumes the drifted labels
+        acc_dev = pop.evaluate(ex, ey)
+        assert acc_dev.shape == (pop.num_parties,)
+    # eval shifted through the SAME array object (in-place)
+    assert ey_ref is ey and np.array_equal(ey_ref, ey)
+
+
+def test_federated_shards_are_rectangular_deterministic_and_skewed():
+    from repro.data.federated_datasets import make_lr_synthetic
+
+    ds = make_lr_synthetic(num_clients=8, num_features=10, num_classes=6,
+                           seed=0, min_samples=40, max_samples=80)
+    x1, y1 = federated_party_shards(ds, 5, alpha=0.1, samples_per_party=32,
+                                    seed=3)
+    x2, y2 = federated_party_shards(ds, 5, alpha=0.1, samples_per_party=32,
+                                    seed=3)
+    assert x1.shape == (5, 32, 10) and y1.shape == (5, 32)
+    assert np.array_equal(x1, x2) and np.array_equal(y1, y2)
+    # low alpha = strong label skew: parties' class mixes differ sharply
+    hists = np.stack([np.bincount(y, minlength=6) for y in y1])
+    assert (hists.max(axis=1) > 0.5 * y1.shape[1]).any()

@@ -19,10 +19,11 @@ from repro.runtime.faults import FaultPlan
 from repro.runtime.snapshot import (SnapshotError, restore_world,
                                     snapshot_manifest, snapshot_world)
 from repro.runtime.topology import build_hierarchical_continuum
-from repro.runtime.trace import (TraceRecording, build_durable_world,
-                                 durable_cycle_len, durable_verifier,
-                                 run_durable_cycle, schedule_durable_cycle,
-                                 serialize_trace)
+from repro.runtime.trace import (TraceRecording, build_drift_world,
+                                 build_durable_world, durable_cycle_len,
+                                 durable_verifier, run_drift_cycle,
+                                 run_durable_cycle, schedule_drift_cycle,
+                                 schedule_durable_cycle, serialize_trace)
 
 GOLDEN = pathlib.Path(__file__).parent / "golden" / "durable_world.json"
 
@@ -488,3 +489,62 @@ def test_serving_restore_rebinds_on_complete():
     back.loop.run_to_quiescence()
     assert outs and all(isinstance(o, Outcome) for o in outs)
     assert any(o.ok for o in outs)
+
+
+# -- scenario dynamics (drift) across snapshots -------------------------------
+
+DRIFT_GOLDEN = pathlib.Path(__file__).parent / "golden" / "drift_microworld.json"
+
+
+def _drift_world_at_barrier(barrier, parties=12, cycles=3):
+    """The drift fixture's world run to ``barrier``, scenario events pending."""
+    rec = TraceRecording.load(DRIFT_GOLDEN)
+    plan = FaultPlan.from_dict(dict(rec.plan))
+    clen = durable_cycle_len(parties)
+    cont = build_drift_world(plan)
+    for c in range(barrier):
+        schedule_drift_cycle(cont, plan, parties, c, cycles, clen)
+        run_drift_cycle(cont, c, clen)
+    return cont, rec, clen
+
+
+@pytest.mark.parametrize("barrier", [1, 2])
+def test_mid_drift_snapshot_restores_and_continues_byte_identically(barrier):
+    """A world snapshotted *mid-drift* — concept-drift (and, at barrier 2,
+    task-retirement) events pending on the frontier — restores in a fresh
+    continuum and finishes the run byte-identically to the golden trace."""
+    cont, rec, clen = _drift_world_at_barrier(barrier)
+    assert any(p is not None and p.get("durable") == "scenario"
+               for _t, _n, _l, p in cont.loop.frontier())
+    pre = serialize_trace(cont.loop.log)
+    snap = snapshot_world(cont)
+    del cont
+
+    back, _extra = restore_world(snap, verifier=durable_verifier)
+    assert back.scenario is not None  # engine auto-reattached
+    for c in range(barrier, 3):
+        schedule_drift_cycle(back, FaultPlan.from_dict(dict(rec.plan)), 12,
+                             c, 3, clen)
+        run_drift_cycle(back, c, clen)
+    back.loop.run_to_quiescence()
+    back.ledger.assert_conserved()
+    post = serialize_trace(back.loop.log)
+    assert (pre + post) == rec.trace.encode()
+
+
+def test_scenario_state_restores_identically():
+    """Engine stats, staleness penalties, demotions, and the retired-task
+    set all travel in the archive."""
+    cont, _rec, _clen = _drift_world_at_barrier(2)
+    back, _ = restore_world(snapshot_world(cont), verifier=durable_verifier)
+    assert back.scenario.stats == cont.scenario.stats
+    assert back.retired_tasks == cont.retired_tasks
+    assert back.task_refusals == cont.task_refusals
+    assert back.discovery._stale == cont.discovery._stale
+    for rid in cont.topology.regions:
+        assert (back.topology.regions[rid].shard._stale
+                == cont.topology.regions[rid].shard._stale)
+    assert back.ledger.demoted == cont.ledger.demoted
+    # the drift already fired by barrier 2 left visible staleness
+    assert cont.scenario.stats["drifts"] == 1
+    assert cont.discovery._stale
